@@ -1,0 +1,29 @@
+"""App. E — multitask scale: performance of the fused base model as the
+seen-task pool grows (4 -> 24 datasets)."""
+from benchmarks import common as C
+from repro.core import Repository, run_cold_fusion
+
+
+def run(rows: C.Rows):
+    k = C.KNOBS
+    cfg = C.repro_cfg()
+    suite = C.make_suite(36)
+    body0 = C.pretrained_body(cfg, suite)
+    ev = [C.make_eval_task(suite, t, n_train=256) for t in (30, 31)]  # fixed unseen evals
+    iters = max(3, k["iters"] // 2)
+    finals = {}
+    for pool in (4, 8, 16, 24):
+        contribs = [C.make_contributor(cfg, suite, t, n=k["n_train"] // 2, steps=k["steps"])
+                    for t in range(pool)]
+        repo = Repository(body0)
+        log, us = C.timed(
+            run_cold_fusion, cfg, repo, contribs, iterations=iters,
+            contributors_per_iter=min(4, pool), eval_unseen=ev, eval_every=iters,
+            eval_steps=k["eval_steps"], eval_lr=C.EVAL_LR,
+        )
+        finals[pool] = log.mean("unseen_finetuned")[-1]
+        rows.add(f"appE/pool{pool:02d}_unseen_ft", us, f"acc={finals[pool]:.4f}")
+    rows.add("appE/claim_high_regime_beats_low", 0.0,
+             f"pass={max(finals[16], finals[24]) >= max(finals[4], finals[8]) - 0.01} "
+             f"low={max(finals[4], finals[8]):.4f} high={max(finals[16], finals[24]):.4f}")
+    C.save_json("appE", finals)

@@ -1,0 +1,30 @@
+"""App. F — fixed number of examples per contributor (streaming-new-tasks
+simulation): accuracy should still increase monotonically-ish."""
+from benchmarks import common as C
+from repro.core import Repository, run_cold_fusion
+
+
+def run(rows: C.Rows):
+    k = C.KNOBS
+    cfg = C.repro_cfg()
+    suite = C.make_suite(36)
+    body0 = C.pretrained_body(cfg, suite)
+    # every contributor capped at the same small budget (paper: 5000)
+    contribs = [C.make_contributor(cfg, suite, t, n=512, steps=k["steps"] // 2)
+                for t in range(12)]
+    ev = [C.make_eval_task(suite, t, n_train=256) for t in (0, 1)]
+    iters = max(4, k["iters"] // 2)
+    repo = Repository(body0)
+    log, us = C.timed(
+        run_cold_fusion, cfg, repo, contribs, iterations=iters,
+        contributors_per_iter=4, eval_seen=ev, eval_every=max(1, iters // 3),
+        eval_steps=k["eval_steps"], eval_lr=C.EVAL_LR,
+    )
+    curve_ft = log.mean("seen_finetuned")
+    curve_fr = log.mean("seen_frozen")
+    rows.add("appF/fixed_examples_ft_curve", us, "curve=" + "|".join(f"{v:.4f}" for v in curve_ft))
+    rows.add("appF/fixed_examples_fr_curve", us, "curve=" + "|".join(f"{v:.4f}" for v in curve_fr))
+    # at this scale the finetuned eval saturates; the frozen (single-model)
+    # series carries the paper's "still increasing" signal
+    rows.add("appF/claim_increases_frozen", us,
+             f"pass={curve_fr[-1] > curve_fr[0]} first={curve_fr[0]:.4f} last={curve_fr[-1]:.4f}")

@@ -1,0 +1,45 @@
+"""Beyond-paper ablation: fusion-operator comparison inside the ColD loop.
+
+The paper fuses by uniform averaging (§3) and lists weighted / Fisher /
+damped fusion as future work (§8).  This benchmark runs the same 4-iteration
+loop with each operator and compares final base-model quality.
+"""
+from benchmarks import common as C
+from repro.core import Repository, run_cold_fusion
+
+
+def run(rows: C.Rows):
+    k = C.KNOBS
+    cfg = C.repro_cfg()
+    suite = C.make_suite(36)
+    body0 = C.pretrained_body(cfg, suite)
+    ev = [C.make_eval_task(suite, t, n_train=256) for t in (0, 1)]
+    iters = max(3, k["iters"] // 2)
+
+    ops = {
+        "average": dict(fusion_op="average"),
+        "damped0.5": dict(fusion_op="damped", fusion_kwargs={"alpha": 0.5}),
+        "ties": dict(fusion_op="ties", fusion_kwargs={"density": 0.3}),
+        "fisher": dict(fusion_op="fisher"),
+    }
+    finals = {}
+    for name, kwargs in ops.items():
+        contribs = [
+            C.make_contributor(cfg, suite, t, n=k["n_train"] // 2, steps=k["steps"])
+            for t in range(8)
+        ]
+        if name == "fisher":
+            for c in contribs:
+                c.with_fisher = True
+        repo = Repository(body0, **kwargs)
+        log, us = C.timed(
+            run_cold_fusion, cfg, repo, contribs, iterations=iters,
+            contributors_per_iter=4, eval_seen=ev, eval_every=iters,
+            eval_steps=k["eval_steps"], eval_lr=C.EVAL_LR,
+        )
+        finals[name] = log.mean("seen_finetuned")[-1]
+        rows.add(f"beyond/fusion_{name}_seen_ft", us, f"acc={finals[name]:.4f}")
+    best = max(finals, key=finals.get)
+    rows.add("beyond/fusion_best_op", 0.0,
+             f"best={best};" + ";".join(f"{k}={v:.4f}" for k, v in finals.items()))
+    C.save_json("beyond_fusion", finals)

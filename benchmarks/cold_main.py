@@ -1,0 +1,116 @@
+"""The main ColD Fusion run (paper §5.1/§5.2) — shared engine behind the
+Fig. 2 / Fig. 3 / Fig. 4 / Table 1 benchmarks.
+
+Runs the full loop on the synthetic suite with a seen/unseen split and all
+three baselines (pretrained, fused-once = Choshen'22b, standard multitask),
+then caches every series + model snapshot under benchmarks/_cache.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.checkpoint import io as ckpt
+from repro.core import Repository, evaluate_base_model, run_cold_fusion
+from repro.train.multitask import train_multitask
+
+CACHE_KEY = f"cold_main_{C.SCALE}"
+N_SEEN = 24  # tasks 0..23 seen; 24..35 unseen (one fold of the paper's 3)
+
+
+def _eval_both(cfg, body, tasks, eval_steps):
+    ft = evaluate_base_model(cfg, body, tasks, frozen=False, steps=eval_steps, lr=C.EVAL_LR)
+    fr = evaluate_base_model(cfg, body, tasks, frozen=True, steps=eval_steps, lr=C.EVAL_LR)
+    return C.mean_acc(ft), C.mean_acc(fr), ft, fr
+
+
+def run(force: bool = False) -> Dict:
+    os.makedirs(C.CACHE, exist_ok=True)
+    path = os.path.join(C.CACHE, CACHE_KEY + ".json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    k = C.KNOBS
+    cfg = C.repro_cfg()
+    suite = C.make_suite(36)
+    body0 = C.pretrained_body(cfg, suite)
+
+    seen_ids = list(range(0, N_SEEN))
+    unseen_ids = list(range(N_SEEN, 36))
+    eval_seen = [C.make_eval_task(suite, t, n_train=256) for t in seen_ids[: k["n_eval"]]]
+    eval_unseen = [C.make_eval_task(suite, t, n_train=256) for t in unseen_ids[: k["n_eval"]]]
+
+    out: Dict = {"scale": C.SCALE, "knobs": k}
+    t0 = time.time()
+
+    # --- baselines -------------------------------------------------------
+    pre_s_ft, pre_s_fr, pre_sft_per, _ = _eval_both(cfg, body0, eval_seen, k["eval_steps"])
+    pre_u_ft, pre_u_fr, pre_uft_per, _ = _eval_both(cfg, body0, eval_unseen, k["eval_steps"])
+    out["pretrained"] = {"seen_ft": pre_s_ft, "seen_fr": pre_s_fr,
+                         "unseen_ft": pre_u_ft, "unseen_fr": pre_u_fr,
+                         "seen_ft_per_task": pre_sft_per}
+
+    contribs = [C.make_contributor(cfg, suite, t, n=k["n_train"], steps=k["steps"])
+                for t in seen_ids]
+
+    # fused-once (Choshen et al. 2022b): ONE iteration with every contributor
+    repo1 = Repository(body0)
+    run_cold_fusion(cfg, repo1, contribs, iterations=1)
+    fused_body = repo1.download()
+    f_s_ft, f_s_fr, f_sft_per, _ = _eval_both(cfg, fused_body, eval_seen, k["eval_steps"])
+    f_u_ft, f_u_fr, *_ = _eval_both(cfg, fused_body, eval_unseen, k["eval_steps"])
+    out["fused_once"] = {"seen_ft": f_s_ft, "seen_fr": f_s_fr,
+                         "unseen_ft": f_u_ft, "unseen_fr": f_u_fr,
+                         "seen_ft_per_task": f_sft_per}
+
+    # standard multitask baseline (shared body, per-task heads)
+    mt_steps = k["iters"] * k["per_iter"] * k["steps"]
+    datasets = [(c.task_id, c.x, c.y, c.num_classes) for c in contribs]
+    mt_body, _ = train_multitask(cfg, body0, datasets, steps=mt_steps, lr=C.LR)
+    m_s_ft, m_s_fr, m_sft_per, _ = _eval_both(cfg, mt_body, eval_seen, k["eval_steps"])
+    m_u_ft, m_u_fr, *_ = _eval_both(cfg, mt_body, eval_unseen, k["eval_steps"])
+    out["multitask"] = {"seen_ft": m_s_ft, "seen_fr": m_s_fr,
+                        "unseen_ft": m_u_ft, "unseen_fr": m_u_fr,
+                        "seen_ft_per_task": m_sft_per}
+
+    # --- ColD Fusion -------------------------------------------------------
+    repo = Repository(body0, keep_history=True)
+    eval_every = max(1, k["iters"] // 4)
+    log = run_cold_fusion(
+        cfg, repo, contribs, iterations=k["iters"], contributors_per_iter=k["per_iter"],
+        eval_seen=eval_seen, eval_unseen=eval_unseen, eval_every=eval_every,
+        eval_steps=k["eval_steps"], eval_lr=C.EVAL_LR, progress=True,
+    )
+    out["cold"] = {
+        "eval_every": eval_every,
+        "seen_ft": log.mean("seen_finetuned"),
+        "seen_fr": log.mean("seen_frozen"),
+        "unseen_ft": log.mean("unseen_finetuned"),
+        "unseen_fr": log.mean("unseen_frozen"),
+        "seen_ft_per_task_final": {str(t): v for t, v in log.seen_finetuned[-1].items()},
+    }
+    out["wall_s"] = time.time() - t0
+
+    # snapshots for the few-shot benchmark (fig4)
+    ckpt.save(os.path.join(C.CACHE, CACHE_KEY + "_final_body.npz"), repo.download())
+    mid = max(0, repo.iteration // 2)
+    ckpt.save(os.path.join(C.CACHE, CACHE_KEY + "_mid_body.npz"), repo.snapshot(mid))
+
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    return out
+
+
+def load_body(which: str):
+    p = os.path.join(C.CACHE, f"{CACHE_KEY}_{which}_body.npz")
+    return ckpt.load(p)
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=2))

@@ -1,0 +1,110 @@
+"""Shared setup for the paper-reproduction benchmarks.
+
+Scale: the paper's grid (RoBERTa-base, 36 HF datasets, 4800 A100-hours) is
+reproduced at laptop scale — a 2-layer d=64 encoder over the synthetic
+36-task suite (DESIGN.md §6).  Claims are validated on *orderings and curve
+shapes*, not absolute accuracies.
+
+Env knobs:
+  REPRO_BENCH_SCALE=quick|std|full   (default std)
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from typing import Dict, List, Sequence
+
+import jax
+import numpy as np
+
+from repro.checkpoint import io as ckpt
+from repro.configs.roberta_base import TINY
+from repro.core import Contributor, EvalTask
+from repro.data.synthetic import SyntheticSuite
+from repro.models import encoder as E
+from repro.train.pretrain import pretrain_mlm
+
+SEQ = 24
+SCALE = os.environ.get("REPRO_BENCH_SCALE", "std")
+CACHE = os.path.join(os.path.dirname(__file__), "_cache")
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "bench")
+
+# experiment-scale knobs per mode
+KNOBS = {
+    #        iters contrib/it steps  eval_steps eval_tasks n_train
+    "quick": dict(iters=3, per_iter=4, steps=30, eval_steps=60, n_eval=2, n_train=1024),
+    "std":   dict(iters=8, per_iter=6, steps=50, eval_steps=100, n_eval=3, n_train=2048),
+    "full":  dict(iters=14, per_iter=8, steps=80, eval_steps=150, n_eval=5, n_train=3072),
+}[SCALE]
+
+LR = 2e-3
+EVAL_LR = 2e-3
+
+
+def repro_cfg():
+    return dataclasses.replace(
+        TINY, d_model=64, num_heads=2, num_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=256, max_seq_len=SEQ + 8,
+    )
+
+
+def make_suite(num_tasks: int = 36, seed: int = 0) -> SyntheticSuite:
+    return SyntheticSuite(vocab_size=256, num_tasks=num_tasks, seed=seed, noise=0.15)
+
+
+def pretrained_body(cfg, suite, *, steps: int = 300, seed: int = 0):
+    """MLM-pretrained body, cached on disk (the θ₀ of every experiment)."""
+    os.makedirs(CACHE, exist_ok=True)
+    path = os.path.join(CACHE, f"pretrained_s{seed}_{SCALE}.npz")
+    if os.path.exists(path):
+        return ckpt.load(path)
+    body, _ = pretrain_mlm(cfg, suite, steps=steps, seq_len=SEQ, seed=seed)
+    ckpt.save(path, body)
+    return body
+
+
+def make_contributor(cfg, suite, tid: int, *, n: int, steps: int, seed: int = 0) -> Contributor:
+    d = suite.dataset(tid, n, 64, SEQ)
+    return Contributor(
+        cfg, tid, suite.tasks[tid].num_classes, d["x_train"], d["y_train"],
+        steps=steps, batch_size=32, lr=LR, seed=seed * 131 + tid,
+    )
+
+
+def make_eval_task(suite, tid: int, *, n_train: int = 512, n_test: int = 384) -> EvalTask:
+    d = suite.dataset(tid, n_train, n_test, SEQ, split_seed=1)
+    return EvalTask(tid, suite.tasks[tid].num_classes,
+                    d["x_train"], d["y_train"], d["x_test"], d["y_test"])
+
+
+def mean_acc(scores: Dict[int, float]) -> float:
+    return float(np.mean(list(scores.values())))
+
+
+class Rows:
+    """CSV accumulator: name,us_per_call,derived."""
+
+    def __init__(self):
+        self.rows: List[str] = []
+
+    def add(self, name: str, us: float, derived: str):
+        self.rows.append(f"{name},{us:.1f},{derived}")
+
+    def emit(self):
+        for r in self.rows:
+            print(r)
+
+
+def timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return out, (time.time() - t0) * 1e6
+
+
+def save_json(name: str, payload):
+    import json
+
+    os.makedirs(ART, exist_ok=True)
+    with open(os.path.join(ART, name + ".json"), "w") as f:
+        json.dump(payload, f, indent=2)

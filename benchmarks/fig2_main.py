@@ -1,0 +1,25 @@
+"""Fig. 2 — ColD Fusion vs pretrained / fused-once / multitask baselines on
+seen tasks, both multitask goals (finetuned + linear probe)."""
+from benchmarks import cold_main
+from benchmarks import common as C
+
+
+def run(rows: C.Rows):
+    res, us = C.timed(cold_main.run)
+    cold = res["cold"]
+    pre, fused, mt = res["pretrained"], res["fused_once"], res["multitask"]
+    final_ft, final_fr = cold["seen_ft"][-1], cold["seen_fr"][-1]
+    rows.add("fig2/pretrained_seen_ft", us, f"acc={pre['seen_ft']:.4f}")
+    rows.add("fig2/fused_once_seen_ft", us, f"acc={fused['seen_ft']:.4f}")
+    rows.add("fig2/multitask_seen_ft", us, f"acc={mt['seen_ft']:.4f}")
+    rows.add("fig2/cold_seen_ft_final", us, f"acc={final_ft:.4f}")
+    rows.add("fig2/cold_seen_fr_final", us, f"acc={final_fr:.4f}")
+    rows.add("fig2/cold_seen_ft_curve", us, "curve=" + "|".join(f"{v:.4f}" for v in cold["seen_ft"]))
+    rows.add("fig2/cold_seen_fr_curve", us, "curve=" + "|".join(f"{v:.4f}" for v in cold["seen_fr"]))
+    # claims: C1 ColD beats pretrained (and ideally fused/multitask); C2 frozen close to ft
+    rows.add("fig2/claim_C1_cold_gt_pretrained", us,
+             f"pass={final_ft > pre['seen_ft']} delta={final_ft - pre['seen_ft']:+.4f}")
+    rows.add("fig2/claim_C1b_cold_ge_fused_once", us,
+             f"pass={final_ft >= fused['seen_ft'] - 0.005} delta={final_ft - fused['seen_ft']:+.4f}")
+    rows.add("fig2/claim_C2_frozen_improves", us,
+             f"pass={final_fr > pre['seen_fr']} delta={final_fr - pre['seen_fr']:+.4f}")

@@ -1,0 +1,27 @@
+"""Fig. 3 — seen vs unseen evaluation of the ColD base model (claim C3)."""
+from benchmarks import cold_main
+from benchmarks import common as C
+
+
+def run(rows: C.Rows):
+    res, us = C.timed(cold_main.run)
+    cold, pre = res["cold"], res["pretrained"]
+    u_ft, u_fr = cold["unseen_ft"][-1], cold["unseen_fr"][-1]
+    s_ft, s_fr = cold["seen_ft"][-1], cold["seen_fr"][-1]
+    rows.add("fig3/cold_unseen_ft_final", us, f"acc={u_ft:.4f}")
+    rows.add("fig3/cold_unseen_fr_final", us, f"acc={u_fr:.4f}")
+    rows.add("fig3/cold_unseen_ft_curve", us, "curve=" + "|".join(f"{v:.4f}" for v in cold["unseen_ft"]))
+    # C3a: unseen performance rises through iterations (paper Fig. 3's rising
+    # orange curve); the seen/unseen absolute gap is reported as data — the
+    # paper's near-equality rests on 3-fold pools of matched difficulty,
+    # which the mini-scale eval subsets don't guarantee.
+    curve = cold["unseen_ft"]
+    rows.add("fig3/claim_C3a_unseen_improves_over_iters", us,
+             f"pass={curve[-1] > curve[0]} first={curve[0]:.4f} last={curve[-1]:.4f}")
+    rows.add("fig3/seen_vs_unseen_gap", us, f"gap={s_ft - u_ft:+.4f}")
+    # C3b: unseen ft beats pretrained unseen ft (transfer to new tasks)
+    rows.add("fig3/claim_C3b_unseen_gt_pretrained", us,
+             f"pass={u_ft > pre['unseen_ft']} delta={u_ft - pre['unseen_ft']:+.4f}")
+    # C3c: frozen gap — seen-frozen should exceed unseen-frozen (body never saw unseen)
+    rows.add("fig3/claim_C3c_frozen_seen_gt_unseen", us,
+             f"pass={s_fr > u_fr} seen_fr={s_fr:.4f} unseen_fr={u_fr:.4f}")

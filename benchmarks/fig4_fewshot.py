@@ -1,0 +1,34 @@
+"""Fig. 4 — few-shot (100 examples) finetuning on unseen tasks (claim C4):
+the ColD base model's advantage grows when eval data is scarce."""
+from benchmarks import cold_main
+from benchmarks import common as C
+from repro.core import evaluate_base_model
+
+
+def run(rows: C.Rows):
+    res, _ = C.timed(cold_main.run)
+    cfg = C.repro_cfg()
+    suite = C.make_suite(36)
+    body_pre = C.pretrained_body(cfg, suite)
+    body_mid = cold_main.load_body("mid")
+    body_final = cold_main.load_body("final")
+    k = C.KNOBS
+    unseen = [C.make_eval_task(suite, t, n_train=256) for t in range(cold_main.N_SEEN, 36)][: k["n_eval"]]
+
+    def few(body):
+        return C.mean_acc(evaluate_base_model(
+            cfg, body, unseen, frozen=False, steps=max(40, k["eval_steps"] // 2),
+            lr=C.EVAL_LR, few_shot=100))
+
+    (a_pre, us1) = C.timed(few, body_pre)
+    (a_mid, us2) = C.timed(few, body_mid)
+    (a_fin, us3) = C.timed(few, body_final)
+    rows.add("fig4/pretrained_fewshot100", us1, f"acc={a_pre:.4f}")
+    rows.add("fig4/cold_mid_fewshot100", us2, f"acc={a_mid:.4f}")
+    rows.add("fig4/cold_final_fewshot100", us3, f"acc={a_fin:.4f}")
+    full_delta = res["cold"]["unseen_ft"][-1] - res["pretrained"]["unseen_ft"]
+    few_delta = a_fin - a_pre
+    rows.add("fig4/claim_C4_fewshot_gain", us3,
+             f"pass={a_fin > a_pre} delta={few_delta:+.4f}")
+    rows.add("fig4/claim_C4b_gain_larger_than_fullshot", us3,
+             f"pass={few_delta >= full_delta - 0.01} few={few_delta:+.4f} full={full_delta:+.4f}")

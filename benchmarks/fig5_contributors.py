@@ -1,0 +1,36 @@
+"""Fig. 5 — effect of the number of contributors per iteration (claim C5):
+>=2 contributors reach similar quality; more = more stable."""
+import json
+import os
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import Repository, run_cold_fusion
+
+
+def run(rows: C.Rows):
+    k = C.KNOBS
+    cfg = C.repro_cfg()
+    suite = C.make_suite(36)
+    body0 = C.pretrained_body(cfg, suite)
+    contribs = [C.make_contributor(cfg, suite, t, n=k["n_train"], steps=k["steps"])
+                for t in range(12)]
+    # paper §4.1: a consistent sampled eval set for this compute-heavy sweep
+    ev = [C.make_eval_task(suite, t, n_train=256) for t in (0, 1)]
+    iters = max(3, k["iters"] // 2)
+    finals = {}
+    for n_c in (2, 5, 8):
+        repo = Repository(body0)
+        log, us = C.timed(
+            run_cold_fusion, cfg, repo, contribs, iterations=iters,
+            contributors_per_iter=n_c, eval_seen=ev, eval_every=iters,
+            eval_steps=k["eval_steps"], eval_lr=C.EVAL_LR, seed=n_c,
+        )
+        acc = log.mean("seen_finetuned")[-1]
+        finals[n_c] = acc
+        rows.add(f"fig5/contributors{n_c}_ft", us, f"acc={acc:.4f}")
+    spread = max(finals.values()) - min(finals.values())
+    rows.add("fig5/claim_C5_insensitive_to_contributors", 0.0,
+             f"pass={spread < 0.08} spread={spread:.4f}")
+    C.save_json("fig5", finals)

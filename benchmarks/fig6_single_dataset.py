@@ -1,0 +1,128 @@
+"""Fig. 6 — single-dataset (federated) analysis, claims C6-C8:
+(a) fresh data each iteration keeps improving (federated learning);
+(b) more data per contributor -> closer to centralized finetuning;
+(c) more contributors on fixed data -> better but slower convergence;
+(d) distributing a fixed budget mostly delays convergence."""
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import Contributor, EvalTask, Repository, evaluate_base_model, run_cold_fusion
+from repro.data.synthetic import SyntheticSuite
+from repro.train import finetune as FT
+from repro.models import encoder as E
+import jax
+
+TASK = 0  # the big "MNLI" analog
+
+
+def _eval_task(suite, n_test=512):
+    d = suite.dataset(TASK, 512, n_test, C.SEQ, split_seed=9)
+    return EvalTask(TASK, suite.tasks[TASK].num_classes,
+                    d["x_train"], d["y_train"], d["x_test"], d["y_test"])
+
+
+def _frozen_acc(cfg, body, ev, steps):
+    return C.mean_acc(evaluate_base_model(cfg, body, [ev], frozen=True,
+                                          steps=steps, lr=C.EVAL_LR))
+
+
+def run(rows: C.Rows):
+    k = C.KNOBS
+    cfg = C.repro_cfg()
+    suite = C.make_suite(36)
+    body0 = C.pretrained_body(cfg, suite)
+    ev = _eval_task(suite)
+    iters = max(3, k["iters"] // 2)
+    es = k["eval_steps"]
+
+    # (a) fresh samples per contributor per iteration — federated stream
+    rng = np.random.default_rng(0)
+    stream_contribs = []
+    for c in range(5):
+        d = suite.dataset(TASK, k["n_train"] * 4, 8, C.SEQ, split_seed=100 + c)
+        stream_contribs.append(Contributor(
+            cfg, TASK, suite.tasks[TASK].num_classes, d["x_train"], d["y_train"],
+            steps=k["steps"], batch_size=32, lr=C.LR, seed=c))
+    repo = Repository(body0)
+    accs = []
+    us_total = 0.0
+    for it in range(iters):
+        base = repo.download()
+        for c in stream_contribs:
+            # fresh slice each iteration = never-ending data flow
+            lo = it * 1000 % (len(c.x) - 1000)
+            xc, yc = c.x[lo:lo + 1000], c.y[lo:lo + 1000]
+            head = c._ensure_head()
+            body_ft, head, _ = FT.finetune(cfg, base, head, xc, yc,
+                                           steps=k["steps"], batch_size=32,
+                                           lr=C.LR, seed=it * 10 + c.seed)
+            c._head = head
+            repo.upload(body_ft)
+        repo.fuse_pending()
+        accs.append(_frozen_acc(cfg, repo.download(), ev, es))
+    rows.add("fig6a/federated_frozen_curve", 0.0, "curve=" + "|".join(f"{a:.4f}" for a in accs))
+    rows.add("fig6a/claim_C6_stream_improves", 0.0,
+             f"pass={accs[-1] > accs[0]} first={accs[0]:.4f} last={accs[-1]:.4f}")
+
+    # (b) dataset size per contributor (10 contributors, frozen eval)
+    sizes = (256, 512, 1024)
+    size_final = {}
+    for n in sizes:
+        contribs = []
+        for c in range(4):
+            d = suite.dataset(TASK, n, 8, C.SEQ, split_seed=200 + c * 17)
+            contribs.append(Contributor(cfg, TASK, suite.tasks[TASK].num_classes,
+                                        d["x_train"], d["y_train"],
+                                        steps=max(15, n // 32), batch_size=32, lr=C.LR, seed=c))
+        repo = Repository(body0)
+        run_cold_fusion(cfg, repo, contribs, iterations=iters)
+        size_final[n] = _frozen_acc(cfg, repo.download(), ev, es)
+        rows.add(f"fig6b/size{n}_frozen", 0.0, f"acc={size_final[n]:.4f}")
+    # centralized baseline: all data at once
+    import itertools
+    big = suite.dataset(TASK, sizes[-1] * 4, 8, C.SEQ, split_seed=777)
+    key = jax.random.PRNGKey(0)
+    head = E.init_cls_head(cfg, key, suite.tasks[TASK].num_classes)
+    body_c, head_c, _ = FT.finetune(cfg, body0, head, big["x_train"], big["y_train"],
+                                    steps=iters * max(15, sizes[-1] // 32), batch_size=32, lr=C.LR)
+    central = FT.evaluate(cfg, body_c, head_c, ev.x_test, ev.y_test)
+    rows.add("fig6b/centralized", 0.0, f"acc={central:.4f}")
+    mono = size_final[sizes[0]] <= size_final[sizes[-1]] + 0.02
+    rows.add("fig6b/claim_C7_more_data_closer_to_central", 0.0,
+             f"pass={mono} small={size_final[sizes[0]]:.4f} large={size_final[sizes[-1]]:.4f} central={central:.4f}")
+
+    # (c) number of contributors, same 1024 examples each
+    nc_final = {}
+    for n_c in (2, 5):
+        contribs = []
+        for c in range(n_c):
+            d = suite.dataset(TASK, 1024, 8, C.SEQ, split_seed=300 + c * 31)
+            contribs.append(Contributor(cfg, TASK, suite.tasks[TASK].num_classes,
+                                        d["x_train"], d["y_train"],
+                                        steps=32, batch_size=32, lr=C.LR, seed=c))
+        repo = Repository(body0)
+        run_cold_fusion(cfg, repo, contribs, iterations=iters)
+        nc_final[n_c] = _frozen_acc(cfg, repo.download(), ev, es)
+        rows.add(f"fig6c/contributors{n_c}_frozen", 0.0, f"acc={nc_final[n_c]:.4f}")
+    rows.add("fig6c/claim_C8a_more_contributors_not_worse", 0.0,
+             f"pass={nc_final[5] >= nc_final[2] - 0.03} c2={nc_final[2]:.4f} c5={nc_final[5]:.4f}")
+
+    # (d) fixed total budget split across contributors
+    total = 4096
+    split_final = {}
+    for n_c in (2, 8):
+        per = total // n_c
+        contribs = []
+        for c in range(n_c):
+            d = suite.dataset(TASK, per, 8, C.SEQ, split_seed=400 + c * 13)
+            contribs.append(Contributor(cfg, TASK, suite.tasks[TASK].num_classes,
+                                        d["x_train"], d["y_train"],
+                                        steps=max(15, per // 32), batch_size=32, lr=C.LR, seed=c))
+        repo = Repository(body0)
+        run_cold_fusion(cfg, repo, contribs, iterations=iters)
+        split_final[n_c] = _frozen_acc(cfg, repo.download(), ev, es)
+        rows.add(f"fig6d/split{n_c}_frozen", 0.0, f"acc={split_final[n_c]:.4f}")
+    rows.add("fig6d/claim_C8b_distribution_small_effect", 0.0,
+             f"pass={abs(split_final[2] - split_final[8]) < 0.08} "
+             f"c2={split_final[2]:.4f} c8={split_final[8]:.4f}")
+    C.save_json("fig6", {"a": accs, "b": size_final, "c": nc_final, "d": split_final})

@@ -1,0 +1,56 @@
+"""Recompute roofline JSONs from stored gzipped HLO (no recompilation).
+
+  PYTHONPATH=src python -m benchmarks.reanalyze [--hlo artifacts/hlo] [--out artifacts/dryrun]
+"""
+import argparse
+import glob
+import gzip
+import json
+import os
+
+from repro.utils.hlo_flops import analyze_hlo, wire_bytes
+from repro.utils.roofline import Roofline
+
+
+def main():
+    p = argparse.ArgumentParser()
+    p.add_argument("--hlo", default="artifacts/hlo")
+    p.add_argument("--out", default="artifacts/dryrun")
+    args = p.parse_args()
+    for path in sorted(glob.glob(os.path.join(args.hlo, "*.hlo.gz"))):
+        tag = os.path.basename(path)[: -len(".hlo.gz")]
+        # map hlo tag (mesh as 16x16) back to artifact tag (pod1/pod2)
+        parts = tag.split("__")
+        meshmap = {"16x16": "pod1", "2x16x16": "pod2"}
+        if len(parts) >= 3 and parts[2] in meshmap:
+            parts[2] = meshmap[parts[2]]
+        jpath = os.path.join(args.out, "__".join(parts) + ".json")
+        if not os.path.exists(jpath):
+            continue
+        with open(jpath) as f:
+            d = json.load(f)
+        if not d.get("ok"):
+            continue
+        with gzip.open(path, "rt") as f:
+            hlo = f.read()
+        an = analyze_hlo(hlo)
+        roof = Roofline(
+            flops=an.flops, hbm_bytes=an.hbm_bytes,
+            collective_bytes=float(wire_bytes(an)),
+            model_flops=d["roofline"]["model_flops_per_chip"],
+            chips=d["chips"],
+        )
+        d["roofline"] = roof.as_dict()
+        d["collectives"] = {
+            "bytes_by_kind": {k: float(v) for k, v in an.collective_bytes.items()},
+            "count_by_kind": {k: int(v) for k, v in an.collective_count.items()},
+            "total_bytes": float(an.total_collective_bytes),
+            "dynamic_whiles": an.dynamic_whiles,
+        }
+        with open(jpath, "w") as f:
+            json.dump(d, f, indent=2)
+        print("reanalyzed", os.path.basename(jpath))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Roofline table (deliverable g): aggregate the dry-run artifacts into
+per-(arch x shape x mesh) roofline rows."""
+import glob
+import json
+import os
+
+from benchmarks import common as C
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def run(rows: C.Rows):
+    paths = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
+    if not paths:
+        rows.add("roofline/NO_ARTIFACTS", 0.0,
+                 "run `python -m repro.launch.dryrun --all --mesh both` first")
+        return
+    n_ok = n_skip = n_fail = 0
+    for p in paths:
+        with open(p) as f:
+            d = json.load(f)
+        name = os.path.basename(p)[:-5]
+        if d.get("skipped"):
+            n_skip += 1
+            rows.add(f"roofline/{name}", 0.0, "skipped=subquadratic-only-shape")
+            continue
+        if not d.get("ok"):
+            n_fail += 1
+            rows.add(f"roofline/{name}", 0.0, f"FAILED={d.get('error', '?')[:60]}")
+            continue
+        n_ok += 1
+        r = d["roofline"]
+        peak = d.get("memory_analysis", {}).get("peak_memory_in_bytes", 0)
+        rows.add(
+            f"roofline/{name}",
+            r["roofline_step_s"] * 1e6,
+            f"bottleneck={r['bottleneck']};compute_ms={r['compute_s']*1e3:.2f};"
+            f"memory_ms={r['memory_s']*1e3:.2f};collective_ms={r['collective_s']*1e3:.2f};"
+            f"useful={r['useful_flops_ratio']:.3f};mfu={r['roofline_mfu']:.3f};"
+            f"peak_GiB={peak/2**30:.2f};chips={d['chips']}",
+        )
+    rows.add("roofline/summary", 0.0, f"ok={n_ok};skipped={n_skip};failed={n_fail}")

@@ -1,0 +1,24 @@
+"""Table 1 — per-task accuracy of ColD vs baselines, plus the consistency
+comparison (App. C): ColD should help on most tasks with small worst-case
+regression."""
+import numpy as np
+
+from benchmarks import cold_main
+from benchmarks import common as C
+
+
+def run(rows: C.Rows):
+    res, us = C.timed(cold_main.run)
+    pre = res["pretrained"]["seen_ft_per_task"]
+    mt = res["multitask"]["seen_ft_per_task"]
+    cold = res["cold"]["seen_ft_per_task_final"]
+    for tid in sorted(cold, key=int):
+        p = pre[str(tid)] if isinstance(pre, dict) else pre[tid]
+        m = mt[str(tid)] if isinstance(mt, dict) else mt[tid]
+        c = cold[tid]
+        rows.add(f"table1/task{int(tid):02d}", us,
+                 f"finetune={p:.4f};multitask={m:.4f};cold={c:.4f}")
+    deltas = [cold[t] - (pre[str(t)] if isinstance(pre, dict) else pre[int(t)]) for t in cold]
+    helped = sum(1 for d in deltas if d > 0)
+    rows.add("table1/consistency", us,
+             f"helped={helped}/{len(deltas)};worst={min(deltas):+.4f};mean={np.mean(deltas):+.4f}")

@@ -1,0 +1,50 @@
+"""Federated-learning flavour of ColD Fusion (paper §6, Fig. 6a): several
+contributors hold disjoint shards of ONE dataset and fresh data streams in
+every iteration; the fused model keeps improving without sharing raw data.
+
+  PYTHONPATH=src python examples/federated_single_dataset.py
+"""
+import dataclasses
+import sys
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.configs.roberta_base import TINY
+from repro.core import EvalTask, Repository, evaluate_base_model
+from repro.data.synthetic import SyntheticSuite
+from repro.models import encoder as E
+from repro.train import finetune as FT
+from repro.train.pretrain import pretrain_mlm
+import jax
+
+SEQ = 24
+TASK = 0
+cfg = dataclasses.replace(TINY, d_model=64, num_heads=2, num_kv_heads=2, head_dim=32,
+                          d_ff=128, vocab_size=256, max_seq_len=SEQ + 8)
+suite = SyntheticSuite(vocab_size=256, num_tasks=4, seed=0, noise=0.15)
+body, _ = pretrain_mlm(cfg, suite, steps=150, seq_len=SEQ)
+
+d_eval = suite.dataset(TASK, 512, 512, SEQ, split_seed=9)
+ev = EvalTask(TASK, suite.tasks[TASK].num_classes, d_eval["x_train"], d_eval["y_train"],
+              d_eval["x_test"], d_eval["y_test"])
+
+N_CONTRIB, PER_ITER, ITERS = 4, 800, 4
+repo = Repository(body)
+heads = {c: E.init_cls_head(cfg, jax.random.PRNGKey(c), suite.tasks[TASK].num_classes)
+         for c in range(N_CONTRIB)}
+print(f"{N_CONTRIB} hospitals / banks / silos, {PER_ITER} fresh private examples each per round\n")
+for it in range(ITERS):
+    base = repo.download()
+    for c in range(N_CONTRIB):
+        d = suite.dataset(TASK, PER_ITER, 8, SEQ, split_seed=1000 + it * 10 + c)
+        b, h, _ = FT.finetune(cfg, base, heads[c], d["x_train"], d["y_train"],
+                              steps=25, lr=2e-3, seed=it * 10 + c)
+        heads[c] = h
+        repo.upload(b)
+    repo.fuse_pending()
+    acc = np.mean(list(evaluate_base_model(cfg, repo.download(), [ev], frozen=True,
+                                           steps=50, lr=2e-3).values()))
+    print(f"round {it+1}: fused-model linear-probe accuracy = {acc:.3f}")
+print("\nNo raw example ever left a silo; only weights moved (paper §2.3).")

@@ -1,0 +1,50 @@
+"""Quickstart: the whole ColD Fusion loop in ~2 minutes on CPU.
+
+Builds the synthetic multitask suite, MLM-pretrains a tiny RoBERTa-style
+encoder, runs 3 ColD Fusion iterations with 4 contributors, and shows the
+base model improving under linear probing — the paper's Fig. 2 in miniature.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+import sys
+
+import jax
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.configs.roberta_base import TINY
+from repro.core import Contributor, EvalTask, Repository, evaluate_base_model, run_cold_fusion
+from repro.data.synthetic import SyntheticSuite
+from repro.train.pretrain import pretrain_mlm
+
+SEQ = 24
+cfg = dataclasses.replace(TINY, d_model=64, num_heads=2, num_kv_heads=2, head_dim=32,
+                          d_ff=128, vocab_size=256, max_seq_len=SEQ + 8)
+suite = SyntheticSuite(vocab_size=256, num_tasks=12, seed=0, noise=0.15)
+
+print("1) MLM-pretraining the tiny encoder (the 'RoBERTa' of this demo)...")
+body, metrics = pretrain_mlm(cfg, suite, steps=150, seq_len=SEQ)
+print(f"   mlm loss {metrics['loss'][0]:.2f} -> {metrics['loss'][-1]:.2f}")
+
+print("2) Building 4 contributors with private datasets...")
+contribs = []
+for tid in range(4):
+    d = suite.dataset(tid, 1024, 64, SEQ)
+    contribs.append(Contributor(cfg, tid, suite.tasks[tid].num_classes,
+                                d["x_train"], d["y_train"], steps=30, lr=2e-3, seed=tid))
+
+d0 = suite.dataset(0, 512, 256, SEQ)
+ev = [EvalTask(0, suite.tasks[0].num_classes, d0["x_train"], d0["y_train"],
+               d0["x_test"], d0["y_test"])]
+before = np.mean(list(evaluate_base_model(cfg, body, ev, frozen=True, steps=40, lr=2e-3).values()))
+print(f"   pretrained linear-probe accuracy on task 0: {before:.3f}")
+
+print("3) Running 3 ColD Fusion iterations (download -> finetune -> upload -> fuse)...")
+repo = Repository(body)
+log = run_cold_fusion(cfg, repo, contribs, iterations=3, eval_seen=ev,
+                      eval_every=1, eval_steps=40, eval_lr=2e-3, progress=True)
+for i, acc in enumerate(log.mean("seen_frozen")):
+    print(f"   after iter {i+1}: linear-probe acc = {acc:.3f}")
+print(f"\nColD Fusion improved the base model: {before:.3f} -> {log.mean('seen_frozen')[-1]:.3f}")

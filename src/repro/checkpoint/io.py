@@ -1,0 +1,60 @@
+"""Pytree checkpointing (npz-based; no orbax offline).
+
+Flattens a pytree of arrays into an ``.npz`` keyed by the path string; the
+treedef is reconstructed from the keys on load, so files are self-contained
+and diff-able.  Used by the host-level Repository (contributors exchange
+checkpoints, Fig. 1) and by the training driver.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils.pytree import path_str
+
+_SEP = "::"
+_BF16 = "__bf16__"  # npz has no bfloat16: stored as uint16 bit pattern
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    out = {}
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    for path, leaf in flat:
+        key = path_str(path).replace("/", _SEP)
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            key += _BF16
+            arr = arr.view(np.uint16)
+        out[key] = arr
+    return out
+
+
+def _unflatten(d: Dict[str, np.ndarray]) -> Any:
+    tree: Dict[str, Any] = {}
+    for key, val in d.items():
+        if key.endswith(_BF16):
+            key = key[: -len(_BF16)]
+            val = val.view(jnp.bfloat16)
+        parts = key.split(_SEP)
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return tree
+
+
+def save(path: str, tree) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **_flatten(tree))
+
+
+def load(path: str, *, as_jax: bool = True):
+    with np.load(path) as data:
+        tree = _unflatten({k: data[k] for k in data.files})
+    if as_jax:
+        tree = jax.tree.map(jnp.asarray, tree)
+    return tree

@@ -1,0 +1,20 @@
+from repro.core import fusion
+from repro.core.cold_fusion import ColdFusionRun, EvalTask, evaluate_base_model, run_cold_fusion
+from repro.core.contributor import Contributor
+from repro.core.distributed import (
+    ColdSchedule,
+    cold_shardings,
+    make_cold_train_step,
+    make_fuse_step,
+    num_contributors,
+    stack_for_contributors,
+)
+from repro.core.repository import Repository
+from repro.core.validation import screen_contributions
+
+__all__ = [
+    "fusion", "ColdFusionRun", "EvalTask", "evaluate_base_model", "run_cold_fusion",
+    "Contributor", "ColdSchedule", "cold_shardings", "make_cold_train_step",
+    "make_fuse_step", "num_contributors", "stack_for_contributors",
+    "Repository", "screen_contributions",
+]

@@ -1,0 +1,137 @@
+"""Model fusion operators — the Repository's "fuse" step (paper §3).
+
+The paper's operator is the uniform parameter average
+``θ_{i+1} = 1/|C| Σ_c θ_i^c`` (Choshen et al., 2022b).  The paper's §8
+discussion proposes several refinements as future work; we implement them as
+first-class, composable operators (all pure pytree->pytree functions):
+
+* ``average``           — the paper's operator (optionally weighted).
+* ``damped``            — fuse then move only a fraction α from the previous
+                          base ("learning rate" on the collective update).
+* ``fisher_weighted``   — per-parameter precision weighting (Matena & Raffel
+                          2021), with contributor-supplied diagonal Fisher.
+* ``ties``              — TIES-merging (Yadav et al., 2023): trim small task
+                          deltas, elect a sign per parameter, mean the
+                          survivors.  Operates on deltas from the base.
+* ``task_arithmetic``   — base + λ·Σ deltas (Ilharco et al., 2022).
+
+All operators accept a list of contributor pytrees (and the previous base
+where meaningful) and return the new base pytree.  They are jit-friendly.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def _check(models: Sequence):
+    if not models:
+        raise ValueError("fusion requires at least one model")
+
+
+def average(models: Sequence, weights: Optional[Sequence[float]] = None):
+    """Uniform (paper §3) or weighted parameter average."""
+    _check(models)
+    if weights is None:
+        w = [1.0 / len(models)] * len(models)
+    else:
+        if len(weights) != len(models):
+            raise ValueError("len(weights) != len(models)")
+        tot = float(sum(weights))
+        if tot <= 0:
+            raise ValueError("weights must sum to a positive value")
+        w = [float(x) / tot for x in weights]
+
+    def avg(*leaves):
+        acc = leaves[0].astype(jnp.float32) * w[0]
+        for wi, leaf in zip(w[1:], leaves[1:]):
+            acc = acc + leaf.astype(jnp.float32) * wi
+        return acc.astype(leaves[0].dtype)
+
+    return jax.tree.map(avg, *models)
+
+
+def damped(base, models: Sequence, alpha: float = 1.0,
+           weights: Optional[Sequence[float]] = None):
+    """θ' = θ + α·(average(models) − θ).  α=1 recovers the paper; α<1 is the
+    §8 "restrict the effect of each iteration" lever."""
+    fused = average(models, weights)
+    return jax.tree.map(
+        lambda b, f: (b.astype(jnp.float32) * (1 - alpha) + f.astype(jnp.float32) * alpha).astype(b.dtype),
+        base, fused,
+    )
+
+
+def fisher_weighted(models: Sequence, fishers: Sequence, eps: float = 1e-8):
+    """θ* = (Σ F_c ⊙ θ_c) / (Σ F_c); F_c diagonal Fisher (or any positive
+    importance) pytrees matching the params structure."""
+    _check(models)
+    if len(fishers) != len(models):
+        raise ValueError("need one fisher per model")
+
+    def fuse(*leaves):
+        n = len(leaves) // 2
+        thetas, fs = leaves[:n], leaves[n:]
+        num = sum(t.astype(jnp.float32) * f.astype(jnp.float32) for t, f in zip(thetas, fs))
+        den = sum(f.astype(jnp.float32) for f in fs) + eps
+        return (num / den).astype(thetas[0].dtype)
+
+    return jax.tree.map(fuse, *(list(models) + list(fishers)))
+
+
+def task_arithmetic(base, models: Sequence, lam: float = 1.0):
+    """θ' = θ + λ · Σ_c (θ_c − θ)."""
+    _check(models)
+
+    def fuse(b, *ts):
+        delta = sum(t.astype(jnp.float32) - b.astype(jnp.float32) for t in ts)
+        return (b.astype(jnp.float32) + lam * delta).astype(b.dtype)
+
+    return jax.tree.map(fuse, base, *models)
+
+
+def ties(base, models: Sequence, density: float = 0.2, lam: float = 1.0):
+    """TIES-merging: per-leaf trim each delta to its top-``density`` fraction
+    by magnitude, elect the dominant sign per coordinate, average the deltas
+    agreeing with it, and apply with scale λ."""
+    _check(models)
+
+    def fuse(b, *ts):
+        bf = b.astype(jnp.float32)
+        deltas = [t.astype(jnp.float32) - bf for t in ts]
+        trimmed = []
+        for d in deltas:
+            flat = jnp.abs(d).reshape(-1)
+            k = max(1, int(density * flat.size))
+            # threshold = k-th largest magnitude
+            thresh = jax.lax.top_k(flat, k)[0][-1]
+            trimmed.append(jnp.where(jnp.abs(d) >= thresh, d, 0.0))
+        total = sum(trimmed)
+        sign = jnp.sign(total)
+        keep = [jnp.where(jnp.sign(d) == sign, d, 0.0) for d in trimmed]
+        cnt = sum(jnp.where(k != 0.0, 1.0, 0.0) for k in keep)
+        merged = sum(keep) / jnp.maximum(cnt, 1.0)
+        return (bf + lam * merged).astype(b.dtype)
+
+    return jax.tree.map(fuse, base, *models)
+
+
+FUSION_OPS = {
+    "average": lambda base, models, **kw: average(models, **kw),
+    "damped": damped,
+    "task_arithmetic": task_arithmetic,
+    "ties": ties,
+}
+
+
+def fuse(name: str, base, models: Sequence, **kw):
+    """Dispatch by operator name (config-friendly entry point)."""
+    if name == "fisher":
+        return fisher_weighted(models, kw.pop("fishers"), **kw)
+    try:
+        op = FUSION_OPS[name]
+    except KeyError:
+        raise KeyError(f"unknown fusion op {name!r}; known: {sorted(FUSION_OPS)} + ['fisher']") from None
+    return op(base, models, **kw)

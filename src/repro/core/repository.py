@@ -1,0 +1,211 @@
+"""The central Repository (paper Fig. 1): versioned base-model store that
+accepts contributions, screens them (§9), fuses them (§3), and publishes the
+next base model.  Performs no training — only the minimal computation the
+ColD constraints allow (§2.3).
+
+Two transports share this logic:
+
+* **in-memory** — the simulation / single-process driver keeps pytrees.
+* **on-disk**   — contributions arrive as npz checkpoints in a directory
+  (the stand-in for the HF-hub exchange); useful across processes.
+
+The fuse itself delegates to `repro.core.fusion` (host/jnp path) or to the
+Pallas ``cold_fuse`` kernel via ``repro.kernels.ops`` when requested.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+
+from repro.checkpoint import io as ckpt
+from repro.core import fusion
+from repro.core.validation import ScreenReport, screen_contributions
+
+
+@dataclass
+class FusionRecord:
+    iteration: int
+    n_contributions: int
+    n_accepted: int
+    op: str
+    diff_norms: List[float]
+    wall_time: float
+
+
+class Repository:
+    def __init__(
+        self,
+        base_params,
+        *,
+        fusion_op: str = "average",
+        fusion_kwargs: Optional[Dict[str, Any]] = None,
+        screen: bool = True,
+        mad_threshold: float = 5.0,
+        root: Optional[str] = None,
+        keep_history: bool = False,
+    ):
+        self._base = base_params
+        self.fusion_op = fusion_op
+        self.fusion_kwargs = dict(fusion_kwargs or {})
+        self.screen = screen
+        self.mad_threshold = mad_threshold
+        self.iteration = 0
+        self.root = root
+        self.keep_history = keep_history
+        self.history: List[FusionRecord] = []
+        self._pending: List[Any] = []
+        self._pending_fishers: List[Any] = []
+        self._pending_weights: List[Any] = []
+        self._snapshots: List[Any] = []
+        if root:
+            os.makedirs(root, exist_ok=True)
+            self._persist_base()
+
+    # -- contributor-facing API ----------------------------------------
+    def download(self):
+        """Contributor pulls the current base model (Fig. 1, step 1)."""
+        return self._base
+
+    def upload(self, params, fisher=None, weight: Optional[float] = None) -> int:
+        """Contributor pushes a finetuned model (Fig. 1, step 3), optionally
+        with its diagonal Fisher (for fusion_op="fisher") and a contribution
+        weight (§8 "assigning individual weights to each contributor" — e.g.
+        dataset size; used when fusion_op="average"/"damped").  Returns a
+        contribution ticket id."""
+        self._pending.append(params)
+        self._pending_fishers.append(fisher)
+        self._pending_weights.append(weight)
+        if self.root:
+            path = os.path.join(
+                self.root, f"iter{self.iteration:04d}_contrib{len(self._pending) - 1:03d}.npz"
+            )
+            ckpt.save(path, params)
+        return len(self._pending) - 1
+
+    def contribute_async(self, params, *, alpha: Optional[float] = None) -> FusionRecord:
+        """Asynchronous contribution (paper §8: "it would be beneficial if
+        the repository was updated asynchronously"): immediately merge ONE
+        finetuned model into the base via a damped task-arithmetic update
+        θ ← θ + α·(θ_c − θ), without waiting for a cohort (Ilharco et al.
+        2022).  α defaults to 1/(1 + iteration) — early contributions move
+        the base more, later ones refine it (Polyak-style averaging)."""
+        if self.screen:
+            report = screen_contributions(
+                self._base, [params], mad_threshold=self.mad_threshold)
+            if not report.accepted:
+                raise RuntimeError(f"async contribution rejected: {report.reasons}")
+        a = alpha if alpha is not None else 1.0 / (1.0 + self.iteration)
+        t0 = time.time()
+        new_base = fusion.damped(self._base, [params], alpha=a)
+        rec = FusionRecord(
+            iteration=self.iteration, n_contributions=1, n_accepted=1,
+            op=f"async-damped({a:.3f})", diff_norms=[], wall_time=time.time() - t0,
+        )
+        self.history.append(rec)
+        if self.keep_history:
+            self._snapshots.append(self._base)
+        self._base = new_base
+        self.iteration += 1
+        if self.root:
+            self._persist_base()
+        return rec
+
+    # -- repository maintenance ----------------------------------------
+    def fuse_pending(self) -> FusionRecord:
+        """Screen + fuse all pending contributions into the new base
+        (Fig. 1, step 4) and advance the iteration."""
+        if not self._pending:
+            raise RuntimeError("no contributions to fuse")
+        t0 = time.time()
+        models = self._pending
+        report: Optional[ScreenReport] = None
+        fishers = self._pending_fishers
+        weights = self._pending_weights
+        if self.screen:
+            report = screen_contributions(self._base, models, mad_threshold=self.mad_threshold)
+            models = [models[i] for i in report.accepted]
+            fishers = [fishers[i] for i in report.accepted]
+            weights = [weights[i] for i in report.accepted]
+            if not models:
+                raise RuntimeError(f"all contributions rejected: {report.reasons}")
+        kw = dict(self.fusion_kwargs)
+        if self.fusion_op == "fisher":
+            if any(f is None for f in fishers):
+                raise RuntimeError("fusion_op='fisher' requires upload(..., fisher=...)")
+            kw["fishers"] = fishers
+        elif (self.fusion_op in ("average", "damped") and "weights" not in kw
+              and all(w is not None for w in weights) and weights):
+            kw["weights"] = weights
+        new_base = fusion.fuse(self.fusion_op, self._base, models, **kw)
+        rec = FusionRecord(
+            iteration=self.iteration,
+            n_contributions=len(self._pending),
+            n_accepted=len(models),
+            op=self.fusion_op,
+            diff_norms=report.diff_norms if report else [],
+            wall_time=time.time() - t0,
+        )
+        self.history.append(rec)
+        if self.keep_history:
+            self._snapshots.append(self._base)
+        self._base = new_base
+        self._pending = []
+        self._pending_fishers = []
+        self._pending_weights = []
+        self.iteration += 1
+        if self.root:
+            self._persist_base()
+        return rec
+
+    def rollback(self, to_iteration: int):
+        """Paper §8: "backtracking when a harmful update was done"."""
+        if not self.keep_history:
+            raise RuntimeError("rollback requires keep_history=True")
+        if not (0 <= to_iteration < len(self._snapshots)):
+            raise ValueError(f"no snapshot for iteration {to_iteration}")
+        self._base = self._snapshots[to_iteration]
+        self._snapshots = self._snapshots[:to_iteration]
+        self.history = self.history[:to_iteration]
+        self.iteration = to_iteration
+        self._pending = []
+        self._pending_fishers = []
+        self._pending_weights = []
+
+    def snapshot(self, iteration: int):
+        return self._snapshots[iteration]
+
+    # -- persistence -----------------------------------------------------
+    def _persist_base(self):
+        ckpt.save(os.path.join(self.root, f"base_iter{self.iteration:04d}.npz"), self._base)
+        meta = {
+            "iteration": self.iteration,
+            "fusion_op": self.fusion_op,
+            "history": [
+                {
+                    "iteration": r.iteration,
+                    "n_contributions": r.n_contributions,
+                    "n_accepted": r.n_accepted,
+                    "op": r.op,
+                }
+                for r in self.history
+            ],
+        }
+        with open(os.path.join(self.root, "repository.json"), "w") as f:
+            json.dump(meta, f, indent=2)
+
+    @classmethod
+    def open(cls, root: str, **kw) -> "Repository":
+        """Re-open an on-disk repository at its latest base model."""
+        with open(os.path.join(root, "repository.json")) as f:
+            meta = json.load(f)
+        it = meta["iteration"]
+        base = ckpt.load(os.path.join(root, f"base_iter{it:04d}.npz"))
+        repo = cls(base, fusion_op=meta.get("fusion_op", "average"), root=None, **kw)
+        repo.iteration = it
+        repo.root = root
+        return repo

@@ -1,0 +1,79 @@
+"""Contribution screening — the paper's §9 mitigation for "a possible
+harmful update done by a contributor": monitor diffs from the base and
+reject anomalous or non-finite contributions before fusing.
+
+Checks (all cheap, streaming; the Pallas ``cold_fuse`` kernel computes the
+same diff norms for free during fusion):
+
+* non-finite leaves (NaN/Inf screens),
+* diff-norm too LARGE vs the cohort (runaway finetune / random weights),
+* diff-norm zero (no-op "contribution"),
+* optional absolute norm ceiling.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils.pytree import tree_isfinite, tree_sq_norm, tree_sub
+
+
+@dataclass
+class ScreenReport:
+    accepted: List[int] = field(default_factory=list)
+    rejected: List[int] = field(default_factory=list)
+    reasons: dict = field(default_factory=dict)
+    diff_norms: List[float] = field(default_factory=list)
+
+
+def diff_norm(base, model) -> float:
+    return float(jnp.sqrt(tree_sq_norm(tree_sub(model, base))))
+
+
+def screen_contributions(
+    base,
+    models: Sequence,
+    *,
+    mad_threshold: float = 5.0,
+    max_norm: Optional[float] = None,
+    allow_zero: bool = False,
+) -> ScreenReport:
+    """Return indices of models safe to fuse.
+
+    A contribution is rejected if it contains non-finite values, has zero
+    diff (unless ``allow_zero``), exceeds ``max_norm``, or its diff norm is a
+    ``mad_threshold``-sigma outlier under the median-absolute-deviation rule
+    (robust to the outlier itself contaminating the statistics).
+    """
+    report = ScreenReport()
+    norms = []
+    finite = []
+    for m in models:
+        finite.append(bool(tree_isfinite(m)))
+        norms.append(diff_norm(base, m) if finite[-1] else float("inf"))
+    report.diff_norms = norms
+
+    arr = np.asarray([n for n, f in zip(norms, finite) if f and np.isfinite(n)])
+    med = float(np.median(arr)) if arr.size else 0.0
+    mad = float(np.median(np.abs(arr - med))) if arr.size else 0.0
+    cutoff_hi = med + mad_threshold * max(mad, 1e-12 + 0.05 * med)
+
+    for i, (n, f) in enumerate(zip(norms, finite)):
+        if not f:
+            report.rejected.append(i)
+            report.reasons[i] = "non-finite parameters"
+        elif not allow_zero and n == 0.0:
+            report.rejected.append(i)
+            report.reasons[i] = "zero diff (no-op contribution)"
+        elif max_norm is not None and n > max_norm:
+            report.rejected.append(i)
+            report.reasons[i] = f"diff norm {n:.3g} exceeds ceiling {max_norm:.3g}"
+        elif len(arr) >= 3 and n > cutoff_hi:
+            report.rejected.append(i)
+            report.reasons[i] = f"diff norm {n:.3g} is a MAD outlier (cutoff {cutoff_hi:.3g})"
+        else:
+            report.accepted.append(i)
+    return report

@@ -1,0 +1,40 @@
+"""Minimal deterministic data pipeline: shuffled epochs, fixed-size batches,
+host->device sharding helpers."""
+from __future__ import annotations
+
+from typing import Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+
+def batches(
+    x: np.ndarray,
+    y: Optional[np.ndarray],
+    batch_size: int,
+    *,
+    rng: Optional[np.random.Generator] = None,
+    epochs: int = 1,
+    drop_remainder: bool = True,
+) -> Iterator[Dict[str, np.ndarray]]:
+    n = len(x)
+    for _ in range(epochs):
+        idx = np.arange(n)
+        if rng is not None:
+            rng.shuffle(idx)
+        stop = (n // batch_size) * batch_size if drop_remainder else n
+        for i in range(0, stop, batch_size):
+            sel = idx[i : i + batch_size]
+            out = {"tokens": x[sel]}
+            if y is not None:
+                out["labels"] = y[sel]
+            yield out
+
+
+def num_steps(n: int, batch_size: int, epochs: int) -> int:
+    return (n // batch_size) * epochs
+
+
+def shard_batch(batch: Dict[str, np.ndarray], sharding) -> Dict[str, jax.Array]:
+    """Place a host batch onto devices with the given NamedSharding."""
+    return {k: jax.device_put(v, sharding) for k, v in batch.items()}

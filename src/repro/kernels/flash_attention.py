@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: blocked (flash) attention with causal + sliding-window
+masking and GQA head sharing.
+
+TPU adaptation (DESIGN.md §2): online-softmax accumulation in f32 VMEM
+scratch; the grid is (B, Hq, Sq/bq, Sk/bk) with the KV-block axis innermost —
+TPU grids execute sequentially per core, so the (acc, m, l) scratch carries
+across KV blocks of one query block (the standard Mosaic flash pattern).
+Block shapes default to MXU-aligned 128x128 tiles; the KV BlockSpec indexes
+the shared KV head (h // rep) so grouped queries reuse the same KV tiles
+straight from VMEM.
+
+The pure-jnp oracle is `repro.kernels.ref.flash_attention`; tests sweep
+shapes/dtypes/window sizes in interpret mode (this container has no TPU).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *, scale, causal,
+            window, q_offset, bq, bk, nk):
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32) * scale  # [bq, hd]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)          # [bk, hd]
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    s = q @ k.T  # [bq, bk]
+    qi = pl.program_id(2)
+    q_pos = q_offset + qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_cur[:, None])
+    p = jnp.where(mask, p, 0.0)
+    corr = jnp.exp(m_prev - m_cur)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + p @ v
+    m_ref[...] = m_cur
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, :, 0, :] = (acc_ref[...] / safe[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_offset", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jax.Array,  # [B, Sq, Hq, hd]
+    k: jax.Array,  # [B, Sk, Hkv, hd]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    B, Sq, Hq, hd = q.shape
+    _, Sk, Hkv, _ = k.shape
+    rep = Hq // Hkv
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, "seq lens must divide block sizes"
+    nq, nk = Sq // bq, Sk // bk
+
+    kern = functools.partial(
+        _kernel, scale=hd ** -0.5, causal=causal, window=window,
+        q_offset=q_offset, bq=bq, bk=bk, nk=nk,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(B, Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, hd), lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda b, h, qi, ki, _rep=rep: (b, ki, h // _rep, 0)),
+            pl.BlockSpec((1, bk, 1, hd), lambda b, h, qi, ki, _rep=rep: (b, ki, h // _rep, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, hd), lambda b, h, qi, ki: (b, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),  # acc
+            pltpu.VMEM((bq,), jnp.float32),     # running max m
+            pltpu.VMEM((bq,), jnp.float32),     # running denom l
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,85 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On TPU the kernels compile to Mosaic; on CPU (this container) they run in
+``interpret=True`` mode for correctness.  ``use_kernels(False)`` (or the
+REPRO_NO_KERNELS env var) routes everything to the pure-jnp oracles — the
+dry-run lowering path uses the oracles because Pallas does not lower to the
+CPU host platform.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.cold_fuse import cold_fuse as _cold_fuse_kernel
+from repro.kernels.flash_attention import flash_attention as _flash_kernel
+from repro.kernels.rwkv6_scan import rwkv6_scan as _rwkv_kernel
+
+RWKV_LOGW_FLOOR = -4.0  # kernel contract (see rwkv6_scan docstring)
+
+_STATE = {"enabled": os.environ.get("REPRO_NO_KERNELS", "0") != "1"}
+
+
+def use_kernels(enabled: bool) -> None:
+    _STATE["enabled"] = bool(enabled)
+
+
+def kernels_enabled() -> bool:
+    return _STATE["enabled"]
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+
+
+def fuse_flat(base, contribs, weights, alpha: float = 1.0) -> Tuple[jax.Array, jax.Array]:
+    """Fused repository update over flattened parameter vectors.
+    Returns (fused [N], sq_diff [K])."""
+    if kernels_enabled():
+        return _cold_fuse_kernel(base, contribs, weights, alpha, interpret=_interpret())
+    return ref.cold_fuse(base, contribs, weights, alpha)
+
+
+def fuse_pytrees(base_tree, contrib_trees, weights=None, alpha: float = 1.0):
+    """Repository fuse over pytrees via the kernel: flatten, fuse, restore.
+    Returns (fused_tree, sq_diff [K] aggregated over all leaves)."""
+    K = len(contrib_trees)
+    w = jnp.ones((K,), jnp.float32) if weights is None else jnp.asarray(weights, jnp.float32)
+    leaves_b, treedef = jax.tree.flatten(base_tree)
+    leaves_c = [jax.tree.leaves(t) for t in contrib_trees]
+    fused_leaves = []
+    sq_total = jnp.zeros((K,), jnp.float32)
+    for i, lb in enumerate(leaves_b):
+        flat_b = lb.reshape(-1)
+        flat_c = jnp.stack([leaves_c[k][i].reshape(-1) for k in range(K)])
+        fused, sq = fuse_flat(flat_b, flat_c, w, alpha)
+        fused_leaves.append(fused.reshape(lb.shape))
+        sq_total = sq_total + sq
+    return jax.tree.unflatten(treedef, fused_leaves), sq_total
+
+
+def attention(q, k, v, *, causal=True, window: Optional[int] = None, q_offset: int = 0,
+              block_q: int = 128, block_k: int = 128) -> jax.Array:
+    """Blocked attention (GQA, causal, sliding window)."""
+    if kernels_enabled():
+        return _flash_kernel(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            block_q=block_q, block_k=block_k, interpret=_interpret(),
+        )
+    return ref.flash_attention(q, k, v, causal=causal, window=window, q_offset=q_offset)
+
+
+def rwkv6_mix(r, k, v, logw, u, s0, *, chunk: int = 16) -> Tuple[jax.Array, jax.Array]:
+    """Chunked RWKV6 recurrence.  ``logw`` is clamped to the kernel contract
+    (a per-step decay below e^-4 zeroes state within two tokens anyway)."""
+    logw = jnp.clip(logw, RWKV_LOGW_FLOOR, 0.0)
+    if kernels_enabled():
+        return _rwkv_kernel(r, k, v, logw, u, s0, chunk=chunk, interpret=_interpret())
+    return ref.rwkv6_scan(r, k, v, jnp.exp(logw), u, s0)

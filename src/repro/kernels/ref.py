@@ -1,0 +1,101 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# cold_fuse: K-way weighted parameter average + per-contribution diff norms
+# ---------------------------------------------------------------------------
+
+
+def cold_fuse(
+    base: jax.Array,  # [N]
+    contribs: jax.Array,  # [K, N]
+    weights: jax.Array,  # [K] (need not be normalized)
+    alpha: float = 1.0,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (fused [N], sq_diff [K]).
+
+    fused = base + alpha * (Σ_k w_k θ_k / Σ_k w_k − base)
+    sq_diff[k] = ||θ_k − base||² (the §9 screening statistic).
+    """
+    w = weights.astype(jnp.float32)
+    w = w / jnp.sum(w)
+    cf = contribs.astype(jnp.float32)
+    bf = base.astype(jnp.float32)
+    avg = jnp.einsum("k,kn->n", w, cf)
+    fused = (bf + alpha * (avg - bf)).astype(base.dtype)
+    sq = jnp.sum(jnp.square(cf - bf[None, :]), axis=1)
+    return fused, sq
+
+
+# ---------------------------------------------------------------------------
+# flash attention (causal, optional sliding window, GQA)
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(
+    q: jax.Array,  # [B, Sq, Hq, hd]
+    k: jax.Array,  # [B, Sk, Hkv, hd]
+    v: jax.Array,  # [B, Sk, Hkv, hd]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset: int = 0,
+) -> jax.Array:
+    B, Sq, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    rep = Hq // Hkv
+    qf = q.astype(jnp.float32) * (hd ** -0.5)
+    kf = jnp.repeat(k.astype(jnp.float32), rep, axis=2)
+    vf = jnp.repeat(v.astype(jnp.float32), rep, axis=2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)
+    q_pos = q_offset + jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(k.shape[1])[None, :]
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jnp.where(jnp.isnan(probs), 0.0, probs)  # fully-masked rows
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vf)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 recurrence (data-dependent decay)
+# ---------------------------------------------------------------------------
+
+
+def rwkv6_scan(
+    r: jax.Array,  # [B, T, H, hd]
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,  # [B, T, H, hd] per-step decay in (0, 1]
+    u: jax.Array,  # [H, hd] current-token bonus
+    s0: Optional[jax.Array] = None,  # [B, H, hd, hd] f32
+) -> Tuple[jax.Array, jax.Array]:
+    """Sequential oracle.  Returns (y [B, T, H, hd], s_final [B, H, hd, hd]).
+
+        y_t = r_t · (u ⊙ k_t v_tᵀ + S_t);  S_{t+1} = w_t ⊙ S_t + k_t v_tᵀ
+    """
+    B, T, H, hd = r.shape
+    if s0 is None:
+        s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = k_t[..., :, None].astype(jnp.float32) * v_t[..., None, :].astype(jnp.float32)
+        y = jnp.einsum("bhi,bhij->bhj", r_t.astype(jnp.float32), u[None, :, :, None] * kv + S)
+        S = w_t[..., :, None].astype(jnp.float32) * S + kv
+        return S, y
+
+    inputs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    sT, ys = jax.lax.scan(step, s0, inputs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), sT

@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: chunked RWKV6 recurrence (data-dependent decay).
+
+The oracle recurrence (`repro.kernels.ref.rwkv6_scan`) is O(T) sequential
+with a rank-1 state update per step — hostile to the MXU.  TPU adaptation
+(DESIGN.md §2): process the sequence in chunks of C tokens, turning the
+recurrence into three MXU matmuls per chunk (the FLA "chunked" formulation):
+
+  in-chunk   A[t,s] = Σ_i r_t,i k_s,i exp(cum_excl[t,i] − cum[s,i]) (s < t)
+             y_in   = A @ V
+  carry-in   y_st   = (R ⊙ exp(cum_excl)) @ S
+  bonus      y_u    = ((R ⊙ u ⊙ K)·1) ⊙ V        (current token)
+  state      S'     = diag(exp(cum_last)) S + (K ⊙ exp(cum_last − cum))ᵀ V
+
+where cum = cumsum(log w) within the chunk.  All decay ratios that touch
+data are ≤ 1 (exponents ≤ 0), so the math is f32-stable given the documented
+contract ``log w ≥ -4`` per step (enforced by the ops.py wrapper; a decay
+below e⁻⁴ zeroes the state within two tokens anyway).
+
+Grid: (B, H, T/C), chunk axis innermost — the [hd, hd] f32 state lives in
+VMEM scratch and carries across the sequential grid steps of one (b, h).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 16
+
+
+def _kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref, y_ref, sT_ref, S, *, C, nc):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        S[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    r = r_ref[0, :, 0, :].astype(jnp.float32)   # [C, hd]
+    k = k_ref[0, :, 0, :].astype(jnp.float32)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    lw = lw_ref[0, :, 0, :].astype(jnp.float32)  # log decay, <= 0
+    u = u_ref[0].astype(jnp.float32)             # [hd]
+
+    cum = jnp.cumsum(lw, axis=0)          # inclusive
+    cum_excl = cum - lw                   # exclusive
+    # offset per channel keeps both exp factors finite (see module docstring)
+    m = cum[C // 2][None, :]
+    qf = r * jnp.exp(cum_excl - m)        # [C, hd]
+    kf = k * jnp.exp(m - cum)             # [C, hd]
+    A = qf @ kf.T                         # [C, C]
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (C, C), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (C, C), 1)
+    A = jnp.where(t_idx > s_idx, A, 0.0)
+
+    y = A @ v                             # in-chunk
+    y += (r * jnp.exp(cum_excl)) @ S[...]  # carried state
+    y += jnp.sum(r * u[None, :] * k, axis=1, keepdims=True) * v  # bonus
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    cum_last = cum[-1][None, :]
+    k2 = k * jnp.exp(cum_last - cum)      # [C, hd], factors <= 1
+    S[...] = jnp.exp(cum_last.T) * S[...] + k2.T @ v
+
+    @pl.when(ci == nc - 1)
+    def _finish():
+        sT_ref[0, 0] = S[...]
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan(
+    r: jax.Array,   # [B, T, H, hd]
+    k: jax.Array,
+    v: jax.Array,
+    logw: jax.Array,  # [B, T, H, hd] log-decay, contract: in [-4, 0]
+    u: jax.Array,     # [H, hd]
+    s0: jax.Array,    # [B, H, hd, hd] f32
+    *,
+    chunk: int = DEFAULT_CHUNK,
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y [B, T, H, hd], s_final [B, H, hd, hd])."""
+    B, T, H, hd = r.shape
+    C = min(chunk, T)
+    assert T % C == 0, "T must divide the chunk size"
+    nc = T // C
+
+    kern = functools.partial(_kernel, C=C, nc=nc)
+    y, sT = pl.pallas_call(
+        kern,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, C, 1, hd), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, C, 1, hd), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, C, 1, hd), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, C, 1, hd), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, hd), lambda b, h, c: (h, 0)),
+            pl.BlockSpec((1, 1, hd, hd), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, C, 1, hd), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, 1, hd, hd), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(r.shape, r.dtype),
+            jax.ShapeDtypeStruct((B, H, hd, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, logw, u, s0)
+    return y, sT

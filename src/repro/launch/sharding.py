@@ -1,0 +1,310 @@
+"""Sharding rules: map every parameter / activation / cache leaf to a
+PartitionSpec on the production mesh.
+
+Strategy summary (Megatron-style TP over ``model`` + optional FSDP over
+``data``; the ColD strategy prepends a contributor axis — see
+`repro.core.distributed`):
+
+* attention/FFN matrices: input dim on ``fsdp``, output dim on ``model``
+  (transposed for the output projections) — activations stay batch-sharded
+  between layers, collectives stay inside layers.
+* MoE expert stacks [E, ...]: expert dim on ``model`` (expert parallelism);
+  GSPMD inserts the dispatch/combine all-to-alls implied by the einsums.
+* Mamba/RWKV channel-parallel leaves: the inner channel dim on ``model``
+  (their recurrences are elementwise across channels/heads).
+* KV caches: batch on ``data``, kv-heads on ``model`` (falling back to
+  head_dim, then sequence, whenever a dim isn't divisible — e.g. MQA kv=1,
+  or batch=1 in long_500k where the *sequence* gets context-parallel
+  sharded instead).
+
+Every rule is divisibility-checked against the actual mesh axis sizes; a
+non-divisible dim falls back to replication rather than failing to lower.
+"""
+from __future__ import annotations
+
+import re
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.utils.pytree import tree_map_with_name
+
+Axis = Optional[object]  # str | tuple[str, ...] | None
+
+# §Perf lever flags (see EXPERIMENTS.md §Perf); off by default so baseline
+# artifacts stay reproducible.
+import os
+OPT_MOE_SHARD = os.environ.get("REPRO_OPT_MOE_SHARD", "0") == "1"
+
+
+def _axis_size(mesh: Mesh, axis: Axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def _fit(mesh: Mesh, shape: Tuple[int, ...], want: Sequence[Axis]) -> P:
+    """Drop any axis whose size doesn't divide the corresponding dim."""
+    spec = []
+    for dim, axis in zip(shape, want):
+        if axis is not None and dim % _axis_size(mesh, axis) == 0 and dim > 0:
+            spec.append(axis)
+        else:
+            spec.append(None)
+    return P(*spec)
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+
+# (regex over the leaf path, wanted axes for the *trailing* dims of the leaf)
+_PARAM_RULES = [
+    ("embed$", ("model", "fsdp")),          # [V, D]
+    ("lm_head$", ("fsdp", "model")),        # [D, V]
+    (r"(^|/)pos$", (None, None)),           # learned positions: replicate
+    ("attn/wo", ("model", "fsdp")),
+    ("xattn/wo", ("model", "fsdp")),
+    ("attn/w", ("fsdp", "model")),          # wq/wk/wv
+    ("xattn/w", ("fsdp", "model")),
+    ("glu/w_down", ("model", "fsdp")),
+    ("glu/w", ("fsdp", "model")),
+    ("mlp/w_down", ("model", "fsdp")),
+    ("mlp/w_up", ("fsdp", "model")),
+    ("moe/router", ("fsdp", None)),
+    ("moe/w_down", ("model", None, "fsdp")),  # [E, F, D]
+    ("moe/w", ("model", "fsdp", None)),       # [E, D, F]
+    ("mamba/in_proj", ("fsdp", "model")),
+    ("mamba/conv_w", (None, "model")),
+    ("mamba/conv_b", ("model",)),
+    ("mamba/x_proj", ("model", None)),
+    ("mamba/dt_proj", (None, "model")),
+    ("mamba/dt_bias", ("model",)),
+    ("mamba/A_log", ("model", None)),
+    ("mamba/D", ("model",)),
+    ("mamba/out_proj", ("model", "fsdp")),
+    ("rwkv/wo", ("model", "fsdp")),
+    ("rwkv/w", ("fsdp", "model")),          # wr/wk/wv/wg
+    ("rwkv/lora_w/a", ("fsdp", None)),
+    ("rwkv/lora_w/b", (None, "model")),
+    ("rwkv/u", ("model", None)),            # [H, hd]
+    ("rwkv/w0", ("model",)),
+    ("rwkv/ln_", ("model",)),
+    ("head/dense", ("fsdp", "model")),
+    ("head/out", ("model", None)),
+]
+
+
+def _sub_axes(axis_map, want: Sequence[Axis]) -> Tuple[Axis, ...]:
+    return tuple(axis_map.get(a, None) if isinstance(a, str) else a for a in want)
+
+
+def param_spec(
+    mesh: Mesh,
+    name: str,
+    leaf,
+    *,
+    data_axis: Axis = "data",
+    model_axis: Axis = "model",
+    fsdp: bool = False,
+    prefix: Tuple[Axis, ...] = (),
+) -> P:
+    """PartitionSpec for one named parameter leaf.
+
+    ``prefix`` covers leading stacking dims (scan period repeats get None;
+    the ColD contributor dim gets the contributor axes).
+    """
+    axis_map = {"model": model_axis, "fsdp": data_axis if fsdp else None}
+    shape = leaf.shape if hasattr(leaf, "shape") else tuple(leaf)
+    n_lead = len(prefix)
+    body_shape = shape[n_lead:]
+    want: Optional[Sequence[Axis]] = None
+    for pat, axes in _PARAM_RULES:
+        if re.search(pat, name) and len(axes) == len(body_shape):
+            want = _sub_axes(axis_map, axes)
+            break
+    if want is None:
+        want = (None,) * len(body_shape)
+    # §Perf lever (REPRO_OPT_MOE_SHARD=1): when num_experts doesn't divide
+    # the model axis (mixtral: E=8 on a 16-way axis), move tensor parallelism
+    # to the per-expert FFN dim instead of dropping it entirely (baseline:
+    # mixtral train_4k optimizer state replicated 16x -> 52.6 GiB peak).
+    if (OPT_MOE_SHARD and "moe/w" in name and len(body_shape) == 3
+            and want and want[0] is not None
+            and body_shape[0] % _axis_size(mesh, want[0]) != 0):
+        fsdp_ax = _sub_axes(axis_map, ("fsdp",))[0]
+        if "w_down" in name:  # [E, F, D]: shard F on model, D on fsdp
+            want = (None, want[0], fsdp_ax)
+        else:  # w_gate/w_up [E, D, F]: shard D on fsdp, F on model
+            want = (None, fsdp_ax, want[0])
+    body = list(_fit(mesh, body_shape, want))
+    lead = [
+        (a if a is not None and shape[i] % _axis_size(mesh, a) == 0 else None)
+        for i, a in enumerate(prefix)
+    ]
+    return P(*(lead + body))
+
+
+def params_shardings(
+    mesh: Mesh,
+    params,
+    cfg: ArchConfig,
+    *,
+    data_axis: Axis = "data",
+    model_axis: Axis = "model",
+    contrib_axes: Tuple[Axis, ...] = (),
+):
+    """NamedSharding pytree for a params pytree.
+
+    Leaves under ``scan/`` carry a leading period-stack dim (replicated);
+    ``contrib_axes`` (ColD) prepends the contributor dim before that.
+    """
+
+    def spec(name: str, leaf):
+        prefix: Tuple[Axis, ...] = tuple(contrib_axes)
+        if "scan/" in name or name.startswith("scan"):
+            prefix = prefix + (None,)
+        return NamedSharding(
+            mesh,
+            param_spec(
+                mesh, name, leaf,
+                data_axis=data_axis, model_axis=model_axis,
+                fsdp=cfg.fsdp, prefix=prefix,
+            ),
+        )
+
+    return tree_map_with_name(spec, params)
+
+
+# ---------------------------------------------------------------------------
+# optimizer state: follow the params rules (m/v/momentum mirror params;
+# adafactor's factored vectors replicate their trailing dim heuristically)
+# ---------------------------------------------------------------------------
+
+
+def opt_state_shardings(mesh: Mesh, opt_state, params_sh):
+    """m/v mirror the param sharding; scalars & factored stats replicate on
+    non-matching shapes."""
+    flat_params = {}
+
+    def record(name, sh):
+        flat_params[name] = sh
+        return sh
+
+    tree_map_with_name(record, params_sh)
+
+    def spec(name: str, leaf):
+        # opt state paths look like "m/<param path>" / "v/<...>" / "step"
+        for prefix in ("m/", "v/", "mom/", "v/"):
+            if name.startswith(prefix):
+                pname = name[len(prefix):]
+                sh = flat_params.get(pname)
+                if sh is not None and len(sh.spec) == leaf.ndim:
+                    return sh
+        return NamedSharding(mesh, P())
+
+    return tree_map_with_name(spec, opt_state)
+
+
+# ---------------------------------------------------------------------------
+# activations / batches / caches
+# ---------------------------------------------------------------------------
+
+
+def batch_shardings(
+    mesh: Mesh,
+    batch,
+    *,
+    data_axis: Axis = "data",
+    model_axis: Axis = "model",
+    contrib_axes: Tuple[Axis, ...] = (),
+):
+    """tokens/labels [B, S]: batch over data axes; sequence over data if the
+    batch doesn't divide (long-context, batch=1).  positions [3, B, S]
+    (M-RoPE) and frames/extra_embeds [B, N, D] handled likewise."""
+
+    def spec(name: str, leaf):
+        shape = leaf.shape
+        lead = tuple(contrib_axes)
+        body = shape[len(lead):]
+        if name.endswith("positions") and len(body) == 3:
+            want = (None, data_axis, None)
+        elif len(body) == 3:  # frames / extra_embeds [B, N, D]
+            want = (data_axis, None, None)
+        elif len(body) == 2:
+            B, S = body
+            if B % _axis_size(mesh, data_axis) == 0:
+                want = (data_axis, None)
+            else:
+                want = (None, data_axis)
+        elif len(body) == 1:
+            want = (data_axis,)
+        else:
+            want = (None,) * len(body)
+        fitted = _fit(mesh, body, want)
+        return NamedSharding(mesh, P(*(list(lead) + list(fitted))))
+
+    return tree_map_with_name(spec, batch)
+
+
+def cache_shardings(
+    mesh: Mesh,
+    cache,
+    cfg: ArchConfig,
+    *,
+    data_axis: Axis = "data",
+    model_axis: Axis = "model",
+    contrib_axes: Tuple[Axis, ...] = (),
+):
+    """Decode-state sharding.
+
+    KV k/v [B, S, Hkv, hd]: batch->data, heads->model (fallback hd->model;
+    fallback seq->data when batch=1: context-parallel cache).
+    Mamba h [B, di, ds] & conv [B, dc-1, di]: channels->model.
+    RWKV S [B, H, hd, hd]: heads->model; shifts [B, 1, D]: D->model.
+    """
+
+    def spec(name: str, leaf):
+        lead: Tuple[Axis, ...] = tuple(contrib_axes)
+        if "scan/" in name or name.startswith("scan"):
+            lead = lead + (None,)
+        shape = leaf.shape[len(lead):]
+        dsz = _axis_size(mesh, data_axis)
+        msz = _axis_size(mesh, model_axis)
+        want: Sequence[Axis]
+        leafname = name.rsplit("/", 1)[-1]
+        if leafname in ("k", "v", "xk", "xv") and len(shape) == 4:
+            B, S, H, hd = shape
+            b_ax = data_axis if B % dsz == 0 else None
+            if H % msz == 0:
+                want = (b_ax, None if b_ax else data_axis, model_axis, None)
+            elif hd % msz == 0:
+                want = (b_ax, None if b_ax else data_axis, None, model_axis)
+            else:
+                want = (b_ax, None if b_ax else data_axis, None, None)
+        elif leafname == "h" and len(shape) == 3:  # mamba [B, di, ds]
+            want = (data_axis if shape[0] % dsz == 0 else None, model_axis, None)
+        elif leafname == "conv" and len(shape) == 3:  # [B, dc-1, di]
+            want = (data_axis if shape[0] % dsz == 0 else None, None, model_axis)
+        elif leafname == "S" and len(shape) == 4:  # rwkv [B, H, hd, hd]
+            want = (data_axis if shape[0] % dsz == 0 else None, model_axis, None, None)
+        elif leafname in ("shift", "cm_shift") and len(shape) == 3:
+            want = (data_axis if shape[0] % dsz == 0 else None, None, model_axis)
+        else:
+            want = (None,) * len(shape)
+        fitted = _fit(mesh, shape, want)
+        return NamedSharding(mesh, P(*(list(lead) + list(fitted))))
+
+    return tree_map_with_name(spec, cache)
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

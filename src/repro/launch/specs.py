@@ -1,0 +1,76 @@
+"""Abstract input/state specs for dry-run lowering (ShapeDtypeStruct only —
+never allocates).
+
+``input_specs(cfg, shape)`` follows the assignment contract: for training
+steps {tokens, ...}; for serving the request batch (+ KV/state cache).  The
+modality stubs surface here: whisper gets precomputed frame embeddings,
+qwen2-vl gets patch embeddings + 3-stream M-RoPE position ids.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, InputShape
+from repro.models import whisper as W
+from repro.models.transformer import init_cache, init_lm
+from repro.optim.optimizers import Optimizer
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape) -> Dict[str, Any]:
+    """Model-input stand-ins for one step of the given input shape.
+
+    train/prefill: the full [B, S] token batch (+ modality extras).
+    decode: one new token per sequence: tokens [B, 1] (+ cache_index).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if shape.is_decode:
+        batch: Dict[str, Any] = {"tokens": _sds((B, 1), jnp.int32)}
+        return batch
+    batch = {"tokens": _sds((B, S), jnp.int32)}
+    if cfg.rope.kind == "mrope":
+        batch["positions"] = _sds((3, B, S), jnp.int32)
+    if cfg.family == "vlm" and cfg.num_frontend_tokens:
+        batch["extra_embeds"] = _sds((B, cfg.num_frontend_tokens, cfg.d_model), cdt)
+    if cfg.is_encoder_decoder:
+        batch["frames"] = _sds((B, cfg.encoder_seq, cfg.d_model), cdt)
+    return batch
+
+
+def abstract_params(cfg: ArchConfig):
+    if cfg.is_encoder_decoder:
+        return jax.eval_shape(lambda: W.init_whisper(cfg, jax.random.PRNGKey(0)))
+    return jax.eval_shape(lambda: init_lm(cfg, jax.random.PRNGKey(0)))
+
+
+def abstract_state(cfg: ArchConfig, optimizer: Optimizer):
+    params = abstract_params(cfg)
+    opt = jax.eval_shape(optimizer.init, params)
+    return {"params": params, "opt": opt}
+
+
+def abstract_cache(cfg: ArchConfig, shape: InputShape):
+    """Decode-state stand-in: KV/state cache of length seq_len."""
+    B, S = shape.global_batch, shape.seq_len
+    cdt = jnp.dtype(cfg.compute_dtype)
+    if cfg.is_encoder_decoder:
+        return jax.eval_shape(lambda: W.init_whisper_cache(cfg, B, S, cdt))
+    return jax.eval_shape(lambda: init_cache(cfg, B, S, cdt))
+
+
+def auto_microbatches(cfg: ArchConfig, shape: InputShape, dp_size: int) -> int:
+    """Gradient-accumulation factor: drive per-device microbatch to ~1
+    sequence for the big-activation training shape."""
+    if shape.kind != "train":
+        return 1
+    if cfg.microbatches:
+        return cfg.microbatches
+    per_dp = shape.global_batch // max(dp_size, 1)
+    return max(1, min(16, per_dp))

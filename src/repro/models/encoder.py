@@ -1,0 +1,82 @@
+"""RoBERTa-style bidirectional encoder + classification heads — the model
+family the paper actually runs ColD Fusion on (RoBERTa-base, §4.2).
+
+The laptop-scale reproduction instantiates a tiny variant of this family and
+feeds it the synthetic multitask suite.  Design notes:
+
+* ColD Fusion averages the *shared body*; each contributor keeps a private
+  per-dataset classification head (the paper's multitask baseline likewise
+  uses dedicated heads, §4.2).
+* Linear probing (paper's "ColD-Frozen", §4.4) = training only the head with
+  the body frozen — see ``repro.train.probe``.
+* Pre-LayerNorm is used (vs RoBERTa's post-LN) for optimization stability at
+  tiny scale; noted as a deviation in DESIGN.md §6.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+
+def init_encoder_body(cfg: ArchConfig, key) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 2 + cfg.num_layers)
+    params: Dict[str, Any] = {
+        "embed": L.embed_init(ks[0], cfg.vocab_size, cfg.d_model, dtype),
+        "pos": (jax.random.normal(ks[1], (cfg.max_seq_len, cfg.d_model), jnp.float32) * 0.02).astype(dtype),
+        "final_norm": L.init_norm(cfg, dtype),
+        "layers": {},
+    }
+    for i in range(cfg.num_layers):
+        k1, k2 = jax.random.split(ks[2 + i])
+        params["layers"][f"layer{i}"] = {
+            "norm1": L.init_norm(cfg, dtype),
+            "attn": L.init_attention(cfg, k1, dtype),
+            "norm2": L.init_norm(cfg, dtype),
+            "mlp": L.init_mlp(cfg, k2, dtype),
+        }
+    return params
+
+
+def encode(cfg: ArchConfig, body, tokens: jax.Array) -> jax.Array:
+    """tokens [B, S] -> hidden states [B, S, D]."""
+    cdt = jnp.dtype(cfg.compute_dtype)
+    B, S = tokens.shape
+    x = body["embed"][tokens].astype(cdt) + body["pos"][None, :S].astype(cdt)
+    for i in range(cfg.num_layers):
+        p = body["layers"][f"layer{i}"]
+        h = L.norm_fwd(cfg, p["norm1"], x)
+        out, _ = L.attention_fwd(cfg, p["attn"], h, angles=None, causal=False)
+        x = x + out
+        h2 = L.norm_fwd(cfg, p["norm2"], x)
+        x = x + L.mlp_fwd(cfg, p["mlp"], h2)
+    return L.norm_fwd(cfg, body["final_norm"], x)
+
+
+def init_cls_head(cfg: ArchConfig, key, num_classes: int) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.param_dtype)
+    k1, k2 = jax.random.split(key)
+    return {
+        "dense": L.dense_init(k1, cfg.d_model, cfg.d_model, dtype),
+        "out": L.dense_init(k2, cfg.d_model, num_classes, dtype),
+        "bias": jnp.zeros((num_classes,), dtype),
+    }
+
+
+def classify(cfg: ArchConfig, body, head, tokens: jax.Array) -> jax.Array:
+    """Sequence classification from mean-pooled hidden states -> [B, C]."""
+    h = encode(cfg, body, tokens)
+    pooled = jnp.tanh(jnp.mean(h, axis=1) @ head["dense"])
+    return pooled @ head["out"] + head["bias"]
+
+
+def mlm_logits(cfg: ArchConfig, body, tokens: jax.Array) -> jax.Array:
+    """Masked-LM logits with tied embeddings (used to 'pretrain' the tiny
+    model before the ColD experiments)."""
+    h = encode(cfg, body, tokens)
+    return h @ body["embed"].T.astype(h.dtype)

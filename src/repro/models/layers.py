@@ -1,0 +1,306 @@
+"""Shared neural-net layers: norms, activations, RoPE/M-RoPE, GQA attention,
+dense FFNs.  Pure functional style — ``init_*`` returns a params pytree,
+``*_fwd`` applies it.  No flax.
+"""
+from __future__ import annotations
+
+import math
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, RopeCfg
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(cfg: ArchConfig, dtype):
+    p = {"scale": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def norm_fwd(cfg: ArchConfig, p, x):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + cfg.norm_eps) * p["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(rope: RopeCfg, head_dim: int) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (rope.theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def rope_angles(rope: RopeCfg, positions: jax.Array, head_dim: int) -> jax.Array:
+    """positions [..., S] -> angles [..., S, head_dim//2] (f32)."""
+    inv = rope_freqs(rope, head_dim)
+    pos = positions.astype(jnp.float32) / rope.scaling
+    return pos[..., None] * inv
+
+
+def apply_rope(x: jax.Array, angles: jax.Array) -> jax.Array:
+    """x: [B, S, H, hd]; angles: [B, S, hd//2] (already M-RoPE-merged if any)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = jnp.cos(angles)[..., None, :].astype(x.dtype)  # [B,S,1,half]
+    sin = jnp.sin(angles)[..., None, :].astype(x.dtype)
+    # rotate-half convention (HF Llama/Mistral/Gemma)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def mrope_merge_angles(rope: RopeCfg, positions_3d: jax.Array, head_dim: int) -> jax.Array:
+    """Qwen2-VL M-RoPE.
+
+    positions_3d: [3, B, S] (temporal, height, width position ids).  head_dim/2
+    frequency slots are split into ``mrope_sections`` (t, h, w) chunks, each
+    driven by its own position stream.  Text tokens carry identical t/h/w ids,
+    which reduces to ordinary RoPE — the stub frontend supplies patch ids.
+    Returns angles [B, S, head_dim//2].
+    """
+    inv = rope_freqs(rope, head_dim)  # [half]
+    sections = rope.mrope_sections
+    assert sum(sections) == head_dim // 2, (sections, head_dim)
+    pos = positions_3d.astype(jnp.float32) / rope.scaling  # [3,B,S]
+    ang_all = pos[..., None] * inv  # [3,B,S,half]
+    chunks = []
+    start = 0
+    for axis, sec in enumerate(sections):
+        chunks.append(ang_all[axis, ..., start : start + sec])
+        start += sec
+    return jnp.concatenate(chunks, axis=-1)  # [B,S,half]
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA, causal, optional sliding window, optional cross-attn)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(cfg: ArchConfig, key, dtype, cross: bool = False):
+    d, hd = cfg.d_model, cfg.head_dim
+    nq, nkv = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, nq * hd, dtype),
+        "wk": dense_init(ks[1], d, nkv * hd, dtype),
+        "wv": dense_init(ks[2], d, nkv * hd, dtype),
+        "wo": dense_init(ks[3], nq * hd, d, dtype),
+    }
+
+
+# Query lengths at or above this threshold use the blocked (XLA-flash) path
+# so [Sq, Sk] score matrices never materialize in full.
+CHUNKED_THRESHOLD = 2048
+CHUNK_Q = 512
+
+# §Perf lever (EXPERIMENTS.md): when enabled, sliding-window layers only
+# score keys inside [q0 - window, q0 + chunk) instead of the full key range —
+# exact same outputs, ~Sk/(window+chunk) x less attention work.  Off by
+# default so baseline artifacts stay reproducible; perf runs set
+# REPRO_OPT_WINDOW=1.
+OPT_WINDOW_SLICING = os.environ.get("REPRO_OPT_WINDOW", "0") == "1"
+
+
+def _sdpa_chunked(q, k, v, *, causal: bool, window: Optional[int], q_offset, chunk=CHUNK_Q):
+    """Blocked attention: lax.scan over query chunks; scores materialize only
+    per [chunk, Sk] block.  Same semantics as ``_sdpa`` (the pure-XLA analog
+    of kernels/flash_attention.py; used where Pallas can't lower — CPU
+    dry-runs — and as the remat-friendly long-context path)."""
+    B, Sq, Hq, hd = q.shape
+    Sk = k.shape[1]
+    rep = Hq // k.shape[2]
+    nq = Sq // chunk
+    kf = jnp.repeat(k, rep, axis=2)
+    vf = jnp.repeat(v, rep, axis=2)
+    qs = jnp.moveaxis(q.reshape(B, nq, chunk, Hq, hd), 1, 0)  # [nq, B, c, H, hd]
+
+    # window-limited key width (static): only keys in (q0-window, q0+chunk]
+    # can be visible to a chunk of queries starting at q0.
+    W = Sk
+    if OPT_WINDOW_SLICING and window is not None and causal:
+        W = min(Sk, window + chunk)
+
+    def block(carry, inp):
+        qi, qb = inp
+        qf = qb.astype(jnp.float32) * (hd ** -0.5)
+        q0 = q_offset + qi * chunk
+        if W < Sk:
+            start = jnp.clip(q0 - window + 1, 0, Sk - W)
+            kw = jax.lax.dynamic_slice_in_dim(kf, start, W, axis=1)
+            vw = jax.lax.dynamic_slice_in_dim(vf, start, W, axis=1)
+            k_pos = start + jnp.arange(W)[None, :]
+        else:
+            kw, vw = kf, vf
+            k_pos = jnp.arange(Sk)[None, :]
+        scores = jnp.einsum("bqhd,bkhd->bhqk", qf, kw.astype(jnp.float32))
+        q_pos = q0 + jnp.arange(chunk)[:, None]
+        mask = jnp.ones((chunk, k_pos.shape[1]), bool)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        probs = jnp.where(jnp.isnan(probs), 0.0, probs)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), vw)
+        return carry, out
+
+    _, outs = jax.lax.scan(block, (), (jnp.arange(nq), qs))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, Hq, hd)
+
+
+def _sdpa(q, k, v, *, causal: bool, window: Optional[int], q_offset, softcap: float = 0.0,
+          bias: Optional[jax.Array] = None, k_positions: Optional[jax.Array] = None):
+    """Scaled dot-product attention with GQA broadcast.
+
+    q: [B, Sq, Hq, hd]; k/v: [B, Sk, Hkv, hd].  ``q_offset`` is the absolute
+    position of q[0] (scalar, traced ok) so that decode (Sq=1 at position P)
+    masks correctly against a longer key cache.  ``k_positions`` overrides
+    the absolute position of each key slot (ring-buffer caches; entries < 0
+    are always masked).
+    """
+    if (q.shape[1] >= CHUNKED_THRESHOLD and q.shape[1] % CHUNK_Q == 0
+            and softcap == 0.0 and bias is None and k_positions is None):
+        return _sdpa_chunked(q, k, v, causal=causal, window=window, q_offset=q_offset)
+    B, Sq, Hq, hd = q.shape
+    Hkv = k.shape[2]
+    rep = Hq // Hkv
+    qf = q.astype(jnp.float32) / math.sqrt(hd)
+    # GQA: broadcast kv heads to query heads
+    kf = jnp.repeat(k.astype(jnp.float32), rep, axis=2)
+    vf = jnp.repeat(v, rep, axis=2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)  # [B,Hq,Sq,Sk]
+    if softcap > 0.0:
+        scores = jnp.tanh(scores / softcap) * softcap
+    Sk = k.shape[1]
+    q_pos = q_offset + jnp.arange(Sq)[:, None]  # [Sq,1]
+    if k_positions is not None:
+        k_pos = k_positions[None, :]
+        mask = jnp.broadcast_to(k_pos >= 0, (Sq, Sk))
+    else:
+        k_pos = jnp.arange(Sk)[None, :]  # [1,Sk]
+        mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    if bias is not None:
+        scores = scores + bias
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), vf)
+    return out
+
+
+def attention_fwd(cfg: ArchConfig, p, x, *, angles=None, causal=True,
+                  window: Optional[int] = None, q_offset=0,
+                  kv_cache=None, cache_index=None, kv_source=None):
+    """Self- (or cross-) attention.
+
+    ``kv_cache``: optional dict {"k": [B, S_cache, Hkv, hd], "v": ...}; when
+    given together with ``cache_index`` (scalar int), new k/v are scattered at
+    that offset and attention runs over the whole cache (decode path).  If the
+    cache length equals ``window`` (< the sequence), it is treated as a
+    sliding-window RING buffer (§Perf lever REPRO_OPT_RING_CACHE): writes go
+    to ``cache_index % window`` and masking uses reconstructed positions.
+    ``kv_source``: if given, keys/values are projected from it (cross-attn)
+    and no positional rotation is applied to k.
+    Returns (out [B,Sq,D], new_cache).
+    """
+    B, Sq, _ = x.shape
+    hd, nq, nkv = cfg.head_dim, cfg.num_heads, cfg.num_kv_heads
+    q = (x @ p["wq"]).reshape(B, Sq, nq, hd)
+    src = x if kv_source is None else kv_source
+    Skv = src.shape[1]
+    k = (src @ p["wk"]).reshape(B, Skv, nkv, hd)
+    v = (src @ p["wv"]).reshape(B, Skv, nkv, hd)
+    if angles is not None:
+        q = apply_rope(q, angles)
+        if kv_source is None:
+            k = apply_rope(k, angles)
+    new_cache = None
+    k_positions = None
+    if kv_cache is not None:
+        ck, cv = kv_cache["k"], kv_cache["v"]
+        if cache_index is not None:
+            if window is not None and ck.shape[1] == window and Sq == 1:
+                # ring buffer: p(s) = i - ((i - s) mod W); unwritten slots < 0
+                slot = jnp.mod(cache_index, window)
+                ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, slot, 0, 0))
+                cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, slot, 0, 0))
+                s_idx = jnp.arange(window)
+                k_positions = cache_index - jnp.mod(cache_index - s_idx, window)
+            else:
+                ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype), (0, cache_index, 0, 0))
+                cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype), (0, cache_index, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        k, v = ck, cv
+    out = _sdpa(q, k, v, causal=causal and kv_source is None, window=window,
+                q_offset=q_offset, softcap=0.0, k_positions=k_positions)
+    out = out.reshape(B, Sq, nq * hd) @ p["wo"]
+    return out.astype(x.dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# dense FFNs
+# ---------------------------------------------------------------------------
+
+
+def init_glu(cfg: ArchConfig, key, dtype, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], d, f, dtype),
+        "w_up": dense_init(ks[1], d, f, dtype),
+        "w_down": dense_init(ks[2], f, d, dtype),
+    }
+
+
+def glu_fwd(cfg: ArchConfig, p, x):
+    act = activation(cfg.act)
+    return (act(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+
+
+def init_mlp(cfg: ArchConfig, key, dtype, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 2)
+    return {"w_up": dense_init(ks[0], d, f, dtype), "w_down": dense_init(ks[1], f, d, dtype)}
+
+
+def mlp_fwd(cfg: ArchConfig, p, x):
+    act = activation(cfg.act)
+    return act(x @ p["w_up"]) @ p["w_down"]

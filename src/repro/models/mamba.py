@@ -1,0 +1,112 @@
+"""Mamba (selective SSM) mixer — the recurrent 7/8 of Jamba's layer stack.
+
+Faithful to Gu & Dao 2023 / Jamba (arXiv:2403.19887): input-dependent
+(Δ, B, C), depthwise causal conv, gated output.  The sequence dimension is
+processed with ``lax.scan`` (TPU-friendly streaming recurrence; the chunked
+parallel-scan variant is a §Perf lever).  Decode keeps an O(1) state:
+(h [B, d_inner, d_state], conv window [B, d_conv-1, d_inner]).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init
+
+
+def d_inner(cfg: ArchConfig) -> int:
+    return cfg.ssm.expand * cfg.d_model
+
+
+def init_mamba(cfg: ArchConfig, key, dtype):
+    d, di, ds = cfg.d_model, d_inner(cfg), cfg.ssm.d_state
+    dtr, dc = cfg.ssm.dt_rank, cfg.ssm.d_conv
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A
+    A = jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (dc, di), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], di, dtr + 2 * ds, dtype),
+        "dt_proj": dense_init(ks[3], dtr, di, dtype),
+        "dt_bias": jnp.full((di,), -4.6, dtype),  # softplus^-1(0.01)
+        "A_log": jnp.log(A).astype(jnp.float32),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], di, d, dtype),
+    }
+
+
+def _ssm_inputs(cfg: ArchConfig, p, xc):
+    """xc: [B, S, di] post-conv activations -> (dA, dBx, C) scan inputs."""
+    ds, dtr = cfg.ssm.d_state, cfg.ssm.dt_rank
+    proj = xc @ p["x_proj"]  # [B,S,dtr+2ds]
+    dt_low, Bmat, Cmat = jnp.split(proj.astype(jnp.float32), [dtr, dtr + ds], axis=-1)
+    dt = jax.nn.softplus(dt_low @ p["dt_proj"].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"])  # [di, ds]
+    dA = jnp.exp(dt[..., None] * A)  # [B,S,di,ds]
+    # dt*x [B,S,di] outer B [B,S,ds] -> [B,S,di,ds]
+    dBx = (dt * xc.astype(jnp.float32))[..., :, None] * Bmat[..., None, :]
+    return dA, dBx, Cmat
+
+
+def _conv(cfg: ArchConfig, p, x, prepend=None):
+    """Depthwise causal conv over time.  x: [B,S,di]."""
+    dc = cfg.ssm.d_conv
+    pad = x[:, :0] if prepend is not None else jnp.zeros_like(x[:, :1]).repeat(dc - 1, axis=1)
+    ctx = jnp.concatenate([prepend if prepend is not None else pad, x], axis=1)
+    # sliding window dot with conv_w [dc, di]
+    out = jnp.zeros_like(x)
+    for i in range(dc):
+        out = out + ctx[:, i : i + x.shape[1]] * p["conv_w"][i]
+    return jax.nn.silu(out + p["conv_b"])
+
+
+def mamba_fwd(cfg: ArchConfig, p, x, *, state=None, return_state=False):
+    """x: [B, S, D] -> [B, S, D].
+
+    ``state``: optional dict {"h": [B,di,ds] f32, "conv": [B,dc-1,di]} for
+    incremental decoding (S may be 1).  Returns (y, new_state|None).
+    """
+    B, S, _ = x.shape
+    di, ds, dc = d_inner(cfg), cfg.ssm.d_state, cfg.ssm.d_conv
+    xz = x @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)  # [B,S,di] each
+    prepend = state["conv"] if state is not None else None
+    xc = _conv(cfg, p, xi, prepend=prepend)
+    dA, dBx, Cmat = _ssm_inputs(cfg, p, xc)  # [B,S,di,ds]x2, [B,S,ds]
+
+    h0 = state["h"] if state is not None else jnp.zeros((B, di, ds), jnp.float32)
+
+    def step(h, inp):
+        dA_t, dBx_t, C_t = inp  # [B,di,ds],[B,di,ds],[B,ds]
+        h = dA_t * h + dBx_t
+        y = jnp.einsum("bns,bs->bn", h, C_t)
+        return h, y
+
+    inputs = (
+        jnp.swapaxes(dA, 0, 1),
+        jnp.swapaxes(dBx, 0, 1),
+        jnp.swapaxes(Cmat, 0, 1),
+    )
+    hT, ys = jax.lax.scan(step, h0, inputs)
+    y = jnp.swapaxes(ys, 0, 1)  # [B,S,di]
+    y = y + xc.astype(jnp.float32) * p["D"]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    new_state = None
+    if return_state:
+        conv_ctx = jnp.concatenate(
+            [prepend if prepend is not None else jnp.zeros((B, dc - 1, di), x.dtype), xi], axis=1
+        )[:, -(dc - 1) :]
+        new_state = {"h": hT, "conv": conv_ctx}
+    return out, new_state
+
+
+def init_mamba_state(cfg: ArchConfig, batch: int, dtype):
+    di, ds, dc = d_inner(cfg), cfg.ssm.d_state, cfg.ssm.d_conv
+    return {
+        "h": jnp.zeros((batch, di, ds), jnp.float32),
+        "conv": jnp.zeros((batch, dc - 1, di), dtype),
+    }

@@ -1,0 +1,144 @@
+"""Mixture-of-Experts FFN (GShard/Switch-style top-k capacity routing).
+
+Two routing implementations:
+
+* ``gshard`` — one-hot dispatch/combine einsums with a per-expert capacity.
+  This is the pjit-friendly formulation: sharding the expert dimension over
+  the ``model``/``expert`` mesh axis makes GSPMD insert the all-to-alls, and
+  compute scales with top-k (not num_experts).
+* ``dense``  — every expert on every token, combined by router probs.  Only
+  for tiny smoke/CPU configs and as the correctness oracle for routing tests.
+
+The auxiliary load-balance loss follows Switch Transformer:
+``aux = E * sum_e f_e * p_e`` with f_e the fraction of tokens dispatched to
+expert e (top-1 assignment) and p_e the mean router prob.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import activation, dense_init
+
+# §Perf lever: route gshard-configured layers through the sort/gather
+# implementation (EXPERIMENTS.md §Perf); off by default.
+OPT_MOE_SORT = os.environ.get("REPRO_OPT_MOE_SORT", "0") == "1"
+
+
+def init_moe(cfg: ArchConfig, key, dtype):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.moe.num_experts
+    ks = jax.random.split(key, 4)
+
+    def expert_stack(k, d_in, d_out):
+        keys = jax.random.split(k, e)
+        return jnp.stack([dense_init(ki, d_in, d_out, dtype) for ki in keys])
+
+    return {
+        "router": dense_init(ks[0], d, e, dtype),
+        "w_gate": expert_stack(ks[1], d, f),  # [E, D, F]
+        "w_up": expert_stack(ks[2], d, f),
+        "w_down": expert_stack(ks[3], f, d),  # [E, F, D]
+    }
+
+
+def _router(cfg: ArchConfig, p, x):
+    """x: [T, D] -> (probs [T, E] f32, topk_idx [T, K], topk_w [T, K] f32)."""
+    logits = (x.astype(jnp.float32) @ p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    k = cfg.moe.experts_per_token
+    topk_w, topk_idx = jax.lax.top_k(probs, k)
+    topk_w = topk_w / jnp.sum(topk_w, axis=-1, keepdims=True)  # renormalize over top-k
+    return probs, topk_idx, topk_w
+
+
+def _expert_ffn(cfg: ArchConfig, p, xe):
+    """xe: [E, C, D] -> [E, C, D]; batched over the expert dim."""
+    act = activation(cfg.act)
+    h = act(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])) * jnp.einsum(
+        "ecd,edf->ecf", xe, p["w_up"]
+    )
+    return jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+
+
+def moe_fwd(cfg: ArchConfig, p, x):
+    """x: [B, S, D] -> (out [B, S, D], aux_loss scalar f32)."""
+    B, S, D = x.shape
+    E, K = cfg.moe.num_experts, cfg.moe.experts_per_token
+    xt = x.reshape(B * S, D)
+    probs, topk_idx, topk_w = _router(cfg, p, xt)
+    T = B * S
+
+    # Switch-style load-balance aux loss (top-1 assignment fractions).
+    top1 = topk_idx[:, 0]
+    f_e = jnp.mean(jax.nn.one_hot(top1, E, dtype=jnp.float32), axis=0)
+    p_e = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(f_e * p_e)
+
+    routing = cfg.moe.routing
+    if OPT_MOE_SORT and routing == "gshard":
+        routing = "sort"
+
+    if routing == "dense":
+        # all experts, prob-combined; oracle path
+        ye = _expert_ffn(cfg, p, jnp.broadcast_to(xt, (E, T, D)))  # [E,T,D]
+        combine = jnp.zeros((T, E), xt.dtype)
+        combine = combine.at[jnp.arange(T)[:, None], topk_idx].set(topk_w.astype(xt.dtype))
+        out = jnp.einsum("te,etd->td", combine, ye)
+        return out.reshape(B, S, D), aux
+
+    if routing == "sort":
+        # §Perf lever: gather/scatter dispatch instead of one-hot einsums.
+        # The GShard dispatch einsum costs 2·T·E·C·D FLOPs and a [T,E,C]
+        # tensor; here dispatch is a pure gather (x[idx]) and combine a pure
+        # gather of expert outputs — zero matmul FLOPs beyond the experts
+        # themselves.  Same capacity semantics (over-capacity tokens drop).
+        capacity = max(int(cfg.moe.capacity_factor * T * K / E), K)
+        onehot = jax.nn.one_hot(topk_idx, E, dtype=jnp.int32)  # [T,K,E]
+        flat = onehot.reshape(T * K, E)
+        pos = (jnp.cumsum(flat, axis=0) * flat - 1).reshape(T, K, E)
+        slot = jnp.take_along_axis(pos, topk_idx[..., None], axis=-1)[..., 0]  # [T,K]
+        keep = (slot >= 0) & (slot < capacity)
+        slot_c = jnp.clip(slot, 0, capacity - 1)
+        # token index table per (expert, slot): scatter token ids
+        idx = jnp.full((E, capacity), T, jnp.int32)  # T = sentinel -> zero row
+        tok = jnp.broadcast_to(jnp.arange(T)[:, None], (T, K))
+        # dropped (t, k) write out-of-range and are discarded by mode="drop"
+        idx = idx.at[topk_idx, jnp.where(keep, slot_c, capacity)].set(tok, mode="drop")
+        x_pad = jnp.concatenate([xt, jnp.zeros((1, D), xt.dtype)], axis=0)
+        xe = x_pad[idx]  # [E, C, D] gather
+        ye = _expert_ffn(cfg, p, xe)  # [E, C, D]
+        ye_pad = jnp.concatenate([ye, jnp.zeros((E, 1, D), ye.dtype)], axis=1)
+        gath = ye_pad[topk_idx, jnp.where(keep, slot_c, capacity)]  # [T,K,D]
+        out = jnp.einsum("tk,tkd->td", topk_w.astype(xt.dtype), gath)
+        return out.reshape(B, S, D), aux
+
+    # --- GShard capacity routing -------------------------------------
+    capacity = int(cfg.moe.capacity_factor * T * K / E)
+    capacity = max(capacity, K)
+    # position of each (token, k) within its expert's queue
+    onehot = jax.nn.one_hot(topk_idx, E, dtype=jnp.int32)  # [T,K,E]
+    flat = onehot.reshape(T * K, E)
+    pos_in_expert = jnp.cumsum(flat, axis=0) * flat - 1  # [T*K,E]
+    pos = pos_in_expert.reshape(T, K, E)
+    within_cap = (pos >= 0) & (pos < capacity)
+    # dispatch tensor [T, E, C]
+    dispatch = jnp.zeros((T, E, capacity), x.dtype)
+    tok = jnp.broadcast_to(jnp.arange(T)[:, None], (T, K))
+    exp = topk_idx
+    slot = jnp.clip(jnp.take_along_axis(pos, topk_idx[..., None], axis=-1)[..., 0], 0, capacity - 1)
+    keep = within_cap.any(axis=-1) & jnp.take_along_axis(
+        within_cap, topk_idx[..., None], axis=-1
+    )[..., 0]
+    dispatch = dispatch.at[tok, exp, slot].add(keep.astype(x.dtype))
+    # combine weights: same sparsity as dispatch scaled by router weight
+    w_full = jnp.zeros((T, E), jnp.float32)
+    w_full = w_full.at[tok, exp].add(jnp.where(keep, topk_w, 0.0))
+    combine = dispatch * w_full[..., None].astype(x.dtype)  # [T,E,C]
+
+    xe = jnp.einsum("td,tec->ecd", xt, dispatch)  # [E,C,D]
+    ye = _expert_ffn(cfg, p, xe)  # [E,C,D]
+    out = jnp.einsum("tec,ecd->td", combine, ye)
+    return out.reshape(B, S, D), aux

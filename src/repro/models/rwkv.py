@@ -1,0 +1,149 @@
+"""RWKV6 ("Finch", arXiv:2404.05892) — attention-free mixer with
+data-dependent decay, plus the RWKV channel-mix FFN.
+
+Time-mix recurrence per head (state S in R^{hd x hd}, f32):
+
+    out_t = r_t · (diag(u) k_t v_tᵀ + S_t)
+    S_t+1 = diag(w_t) S_t + k_t v_tᵀ
+
+with per-token per-channel decay w_t = exp(-exp(w0 + LoRA_w(x̄_t))) — the
+data-dependent decay that distinguishes RWKV6 from RWKV4/5.  Token-shift
+interpolation (ddlerp) is applied with data-dependent low-rank mixes.
+``lax.scan`` streams the recurrence; the blocked Pallas kernel
+(`repro.kernels.rwkv6_scan`) is the TPU hot path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import dense_init
+
+
+def num_heads(cfg: ArchConfig) -> int:
+    return cfg.d_model // cfg.ssm.head_dim
+
+
+def _lora_init(key, d: int, r: int, dtype):
+    k1, k2 = jax.random.split(key)
+    return {"a": dense_init(k1, d, r, dtype), "b": (jax.random.normal(k2, (r, d), jnp.float32) * 0.01).astype(dtype)}
+
+
+def _lora(p, x):
+    return jnp.tanh(x @ p["a"]) @ p["b"]
+
+
+def init_time_mix(cfg: ArchConfig, key, dtype):
+    d, r = cfg.d_model, cfg.ssm.decay_lora
+    ks = jax.random.split(key, 12)
+    H, hd = num_heads(cfg), cfg.ssm.head_dim
+    return {
+        "mu": (jax.random.uniform(ks[0], (5, d), jnp.float32)).astype(dtype),  # static lerp base (w,k,v,r,g)
+        "lora_mix": _lora_init(ks[1], d, 32, dtype),  # shared data-dependent mix delta
+        "lora_w": _lora_init(ks[2], d, r, dtype),
+        "w0": jnp.full((d,), -6.0, jnp.float32),
+        "u": (jax.random.normal(ks[3], (H, hd), jnp.float32) * 0.1),  # "bonus" for current token
+        "wr": dense_init(ks[4], d, d, dtype),
+        "wk": dense_init(ks[5], d, d, dtype),
+        "wv": dense_init(ks[6], d, d, dtype),
+        "wg": dense_init(ks[7], d, d, dtype),
+        "wo": dense_init(ks[8], d, d, dtype),
+        "ln_scale": jnp.ones((d,), dtype),  # per-head group norm
+        "ln_bias": jnp.zeros((d,), dtype),
+    }
+
+
+def _token_shift(x, last=None):
+    """Previous-token features; ``last`` [B,1,D] carries decode state."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def _ddlerp(p, x, xx):
+    """Data-dependent lerp between current (x) and shifted (xx) features."""
+    base = xx + (x - xx) * p["mu"][0].astype(x.dtype)  # coarse mix for the delta net
+    delta = _lora(p["lora_mix"], base)  # [B,S,D]
+    mixes = []
+    for i in range(5):
+        m = p["mu"][i].astype(x.dtype) + delta
+        mixes.append(xx + (x - xx) * m)
+    return mixes  # order: w,k,v,r,g
+
+
+def time_mix_fwd(cfg: ArchConfig, p, x, *, state=None, return_state=False):
+    """x: [B,S,D] -> (y [B,S,D], new_state).  state={"S":[B,H,hd,hd] f32,
+    "shift":[B,1,D]}."""
+    B, S, D = x.shape
+    H, hd = num_heads(cfg), cfg.ssm.head_dim
+    last = state["shift"] if state is not None else None
+    xx = _token_shift(x, last)
+    xw, xk, xv, xr, xg = _ddlerp(p, x, xx)
+
+    r = (xr @ p["wr"]).reshape(B, S, H, hd)
+    k = (xk @ p["wk"]).reshape(B, S, H, hd)
+    v = (xv @ p["wv"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(xg @ p["wg"])
+    # data-dependent decay in (0,1): exp(-exp(.))
+    w = jnp.exp(-jnp.exp(p["w0"] + _lora(p["lora_w"], xw).astype(jnp.float32)))
+    w = w.reshape(B, S, H, hd)
+    u = p["u"]  # [H,hd]
+
+    S0 = state["S"] if state is not None else jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    def step(Sm, inp):
+        r_t, k_t, v_t, w_t = inp  # [B,H,hd] each
+        kv = k_t[..., :, None] * v_t[..., None, :]  # [B,H,hd,hd]
+        y = jnp.einsum("bhi,bhij->bhj", r_t, u[None, :, :, None] * kv + Sm)
+        Sm = w_t[..., :, None] * Sm + kv
+        return Sm, y
+
+    inputs = tuple(
+        jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (r, k, v, w)
+    )  # [S,B,H,hd]
+    ST, ys = jax.lax.scan(step, S0, inputs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, D)  # [B,S,D]
+
+    # per-head group norm
+    yh = y.reshape(B, S, H, hd)
+    mu = jnp.mean(yh, axis=-1, keepdims=True)
+    var = jnp.var(yh, axis=-1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + 64e-5)
+    y = yh.reshape(B, S, D) * p["ln_scale"].astype(jnp.float32) + p["ln_bias"].astype(jnp.float32)
+
+    out = (y.astype(x.dtype) * g) @ p["wo"]
+    new_state = None
+    if return_state:
+        new_state = {"S": ST, "shift": x[:, -1:]}
+    return out, new_state
+
+
+def init_channel_mix(cfg: ArchConfig, key, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d,), 0.5, dtype),
+        "mu_r": jnp.full((d,), 0.5, dtype),
+        "wk": dense_init(ks[0], d, f, dtype),
+        "wv": dense_init(ks[1], f, d, dtype),
+        "wr": dense_init(ks[2], d, d, dtype),
+    }
+
+
+def channel_mix_fwd(cfg: ArchConfig, p, x, *, last=None, return_state=False):
+    xx = _token_shift(x, last)
+    xk = xx + (x - xx) * p["mu_k"]
+    xr = xx + (x - xx) * p["mu_r"]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    out = jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"])
+    return (out, x[:, -1:]) if return_state else (out, None)
+
+
+def init_rwkv_state(cfg: ArchConfig, batch: int, dtype):
+    H, hd = num_heads(cfg), cfg.ssm.head_dim
+    return {
+        "S": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "shift": jnp.zeros((batch, 1, cfg.d_model), dtype),
+        "cm_shift": jnp.zeros((batch, 1, cfg.d_model), dtype),
+    }

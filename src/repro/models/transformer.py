@@ -1,0 +1,293 @@
+"""Composable decoder LM.
+
+A single stack covers the dense / MoE / SSM / hybrid / VLM families: the
+per-layer :class:`BlockCfg` pattern selects the mixer (GQA attention with
+optional sliding window, Mamba, RWKV6 time-mix) and FFN (SwiGLU, MLP, MoE,
+RWKV channel-mix) of each layer.
+
+Layers are grouped into repeating *periods* (the pattern) and the full
+periods are executed with ``lax.scan`` over stacked parameters — compile
+time and HLO size scale with the pattern length, not ``num_layers`` (the
+MaxText-style scan-over-layers idiom).  The remainder layers (when
+``num_layers % period != 0``) run unrolled.
+
+Decode-time state (attention KV caches, Mamba/RWKV recurrent states) is
+stacked the same way and threaded through the scan.
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, BlockCfg
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import moe as MOE
+from repro.models import rwkv as R
+
+# §Perf lever (EXPERIMENTS.md §Perf): window-sized ring-buffer KV caches for
+# sliding-window layers; off by default for baseline reproducibility.
+RING_CACHE = os.environ.get("REPRO_OPT_RING_CACHE", "0") == "1"
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(cfg: ArchConfig, blk: BlockCfg, key, dtype) -> Dict[str, Any]:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"norm1": L.init_norm(cfg, dtype), "norm2": L.init_norm(cfg, dtype)}
+    if blk.mixer == "attn":
+        p["attn"] = L.init_attention(cfg, k1, dtype)
+    elif blk.mixer == "mamba":
+        p["mamba"] = M.init_mamba(cfg, k1, dtype)
+    elif blk.mixer == "rwkv":
+        p["rwkv"] = R.init_time_mix(cfg, k1, dtype)
+    else:
+        raise ValueError(f"unknown mixer {blk.mixer!r}")
+    if blk.ffn == "glu":
+        p["glu"] = L.init_glu(cfg, k2, dtype)
+    elif blk.ffn == "mlp":
+        p["mlp"] = L.init_mlp(cfg, k2, dtype)
+    elif blk.ffn == "moe":
+        p["moe"] = MOE.init_moe(cfg, k2, dtype)
+    elif blk.ffn == "rwkv_cm":
+        p["rwkv_cm"] = R.init_channel_mix(cfg, k2, dtype)
+    else:
+        raise ValueError(f"unknown ffn {blk.ffn!r}")
+    return p
+
+
+def split_layers(cfg: ArchConfig) -> Tuple[int, int]:
+    """(n_full_periods, n_tail_layers)."""
+    return cfg.num_layers // cfg.period, cfg.num_layers % cfg.period
+
+
+def init_lm(cfg: ArchConfig, key) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.param_dtype)
+    n_full, n_tail = split_layers(cfg)
+    keys = jax.random.split(key, 3)
+    params: Dict[str, Any] = {
+        "embed": L.embed_init(keys[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": L.init_norm(cfg, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(keys[1], cfg.d_model, cfg.vocab_size, dtype)
+
+    lkeys = jax.random.split(keys[2], cfg.num_layers)
+    scan_params: Dict[str, Any] = {}
+    for pos, blk in enumerate(cfg.pattern):
+        if n_full == 0:
+            break
+        per_layer = [
+            _init_block(cfg, blk, lkeys[rep * cfg.period + pos], dtype) for rep in range(n_full)
+        ]
+        scan_params[f"pos{pos}"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per_layer)
+    params["scan"] = scan_params
+    tail: Dict[str, Any] = {}
+    for t in range(n_tail):
+        li = n_full * cfg.period + t
+        tail[f"layer{li}"] = _init_block(cfg, cfg.blocks[li], lkeys[li], dtype)
+    params["tail"] = tail
+    return params
+
+
+# ---------------------------------------------------------------------------
+# caches (decode state)
+# ---------------------------------------------------------------------------
+
+
+def _init_block_cache(cfg: ArchConfig, blk: BlockCfg, batch: int, max_len: int, dtype):
+    if blk.mixer == "attn":
+        hd, nkv = cfg.head_dim, cfg.num_kv_heads
+        length = max_len
+        # §Perf lever: sliding-window layers keep a ring buffer of exactly
+        # `window` slots (mixtral long_500k: 524288 -> 4096 per layer).
+        if RING_CACHE and blk.window is not None:
+            length = min(max_len, blk.window)
+        return {
+            "k": jnp.zeros((batch, length, nkv, hd), dtype),
+            "v": jnp.zeros((batch, length, nkv, hd), dtype),
+        }
+    if blk.mixer == "mamba":
+        return M.init_mamba_state(cfg, batch, dtype)
+    if blk.mixer == "rwkv":
+        return R.init_rwkv_state(cfg, batch, dtype)
+    raise ValueError(blk.mixer)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None) -> Dict[str, Any]:
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    n_full, n_tail = split_layers(cfg)
+    cache: Dict[str, Any] = {"scan": {}, "tail": {}}
+    for pos, blk in enumerate(cfg.pattern):
+        if n_full == 0:
+            break
+        one = _init_block_cache(cfg, blk, batch, max_len, dtype)
+        cache["scan"][f"pos{pos}"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n_full,) + x.shape).copy(), one
+        )
+    for t in range(n_tail):
+        li = n_full * cfg.period + t
+        cache["tail"][f"layer{li}"] = _init_block_cache(cfg, cfg.blocks[li], batch, max_len, dtype)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _rope_angles(cfg: ArchConfig, positions, seq: int, batch: int):
+    """Pre-compute rotation angles for every distinct theta in the pattern.
+
+    Returns {theta: [B, S, head_dim//2]} or None for rope-free models.
+    """
+    if cfg.rope.kind == "none":
+        return None
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(seq)[None], (batch, seq))
+    if cfg.rope.kind == "mrope":
+        if positions.ndim == 2:  # plain text: t=h=w
+            positions = jnp.broadcast_to(positions[None], (3,) + positions.shape)
+        ang = L.mrope_merge_angles(cfg.rope, positions, cfg.head_dim)
+        return {cfg.rope.theta: ang}
+    thetas = {blk.rope_theta or cfg.rope.theta for blk in cfg.pattern}
+    out = {}
+    for th in thetas:
+        rc = cfg.rope
+        rc = type(rc)(theta=th, kind=rc.kind, mrope_sections=rc.mrope_sections, scaling=rc.scaling)
+        out[th] = L.rope_angles(rc, positions, cfg.head_dim)
+    return out
+
+
+def _apply_block(cfg: ArchConfig, blk: BlockCfg, p, x, angles, *, cache=None,
+                 cache_index=None, q_offset):
+    """One block.  Returns (x, aux_loss, new_cache)."""
+    h = L.norm_fwd(cfg, p["norm1"], x)
+    new_cache = cache
+    if blk.mixer == "attn":
+        ang = None if angles is None else angles[blk.rope_theta or cfg.rope.theta]
+        out, kv = L.attention_fwd(
+            cfg, p["attn"], h, angles=ang, causal=True, window=blk.window,
+            q_offset=q_offset, kv_cache=cache, cache_index=cache_index,
+        )
+        if cache is not None:
+            new_cache = kv
+    elif blk.mixer == "mamba":
+        out, st = M.mamba_fwd(cfg, p["mamba"], h, state=cache, return_state=cache is not None)
+        if cache is not None:
+            new_cache = st
+    elif blk.mixer == "rwkv":
+        tm_state = None if cache is None else {"S": cache["S"], "shift": cache["shift"]}
+        out, st = R.time_mix_fwd(cfg, p["rwkv"], h, state=tm_state, return_state=cache is not None)
+        if cache is not None:
+            new_cache = dict(cache, **st)
+    x = x + out
+    h2 = L.norm_fwd(cfg, p["norm2"], x)
+    aux = jnp.zeros((), jnp.float32)
+    if blk.ffn == "glu":
+        f = L.glu_fwd(cfg, p["glu"], h2)
+    elif blk.ffn == "mlp":
+        f = L.mlp_fwd(cfg, p["mlp"], h2)
+    elif blk.ffn == "moe":
+        f, aux = MOE.moe_fwd(cfg, p["moe"], h2)
+    elif blk.ffn == "rwkv_cm":
+        last = None if cache is None else cache["cm_shift"]
+        f, cm = R.channel_mix_fwd(cfg, p["rwkv_cm"], h2, last=last, return_state=cache is not None)
+        if cache is not None:
+            new_cache = dict(new_cache, cm_shift=cm)
+    x = x + f
+    return x, aux, new_cache
+
+
+def forward_lm(
+    cfg: ArchConfig,
+    params,
+    tokens: jax.Array,
+    *,
+    positions: Optional[jax.Array] = None,
+    extra_embeds: Optional[jax.Array] = None,
+    cache: Optional[Dict[str, Any]] = None,
+    cache_index=None,
+) -> Tuple[jax.Array, jax.Array, Optional[Dict[str, Any]]]:
+    """Run the LM.
+
+    tokens: [B, S] int32.  ``extra_embeds`` ([B, N, D]; the stub modality
+    frontend output for vlm/audio families) overrides the embeddings of the
+    first N positions.  When ``cache`` is given the step is incremental:
+    attention attends over the cache and recurrent mixers resume their state;
+    ``cache_index`` is the write offset (== number of tokens already decoded).
+
+    Returns (logits [B, S, V], aux_loss scalar, new_cache | None).
+    """
+    B, S = tokens.shape
+    compute_dtype = jnp.dtype(cfg.compute_dtype)
+    x = params["embed"][tokens].astype(compute_dtype)
+    if cfg.scale_embed:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, compute_dtype)
+    if extra_embeds is not None:
+        n = extra_embeds.shape[1]
+        x = jnp.concatenate([extra_embeds.astype(compute_dtype), x[:, n:]], axis=1)
+
+    if positions is None and cache_index is not None:
+        base = jnp.arange(S)[None] + cache_index
+        positions = jnp.broadcast_to(base, (B, S))
+    angles = _rope_angles(cfg, positions, S, B)
+    q_offset = 0 if cache_index is None else cache_index
+
+    n_full, n_tail = split_layers(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def period_fn(carry, xs):
+        x, aux = carry
+        pparams, pcache = xs
+        new_pcache = {}
+        for pos, blk in enumerate(cfg.pattern):
+            c = None if pcache is None else pcache[f"pos{pos}"]
+            x, a, nc = _apply_block(
+                cfg, blk, pparams[f"pos{pos}"], x, angles,
+                cache=c, cache_index=cache_index, q_offset=q_offset,
+            )
+            aux = aux + a
+            if pcache is not None:
+                new_pcache[f"pos{pos}"] = nc
+        return (x, aux), (new_pcache if pcache is not None else None)
+
+    new_cache: Optional[Dict[str, Any]] = None
+    if n_full > 0:
+        scan_cache = None if cache is None else cache["scan"]
+        body = period_fn
+        if cfg.remat:
+            body = jax.checkpoint(period_fn)
+        (x, aux_total), scan_cache_out = jax.lax.scan(
+            body, (x, aux_total), (params["scan"], scan_cache)
+        )
+        if cache is not None:
+            new_cache = {"scan": scan_cache_out, "tail": {}}
+    elif cache is not None:
+        new_cache = {"scan": {}, "tail": {}}
+
+    for t in range(n_tail):
+        li = n_full * cfg.period + t
+        blk = cfg.blocks[li]
+        c = None if cache is None else cache["tail"][f"layer{li}"]
+        x, a, nc = _apply_block(
+            cfg, blk, params["tail"][f"layer{li}"], x, angles,
+            cache=c, cache_index=cache_index, q_offset=q_offset,
+        )
+        aux_total = aux_total + a
+        if cache is not None:
+            new_cache["tail"][f"layer{li}"] = nc
+
+    x = L.norm_fwd(cfg, params["final_norm"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(x.dtype)
+    if cfg.logit_softcap > 0:
+        logits = jnp.tanh(logits / cfg.logit_softcap) * cfg.logit_softcap
+    return logits, aux_total, new_cache

@@ -1,0 +1,160 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+Per the assignment carve-out, the mel-spectrogram + conv feature extractor is
+a STUB: the encoder consumes precomputed frame embeddings [B, n_frames, D]
+supplied by ``input_specs()``.  Everything downstream — encoder stack,
+decoder with self+cross attention, KV caches — is real.
+
+Whisper-tiny is 4 layers, so the stack is unrolled (no scan needed); learned
+positional embeddings, pre-LayerNorm, GELU MLPs, full (non-GQA) attention
+with kv_heads == heads.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+
+
+def _init_dec_block(cfg: ArchConfig, key, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "norm1": L.init_norm(cfg, dtype),
+        "attn": L.init_attention(cfg, k1, dtype),
+        "norm_x": L.init_norm(cfg, dtype),
+        "xattn": L.init_attention(cfg, k2, dtype),
+        "norm2": L.init_norm(cfg, dtype),
+        "mlp": L.init_mlp(cfg, k3, dtype),
+    }
+
+
+def _init_enc_block(cfg: ArchConfig, key, dtype):
+    k1, k2 = jax.random.split(key, 2)
+    return {
+        "norm1": L.init_norm(cfg, dtype),
+        "attn": L.init_attention(cfg, k1, dtype),
+        "norm2": L.init_norm(cfg, dtype),
+        "mlp": L.init_mlp(cfg, k2, dtype),
+    }
+
+
+def init_whisper(cfg: ArchConfig, key, max_target_len: Optional[int] = None) -> Dict[str, Any]:
+    dtype = jnp.dtype(cfg.param_dtype)
+    max_target_len = max_target_len or cfg.max_seq_len
+    ks = jax.random.split(key, 4 + cfg.encoder_layers + cfg.num_layers)
+    params: Dict[str, Any] = {
+        "enc": {
+            "pos": (jax.random.normal(ks[0], (cfg.encoder_seq, cfg.d_model), jnp.float32) * 0.01).astype(dtype),
+            "final_norm": L.init_norm(cfg, dtype),
+            "layers": {
+                f"layer{i}": _init_enc_block(cfg, ks[4 + i], dtype)
+                for i in range(cfg.encoder_layers)
+            },
+        },
+        "dec": {
+            "embed": L.embed_init(ks[1], cfg.vocab_size, cfg.d_model, dtype),
+            "pos": (jax.random.normal(ks[2], (max_target_len, cfg.d_model), jnp.float32) * 0.01).astype(dtype),
+            "final_norm": L.init_norm(cfg, dtype),
+            "layers": {
+                f"layer{i}": _init_dec_block(cfg, ks[4 + cfg.encoder_layers + i], dtype)
+                for i in range(cfg.num_layers)
+            },
+        },
+    }
+    return params
+
+
+def whisper_encode(cfg: ArchConfig, params, frames: jax.Array) -> jax.Array:
+    """frames: [B, n_frames, D] stub-frontend embeddings -> encoder states."""
+    enc = params["enc"]
+    x = frames.astype(jnp.dtype(cfg.compute_dtype)) + enc["pos"][None, : frames.shape[1]].astype(
+        jnp.dtype(cfg.compute_dtype)
+    )
+    for i in range(cfg.encoder_layers):
+        p = enc["layers"][f"layer{i}"]
+        h = L.norm_fwd(cfg, p["norm1"], x)
+        out, _ = L.attention_fwd(cfg, p["attn"], h, angles=None, causal=False)
+        x = x + out
+        h2 = L.norm_fwd(cfg, p["norm2"], x)
+        x = x + L.mlp_fwd(cfg, p["mlp"], h2)
+    return L.norm_fwd(cfg, enc["final_norm"], x)
+
+
+def init_whisper_cache(cfg: ArchConfig, batch: int, max_len: int, dtype=None) -> Dict[str, Any]:
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    hd, nkv = cfg.head_dim, cfg.num_kv_heads
+    cache: Dict[str, Any] = {}
+    for i in range(cfg.num_layers):
+        cache[f"layer{i}"] = {
+            "k": jnp.zeros((batch, max_len, nkv, hd), dtype),
+            "v": jnp.zeros((batch, max_len, nkv, hd), dtype),
+            # cross-attention k/v: projected once from encoder states
+            "xk": jnp.zeros((batch, cfg.encoder_seq, nkv, hd), dtype),
+            "xv": jnp.zeros((batch, cfg.encoder_seq, nkv, hd), dtype),
+        }
+    return cache
+
+
+def prime_cross_cache(cfg: ArchConfig, params, cache, enc_out: jax.Array):
+    """Project encoder states into every decoder layer's cross k/v."""
+    B, Se, _ = enc_out.shape
+    hd, nkv = cfg.head_dim, cfg.num_kv_heads
+    for i in range(cfg.num_layers):
+        p = params["dec"]["layers"][f"layer{i}"]["xattn"]
+        cache[f"layer{i}"]["xk"] = (enc_out @ p["wk"]).reshape(B, Se, nkv, hd)
+        cache[f"layer{i}"]["xv"] = (enc_out @ p["wv"]).reshape(B, Se, nkv, hd)
+    return cache
+
+
+def whisper_decode(
+    cfg: ArchConfig,
+    params,
+    tokens: jax.Array,
+    enc_out: Optional[jax.Array] = None,
+    *,
+    cache: Optional[Dict[str, Any]] = None,
+    cache_index=None,
+) -> Tuple[jax.Array, jax.Array, Optional[Dict[str, Any]]]:
+    """Decoder forward.  Either ``enc_out`` (training / prefill) or a primed
+    ``cache`` (incremental decode) must provide the cross-attention source.
+
+    Returns (logits, aux=0, new_cache).
+    """
+    dec = params["dec"]
+    B, S = tokens.shape
+    cdt = jnp.dtype(cfg.compute_dtype)
+    offset = 0 if cache_index is None else cache_index
+    pos = jax.lax.dynamic_slice_in_dim(dec["pos"], offset, S, axis=0) if cache_index is not None else dec["pos"][:S]
+    x = dec["embed"][tokens].astype(cdt) + pos[None].astype(cdt)
+    new_cache = {} if cache is not None else None
+    for i in range(cfg.num_layers):
+        p = dec["layers"][f"layer{i}"]
+        c = None if cache is None else cache[f"layer{i}"]
+        h = L.norm_fwd(cfg, p["norm1"], x)
+        self_cache = None if c is None else {"k": c["k"], "v": c["v"]}
+        out, kv = L.attention_fwd(
+            cfg, p["attn"], h, angles=None, causal=True,
+            q_offset=offset, kv_cache=self_cache, cache_index=cache_index,
+        )
+        x = x + out
+        hx = L.norm_fwd(cfg, p["norm_x"], x)
+        if c is not None:
+            # cached cross kv: attend directly
+            xout = L._sdpa(
+                (hx @ p["xattn"]["wq"]).reshape(B, S, cfg.num_heads, cfg.head_dim),
+                c["xk"], c["xv"], causal=False, window=None, q_offset=0,
+            ).reshape(B, S, cfg.num_heads * cfg.head_dim) @ p["xattn"]["wo"]
+        else:
+            xout, _ = L.attention_fwd(cfg, p["xattn"], hx, angles=None, kv_source=enc_out)
+        x = x + xout.astype(x.dtype)
+        h2 = L.norm_fwd(cfg, p["norm2"], x)
+        x = x + L.mlp_fwd(cfg, p["mlp"], h2)
+        if cache is not None:
+            new_cache[f"layer{i}"] = {"k": kv["k"], "v": kv["v"], "xk": c["xk"], "xv": c["xv"]}
+    x = L.norm_fwd(cfg, dec["final_norm"], x)
+    logits = x @ dec["embed"].T.astype(x.dtype)
+    return logits, jnp.zeros((), jnp.float32), new_cache

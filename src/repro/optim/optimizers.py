@@ -1,0 +1,187 @@
+"""Optimizers from scratch (optax is not available offline).
+
+Functional API: ``opt = make_optimizer(name, lr_schedule, **kw)`` returns an
+object with ``init(params) -> state`` and ``update(grads, state, params) ->
+(updates, state)`` where updates are to be *added* to params.
+
+Implemented: SGD(+momentum), AdamW (paper's finetuning optimizer family,
+App. B), and Adafactor (factored second moment — used by the ≥70B dry-run
+configs to keep optimizer HBM in budget).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+def constant_lr(lr: float) -> Schedule:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_decay_lr(lr: float, decay_per_step: float, min_lr: float = 0.0) -> Schedule:
+    """Paper App. B: lr 5e-5 with linear decay."""
+    return lambda step: jnp.maximum(lr * (1.0 - decay_per_step * step), min_lr)
+
+
+def warmup_cosine_lr(lr: float, warmup: int, total: int, min_frac: float = 0.1) -> Schedule:
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return sched
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    g = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (g + 1e-9))
+    return jax.tree.map(lambda x: x * scale.astype(x.dtype), tree), g
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params) -> (updates, new_state)
+    name: str = ""
+
+
+def sgd(schedule: Schedule, momentum: float = 0.0) -> Optimizer:
+    def init(params):
+        state = {"step": jnp.zeros((), jnp.int32)}
+        if momentum:
+            state["mom"] = jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), params)
+        return state
+
+    def update(grads, state, params):
+        lr = schedule(state["step"])
+        if momentum:
+            mom = jax.tree.map(
+                lambda m, g: momentum * m + g.astype(jnp.float32), state["mom"], grads
+            )
+            upd = jax.tree.map(lambda m, p: (-lr * m).astype(p.dtype), mom, params)
+            return upd, {"step": state["step"] + 1, "mom": mom}
+        upd = jax.tree.map(lambda g, p: (-lr * g).astype(p.dtype), grads, params)
+        return upd, {"step": state["step"] + 1}
+
+    return Optimizer(init, update, "sgd")
+
+
+def adamw(
+    schedule: Schedule,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+) -> Optimizer:
+    def init(params):
+        zeros = lambda: jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), params)
+        return {"step": jnp.zeros((), jnp.int32), "m": zeros(), "v": zeros()}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr = schedule(state["step"])
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state["m"], grads)
+        v = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)), state["v"], grads
+        )
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(m, v, p):
+            mh = m / bc1
+            vh = v / bc2
+            u = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+            return (-lr * u).astype(p.dtype)
+
+        updates = jax.tree.map(upd, m, v, params)
+        return updates, {"step": step, "m": m, "v": v}
+
+    return Optimizer(init, update, "adamw")
+
+
+def adafactor(
+    schedule: Schedule,
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+) -> Optimizer:
+    """Factored second-moment estimator (Shazeer & Stern 2018), no momentum.
+
+    For a [m, n] matrix the state is m + n floats instead of m*n — the memory
+    lever that lets the 72B/398B dry-runs fit optimizer state in HBM.
+    """
+
+    def _factored(x):
+        return x.ndim >= 2
+
+    def init(params):
+        def leaf_state(x):
+            if _factored(x):
+                return {
+                    "vr": jnp.zeros(x.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(x.shape[:-2] + x.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros_like(x, jnp.float32)}
+
+        return {"step": jnp.zeros((), jnp.int32), "v": jax.tree.map(leaf_state, params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr = schedule(state["step"])
+        beta = 1.0 - (step.astype(jnp.float32) + 1.0) ** (-decay)
+
+        def upd(g, s, p):
+            gf = g.astype(jnp.float32)
+            g2 = jnp.square(gf) + eps
+            if _factored(g):
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rfac = jax.lax.rsqrt(vr / jnp.mean(vr, axis=-1, keepdims=True) + eps)
+                cfac = jax.lax.rsqrt(vc + eps)
+                u = gf * rfac[..., None] * cfac[..., None, :]
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = gf * jax.lax.rsqrt(v + eps)
+                new_s = {"v": v}
+            # update clipping by RMS
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return (-lr * u).astype(p.dtype), new_s
+
+        flat_u, flat_s = [], []
+        leaves_g, treedef = jax.tree.flatten(grads)
+        leaves_s = treedef.flatten_up_to(state["v"])
+        leaves_p = jax.tree.leaves(params)
+        for g, s, p in zip(leaves_g, leaves_s, leaves_p):
+            u, ns = upd(g, s, p)
+            flat_u.append(u)
+            flat_s.append(ns)
+        updates = jax.tree.unflatten(treedef, flat_u)
+        new_v = jax.tree.unflatten(treedef, flat_s)
+        return updates, {"step": step, "v": new_v}
+
+    return Optimizer(init, update, "adafactor")
+
+
+def make_optimizer(name: str, schedule: Schedule, **kw) -> Optimizer:
+    if name == "sgd":
+        return sgd(schedule, **kw)
+    if name == "adamw":
+        return adamw(schedule, **kw)
+    if name == "adafactor":
+        return adafactor(schedule, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,62 @@
+"""Minimal batched serving engine: prefill the prompt into a KV/state cache,
+then greedy-decode one token per step via ``serve_step``.
+
+This is the host-side driver behind the decode input shapes; the examples
+use it end-to-end on reduced configs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import forward_lm, init_cache
+from repro.train.step import make_serve_step
+
+
+@dataclass
+class GenerationResult:
+    tokens: np.ndarray        # [B, prompt + generated]
+    prompt_len: int
+    steps: int
+
+
+class Engine:
+    """Greedy batched generation for the decoder-LM families."""
+
+    def __init__(self, cfg: ArchConfig, params, *, max_len: int = 256):
+        if cfg.is_encoder_decoder:
+            raise ValueError("Engine drives decoder-only archs; use whisper_decode directly")
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self._serve = jax.jit(make_serve_step(cfg))
+
+        def prefill(params, tokens, cache):
+            logits, _, cache = forward_lm(cfg, params, tokens, cache=cache,
+                                          cache_index=jnp.asarray(0, jnp.int32))
+            return logits[:, -1], cache
+
+        self._prefill = jax.jit(prefill)
+
+    def generate(self, prompts: np.ndarray, *, max_new_tokens: int = 16) -> GenerationResult:
+        """prompts: [B, P] int32 (fixed-length, packed by the caller)."""
+        B, P = prompts.shape
+        assert P + max_new_tokens <= self.max_len
+        cache = init_cache(self.cfg, B, self.max_len)
+        logits, cache = self._prefill(self.params, jnp.asarray(prompts), cache)
+        out = [jnp.argmax(logits, axis=-1)]
+        for t in range(1, max_new_tokens):
+            tok = out[-1][:, None]
+            logits, cache = self._serve(self.params, cache, tok,
+                                        jnp.asarray(P + t - 1, jnp.int32))
+            out.append(jnp.argmax(logits, axis=-1))
+        gen = np.stack([np.asarray(o) for o in out], axis=1)
+        return GenerationResult(
+            tokens=np.concatenate([prompts, gen], axis=1), prompt_len=P,
+            steps=max_new_tokens,
+        )

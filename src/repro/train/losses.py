@@ -1,0 +1,35 @@
+"""Loss functions."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array, mask=None, z_loss: float = 0.0):
+    """Mean token cross-entropy.  logits [..., V] f-any, labels [...] int."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if z_loss:
+        nll = nll + z_loss * jnp.square(logz)
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def lm_loss(logits: jax.Array, tokens: jax.Array, mask=None):
+    """Next-token prediction: logits [B,S,V] vs tokens [B,S]."""
+    shift_logits = logits[:, :-1]
+    shift_labels = tokens[:, 1:]
+    shift_mask = None if mask is None else mask[:, 1:]
+    return softmax_xent(shift_logits, shift_labels, shift_mask)
+
+
+def cls_loss(logits: jax.Array, labels: jax.Array):
+    return softmax_xent(logits, labels)
+
+
+def accuracy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))

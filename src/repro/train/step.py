@@ -1,0 +1,154 @@
+"""Train / eval / serve step builders for the decoder-LM families.
+
+``make_train_step`` returns a pure function ``(state, batch) -> (state,
+metrics)`` with gradient accumulation over microbatches via ``lax.scan`` —
+the global batch never materializes activations at once (required for
+train_4k on the big archs).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.transformer import forward_lm, init_cache
+from repro.models import whisper as W
+from repro.optim.optimizers import Optimizer, clip_by_global_norm
+from repro.train.losses import lm_loss
+
+
+def make_train_state(params, optimizer: Optimizer) -> Dict[str, Any]:
+    return {"params": params, "opt": optimizer.init(params)}
+
+
+def _lm_loss_fn(cfg: ArchConfig, params, batch, aux_weight: float):
+    if cfg.is_encoder_decoder:
+        enc_out = W.whisper_encode(cfg, params, batch["frames"])
+        logits, aux, _ = W.whisper_decode(cfg, params, batch["tokens"], enc_out)
+    else:
+        logits, aux, _ = forward_lm(
+            cfg, params, batch["tokens"],
+            positions=batch.get("positions"),
+            extra_embeds=batch.get("extra_embeds"),
+        )
+    loss = lm_loss(logits, batch["tokens"], batch.get("mask"))
+    return loss + aux_weight * aux, (loss, aux)
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    optimizer: Optimizer,
+    *,
+    microbatches: int = 1,
+    clip_norm: float = 1.0,
+    aux_weight: Optional[float] = None,
+    grad_sync: Optional[Callable] = None,
+    grad_shardings=None,
+) -> Callable:
+    """Build the jittable train step.
+
+    ``grad_sync(grads) -> grads``: hook the distribution strategy uses to
+    all-reduce gradients across the right mesh axes (sync DP: all of them;
+    ColD local step: only within-contributor axes).  Identity by default —
+    under ``jax.jit`` + sharded batch, GSPMD inserts the reduction implied by
+    the output sharding instead.
+
+    ``grad_shardings``: pytree of NamedSharding matching params.  Pins the
+    f32 gradient accumulator of the microbatch scan to the parameter layout —
+    without it GSPMD replicates the accumulator per chip (§Perf iteration 1:
+    +350 GiB peak and a 30x per-chip FLOP skew on granite-20b).
+    """
+    aux_w = cfg.moe.aux_loss_weight if aux_weight is None else aux_weight
+
+    def loss_fn(params, mb):
+        return _lm_loss_fn(cfg, params, mb, aux_w)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def _pin(grads):
+        if grad_shardings is None:
+            return grads
+        return jax.tree.map(jax.lax.with_sharding_constraint, grads, grad_shardings)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if microbatches > 1:
+            B_global = batch["tokens"].shape[0]
+
+            def mb_slice(i, x):
+                # batch dim is axis 0 except for M-RoPE positions [3, B, S]
+                axis = 0 if x.shape[0] == B_global else 1
+                mb = x.shape[axis] // microbatches
+                return jax.lax.dynamic_slice_in_dim(x, i * mb, mb, axis=axis)
+
+            def body(carry, i):
+                gacc, lacc = carry
+                mb = jax.tree.map(lambda x: mb_slice(i, x), batch)
+                (tot, (loss, aux)), grads = grad_fn(params, mb)
+                gacc = _pin(jax.tree.map(jnp.add, gacc, grads))
+                return (gacc, lacc + loss), None
+
+            g0 = _pin(jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+            (grads, loss_sum), _ = jax.lax.scan(
+                body, (g0, jnp.zeros((), jnp.float32)), jnp.arange(microbatches)
+            )
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss_sum / microbatches
+        else:
+            (tot, (loss, aux)), grads = grad_fn(params, batch)
+        if grad_sync is not None:
+            grads = grad_sync(grads)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        updates, new_opt = optimizer.update(grads, state["opt"], params)
+        new_params = jax.tree.map(jnp.add, params, updates)
+        metrics = {"loss": loss, "grad_norm": gnorm}
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ArchConfig) -> Callable:
+    def eval_step(params, batch):
+        loss, _ = _lm_loss_fn(cfg, params, batch, 0.0)[0], None
+        return loss
+
+    return eval_step
+
+
+def make_prefill_step(cfg: ArchConfig) -> Callable:
+    """Forward pass of the full prompt (inference-prefill shape): logits only,
+    no gradient, no cache materialization beyond the step output."""
+
+    def prefill_step(params, batch):
+        if cfg.is_encoder_decoder:
+            enc_out = W.whisper_encode(cfg, params, batch["frames"])
+            logits, _, _ = W.whisper_decode(cfg, params, batch["tokens"], enc_out)
+        else:
+            logits, _, _ = forward_lm(
+                cfg, params, batch["tokens"],
+                positions=batch.get("positions"),
+                extra_embeds=batch.get("extra_embeds"),
+            )
+        # return only the last-position logits (next-token distribution)
+        return logits[:, -1]
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig) -> Callable:
+    """One-token decode against a KV/state cache of length seq_len."""
+
+    def serve_step(params, cache, tokens, cache_index):
+        if cfg.is_encoder_decoder:
+            logits, _, new_cache = W.whisper_decode(
+                cfg, params, tokens, cache=cache, cache_index=cache_index
+            )
+        else:
+            logits, _, new_cache = forward_lm(
+                cfg, params, tokens, cache=cache, cache_index=cache_index
+            )
+        return logits[:, -1], new_cache
+
+    return serve_step

@@ -1,0 +1,106 @@
+"""Parse collective traffic out of (optimized) HLO text.
+
+``compiled.cost_analysis()`` has no collective-bytes entry, so §Roofline's
+collective term is derived here: scan the per-device HLO module for
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+ops and sum their operand shard sizes.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0,
+}
+
+COLLECTIVE_KINDS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute",
+)
+
+# e.g. "  %all-reduce.5 = bf16[16,512]{1,0} all-reduce(%x), replica_groups=..."
+_OP_RE = re.compile(
+    r"=\s*(?P<shape>\([^)]*\)|[a-z0-9]+\[[0-9,]*\](?:\{[^}]*\})?)\s*"
+    r"(?P<kind>all-reduce-start|all-reduce|all-gather-start|all-gather|"
+    r"reduce-scatter|all-to-all|collective-permute-start|collective-permute)\b"
+)
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z][a-z0-9]*)\[(?P<dims>[0-9,]*)\]")
+
+
+def shape_bytes(text: str) -> int:
+    """Bytes of one shape literal (or tuple of shapes)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(text):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_kind.values())
+
+    def as_dict(self) -> Dict:
+        return {
+            "total_bytes": self.total_bytes,
+            "total_count": self.total_count,
+            "bytes_by_kind": dict(self.bytes_by_kind),
+            "count_by_kind": dict(self.count_by_kind),
+        }
+
+
+def collect_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum result-shard sizes of every collective op in an HLO module.
+
+    The result shape of the op is the per-device shard the collective
+    produces — a faithful per-device traffic proxy (ring all-reduce moves
+    ~2x the shard; the roofline applies kind-specific multipliers).
+    """
+    bytes_by = defaultdict(int)
+    count_by = defaultdict(int)
+    for m in _OP_RE.finditer(hlo_text):
+        kind = m.group("kind").replace("-start", "")
+        b = shape_bytes(m.group("shape"))
+        bytes_by[kind] += b
+        count_by[kind] += 1
+    return CollectiveStats(dict(bytes_by), dict(count_by))
+
+
+# Per-kind wire-traffic multiplier relative to the op's result bytes, for a
+# ring/bidirectional-ring implementation on D participants (D large):
+#   all-reduce: result is full tensor, wire ~2x tensor
+#   all-gather: result is full gathered tensor, wire ~1x tensor
+#   reduce-scatter: result is 1/D shard, wire ~1x full tensor ≈ D*result ~
+#     (we conservatively use result*1: per-link bytes ≈ full/D * (D-1) ≈ full;
+#      full = result*D — handled by caller passing participants)
+def wire_bytes(stats: CollectiveStats, participants_by_kind: Dict[str, int] | None = None) -> int:
+    mult = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+            "all-to-all": 1.0, "collective-permute": 1.0}
+    total = 0.0
+    for kind, b in stats.bytes_by_kind.items():
+        m = mult.get(kind, 1.0)
+        if kind == "reduce-scatter" and participants_by_kind:
+            m = float(participants_by_kind.get(kind, 1))
+        total += m * b
+    return int(total)

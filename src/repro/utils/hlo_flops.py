@@ -1,0 +1,339 @@
+"""Trip-count-aware HLO analyzer.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE, so every
+``lax.scan`` (microbatch accumulation, scan-over-layers, chunked attention,
+SSM time scans) is undercounted by its trip count — useless for a roofline.
+XLA's optimized HLO annotates loops with ``backend_config=
+{"known_trip_count":{"n":...}}``; this module walks the module text,
+computing per-device totals with loop bodies scaled by their trip counts:
+
+* ``flops``       — 2·M·N·K per dot (batch dims included), recursing into
+                    fusions / called computations / while bodies;
+* ``hbm_bytes``   — Σ (operand + result bytes) of top-level fusions, dots,
+                    copies, dynamic-(update-)slices — XLA fusions are the
+                    HBM traffic units, so this approximates bytes accessed;
+* ``collectives`` — result-shard bytes per collective kind, trip-scaled
+                    (an all-reduce inside a scan fires every iteration).
+
+This is static analysis of the *optimized, partitioned* module — i.e. the
+per-chip program — exactly what §Roofline needs.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*?)\)\s*->\s*.*\{\s*$")
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\(.*?\)|[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?)\s+"
+    r"([a-z][a-z0-9\-]*)\((.*)$"
+)
+_SHAPE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS = re.compile(r"calls=%?([\w.\-]+)")
+_BODY = re.compile(r"body=%?([\w.\-]+)")
+_TO_APPLY = re.compile(r"to_apply=%?([\w.\-]+)")
+_OPERANDS = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_info(text: str) -> Tuple[int, int]:
+    """(total elements over all sub-shapes, total bytes)."""
+    elems = 0
+    byts = 0
+    for m in _SHAPE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        byts += n * _DTYPE_BYTES[dt]
+    return elems, byts
+
+
+def _first_shape_dims(text: str) -> Optional[List[int]]:
+    m = _SHAPE.search(text)
+    if not m:
+        return None
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+@dataclass
+class Op:
+    name: str
+    shape: str  # result shape text
+    opcode: str
+    rest: str   # operand list + attributes (remainder of the line)
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)  # %name -> shape text
+
+
+def parse_module(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        if not line.strip():
+            continue
+        hdr = _COMP_HDR.match(line.strip()) if ("{" in line and "->" in line) else None
+        if hdr and not line.lstrip().startswith("%param"):
+            cur = Computation(hdr.group(1))
+            comps[cur.name] = cur
+            # parameters declared in the header get their shapes from use sites
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_LINE.match(line)
+        if not m:
+            continue
+        op = Op(m.group(1), m.group(2), m.group(3), m.group(4))
+        cur.ops.append(op)
+        cur.shapes[op.name] = op.shape
+    return comps
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    """2 x (batch x M x N x K) from operand shapes + contracting dims."""
+    # operands are the first two %names in rest
+    names = _OPERANDS.findall(op.rest)
+    if len(names) < 2:
+        return 0.0
+    lhs = comp.shapes.get(names[0])
+    rhs = comp.shapes.get(names[1])
+    out_dims = _first_shape_dims(op.shape) or []
+    if lhs is None:
+        return 0.0
+    lhs_dims = _first_shape_dims(lhs) or []
+    mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+    contracting = [int(x) for x in mc.group(1).split(",")] if mc and mc.group(1) else []
+    k = 1
+    for c in contracting:
+        if c < len(lhs_dims):
+            k *= lhs_dims[c]
+    out_n = 1
+    for d in out_dims:
+        out_n *= d
+    return 2.0 * out_n * k
+
+
+@dataclass
+class Analysis:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    collective_count: Dict[str, int] = field(default_factory=lambda: defaultdict(int))
+    dynamic_whiles: int = 0  # loops without a known trip count (counted once)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+_SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+               "bitcast-convert", "reshape", "after-all", "partition-id"}
+
+
+class Analyzer:
+    def __init__(self, hlo: str):
+        self.comps = parse_module(hlo)
+        self._cache: Dict[str, Analysis] = {}
+        # entry = computation named like ENTRY (parse order: last 'main' wins)
+        self.entry = None
+        for name in self.comps:
+            if name.startswith("main"):
+                self.entry = name
+        if self.entry is None and self.comps:
+            self.entry = list(self.comps)[-1]
+
+    def analyze(self, comp_name: Optional[str] = None, *, top_level: bool = True) -> Analysis:
+        name = comp_name or self.entry
+        if name in self._cache:
+            return self._cache[name]
+        comp = self.comps.get(name)
+        out = Analysis()
+        if comp is None:
+            return out
+        self._cache[name] = out  # guard recursion
+        for op in comp.ops:
+            oc = op.opcode
+            kind = oc[:-6] if oc.endswith("-start") else oc
+            if kind in COLLECTIVES:
+                _, b = _shape_info(op.shape)
+                out.collective_bytes[kind] += b
+                out.collective_count[kind] += 1
+                continue
+            if oc == "dot":
+                out.flops += _dot_flops(op, comp)
+                _, rb = _shape_info(op.shape)
+                ob = self._operand_bytes(op, comp)
+                out.hbm_bytes += rb + ob
+                continue
+            if oc == "fusion" or oc == "call" or oc == "custom-call":
+                sub = _CALLS.search(op.rest) or _TO_APPLY.search(op.rest)
+                subname = sub.group(1) if sub else None
+                if subname and subname in self.comps:
+                    s = self.analyze(subname, top_level=False)
+                    out.flops += s.flops
+                    self._merge_coll(out, s, 1)
+                # fusion boundary = HBM traffic unit.  In-place update fusions
+                # (root dynamic-update-slice / scatter) only move the update
+                # slice, not the full aliased buffer — critical for scans that
+                # DUS into [S, ...] outputs every step.
+                out.hbm_bytes += self._fusion_traffic(op, comp, subname)
+                continue
+            if oc in ("dynamic-slice", "gather"):
+                _, rb = _shape_info(op.shape)
+                out.hbm_bytes += 2 * rb  # reads + writes only the slice
+                continue
+            if oc in ("dynamic-update-slice", "scatter"):
+                upd = self._update_operand_bytes(op, comp)
+                out.hbm_bytes += 2 * upd
+                continue
+            if oc == "while":
+                body = _BODY.search(op.rest)
+                trip_m = _TRIP.search(op.rest)
+                trips = int(trip_m.group(1)) if trip_m else 1
+                if not trip_m:
+                    out.dynamic_whiles += 1
+                if body and body.group(1) in self.comps:
+                    s = self.analyze(body.group(1), top_level=False)
+                    out.flops += trips * s.flops
+                    out.hbm_bytes += trips * s.hbm_bytes
+                    self._merge_coll(out, s, trips)
+                continue
+            if oc == "conditional":
+                for sub in _OPERANDS.findall(op.rest):
+                    if sub in self.comps:
+                        s = self.analyze(sub, top_level=False)
+                        out.flops += s.flops
+                        out.hbm_bytes += s.hbm_bytes
+                        self._merge_coll(out, s, 1)
+                continue
+            if oc in ("reduce", "sort", "scatter", "map", "reduce-window", "select-and-scatter"):
+                sub = _TO_APPLY.search(op.rest) or _CALLS.search(op.rest)
+                # elementwise apply — flops negligible; count bytes
+                _, rb = _shape_info(op.shape)
+                out.hbm_bytes += rb + self._operand_bytes(op, comp)
+                continue
+            if oc in _SKIP_BYTES:
+                continue
+            # everything else: count memory traffic only
+            _, rb = _shape_info(op.shape)
+            out.hbm_bytes += rb + self._operand_bytes(op, comp)
+        return out
+
+    def _update_operand_bytes(self, op: Op, comp: Computation) -> float:
+        """Bytes of the update operand (index 1) of a DUS/scatter op."""
+        names = _OPERANDS.findall(op.rest.split("),")[0])
+        if len(names) >= 2:
+            sh = comp.shapes.get(names[1])
+            if sh:
+                return _shape_info(sh)[1]
+        return _shape_info(op.shape)[1]
+
+    def _fusion_traffic(self, op: Op, comp: Computation, subname: Optional[str]) -> float:
+        """HBM traffic of one fusion: result write + per-operand reads, where
+
+        * an operand consumed ONLY by dynamic-slice/gather ops inside the
+          fusion is charged the slice bytes (scan xs slicing pattern);
+        * an operand that is the in-place target of a root
+          dynamic-update-slice/scatter is not read at all — the write is the
+          update slice (scan ys accumulation pattern).
+        """
+        _, rb = _shape_info(op.shape)
+        called = self.comps.get(subname) if subname else None
+        operand_names = _OPERANDS.findall(op.rest.split("),")[0])
+        if called is None:
+            return self._operand_bytes(op, comp) + rb
+
+        # parameter index -> internal name
+        param_name: Dict[int, str] = {}
+        for sop in called.ops:
+            if sop.opcode == "parameter":
+                m = re.match(r"\s*(\d+)", sop.rest)
+                if m:
+                    param_name[int(m.group(1))] = sop.name
+        # internal consumers per value name
+        consumers: Dict[str, List[Op]] = defaultdict(list)
+        for sop in called.ops:
+            if sop.opcode == "parameter":
+                continue
+            for nm in _OPERANDS.findall(sop.rest.split("),")[0]):
+                consumers[nm].append(sop)
+
+        # does the fusion write in place (DUS/scatter producing the result)?
+        dus_ops = [s for s in called.ops if s.opcode in ("dynamic-update-slice", "scatter")]
+        write_b = rb
+        inplace_target: Optional[str] = None
+        if dus_ops:
+            write_b = sum(self._update_operand_bytes(s, called) for s in dus_ops)
+            tgt = _OPERANDS.findall(dus_ops[0].rest.split("),")[0])
+            if tgt:
+                inplace_target = tgt[0]
+
+        total = float(write_b)
+        for i, nm in enumerate(operand_names):
+            sh = comp.shapes.get(nm)
+            if not sh:
+                continue
+            b = _shape_info(sh)[1]
+            pname = param_name.get(i)
+            if pname is not None:
+                cons = consumers.get(pname, [])
+                if cons and all(c.opcode in ("dynamic-slice", "gather") for c in cons):
+                    b = sum(_shape_info(c.shape)[1] for c in cons)
+                elif pname == inplace_target:
+                    b = 0.0  # aliased output buffer, not re-read
+            total += b
+        return total
+
+    def _operand_bytes(self, op: Op, comp: Computation) -> float:
+        total = 0.0
+        # operand list ends at first "), " — take names before attributes
+        paren = op.rest.split("),")[0]
+        for nm in _OPERANDS.findall(paren):
+            sh = comp.shapes.get(nm)
+            if sh:
+                _, b = _shape_info(sh)
+                total += b
+        return total
+
+    @staticmethod
+    def _merge_coll(out: Analysis, sub: Analysis, mult: int):
+        for k, v in sub.collective_bytes.items():
+            out.collective_bytes[k] += mult * v
+        for k, v in sub.collective_count.items():
+            out.collective_count[k] += mult * v
+        out.dynamic_whiles += sub.dynamic_whiles
+
+
+def analyze_hlo(hlo: str) -> Analysis:
+    return Analyzer(hlo).analyze()
+
+
+def wire_bytes(analysis: Analysis) -> float:
+    """Per-chip ICI wire traffic with ring multipliers (all-reduce 2x)."""
+    mult = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+            "all-to-all": 1.0, "collective-permute": 1.0}
+    return sum(mult.get(k, 1.0) * v for k, v in analysis.collective_bytes.items())

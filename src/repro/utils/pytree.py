@@ -1,0 +1,101 @@
+"""Pytree helpers shared across the framework (no flax/optax available)."""
+from __future__ import annotations
+
+import re
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_zeros_like(tree):
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(tree, s):
+    return jax.tree.map(lambda x: x * s, tree)
+
+
+def tree_axpy(a, x, y):
+    """a * x + y, leafwise."""
+    return jax.tree.map(lambda xi, yi: a * xi + yi, x, y)
+
+
+def tree_lerp(a, b, t):
+    """(1 - t) * a + t * b, leafwise (damped-fusion primitive)."""
+    return jax.tree.map(lambda ai, bi: (1.0 - t) * ai + t * bi, a, b)
+
+
+def tree_dot(a, b):
+    leaves = jax.tree.map(lambda x, y: jnp.sum(x.astype(jnp.float32) * y.astype(jnp.float32)), a, b)
+    return sum(jax.tree.leaves(leaves))
+
+
+def tree_sq_norm(tree):
+    leaves = jax.tree.map(lambda x: jnp.sum(jnp.square(x.astype(jnp.float32))), tree)
+    return sum(jax.tree.leaves(leaves))
+
+
+def tree_norm(tree):
+    return jnp.sqrt(tree_sq_norm(tree))
+
+
+def tree_size(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree) -> int:
+    return sum(int(np.prod(x.shape)) * jnp.dtype(x.dtype).itemsize for x in jax.tree.leaves(tree))
+
+
+def tree_cast(tree, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
+
+
+def tree_isfinite(tree):
+    """Scalar bool: every floating leaf is finite everywhere."""
+    oks = [
+        jnp.all(jnp.isfinite(x))
+        for x in jax.tree.leaves(tree)
+        if jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating)
+    ]
+    if not oks:
+        return jnp.asarray(True)
+    return jnp.stack(oks).all()
+
+
+def path_str(path) -> str:
+    """Render a jax KeyPath as 'a/b/0/c'."""
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def tree_map_with_name(fn: Callable[[str, Any], Any], tree):
+    """Map ``fn(name, leaf)`` over a pytree, where name is the joined path."""
+    return jax.tree_util.tree_map_with_path(lambda p, x: fn(path_str(p), x), tree)
+
+
+def first_match(rules, name: str, default=None):
+    """Return the value of the first (regex, value) rule matching ``name``."""
+    for pat, val in rules:
+        if re.search(pat, name):
+            return val
+    return default

@@ -1,0 +1,83 @@
+"""Roofline terms from a compiled dry-run artifact (DESIGN.md §5).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI (assignment-specified).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12       # bf16 FLOP/s per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link
+
+
+@dataclass
+class Roofline:
+    """All quantities are per-chip, per-step."""
+
+    flops: float              # HLO FLOPs executed by one chip
+    hbm_bytes: float          # HLO bytes accessed by one chip
+    collective_bytes: float   # wire bytes crossing one chip's ICI links
+    model_flops: float        # 6·N(_active)·D tokens-math, per chip
+    chips: int
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — catches remat/redundancy waste."""
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def step_time_s(self) -> float:
+        """Roofline-model step time: max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def mfu(self) -> float:
+        """Model-FLOPs utilization implied by the roofline step time."""
+        t = self.step_time_s
+        return (self.model_flops / PEAK_FLOPS) / t if t else 0.0
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops_per_chip": self.flops,
+            "hbm_bytes_per_chip": self.hbm_bytes,
+            "collective_bytes_per_chip": self.collective_bytes,
+            "model_flops_per_chip": self.model_flops,
+            "chips": self.chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bottleneck": self.bottleneck,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_step_s": self.step_time_s,
+            "roofline_mfu": self.mfu,
+        }
+
+
+def model_flops_per_step(n_params_active: int, tokens: int, *, training: bool) -> float:
+    """6·N·D for a train step (fwd+bwd); 2·N·D for inference."""
+    c = 6.0 if training else 2.0
+    return c * n_params_active * tokens

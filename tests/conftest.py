@@ -1,0 +1,34 @@
+"""Shared test fixtures.  NOTE: no XLA_FLAGS here — tests run on the single
+real CPU device; distributed tests spawn subprocesses that set the fake
+device count themselves."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_config
+from repro.configs.roberta_base import TINY
+
+
+@pytest.fixture(scope="session")
+def tiny_cfg():
+    """The tiny RoBERTa-style encoder used by the paper reproduction."""
+    return dataclasses.replace(
+        TINY, d_model=64, num_heads=2, num_kv_heads=2, head_dim=32,
+        d_ff=128, vocab_size=256, max_seq_len=32,
+    )
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def smoke_config(arch_id: str):
+    return reduce_config(get_config(arch_id))

@@ -1,0 +1,36 @@
+"""Checkpoint roundtrip tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import io as ckpt
+
+
+def test_roundtrip_nested(tmp_path):
+    tree = {
+        "a": {"b": jnp.arange(6, dtype=jnp.float32).reshape(2, 3)},
+        "scan": {"pos0": {"w": jnp.ones((4, 4), jnp.bfloat16)}},
+        "step": jnp.asarray(7, jnp.int32),
+    }
+    path = os.path.join(tmp_path, "m.npz")
+    ckpt.save(path, tree)
+    back = ckpt.load(path)
+    assert back["a"]["b"].shape == (2, 3)
+    assert back["scan"]["pos0"]["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(back["a"]["b"]), np.arange(6).reshape(2, 3))
+    assert int(back["step"]) == 7
+
+
+def test_roundtrip_model_params(tiny_cfg, tmp_path, key):
+    from repro.models import encoder as E
+
+    body = E.init_encoder_body(tiny_cfg, key)
+    path = os.path.join(tmp_path, "body.npz")
+    ckpt.save(path, body)
+    back = ckpt.load(path)
+    for a, b in zip(jax.tree.leaves(body), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # same structure
+    assert jax.tree.structure(body) == jax.tree.structure(back)

@@ -1,0 +1,65 @@
+"""Synthetic multitask suite + pipeline tests."""
+import numpy as np
+import pytest
+
+from repro.data.pipeline import batches, num_steps
+from repro.data.synthetic import CLS, N_SPECIAL, SyntheticSuite, mask_for_mlm
+
+
+def test_suite_deterministic():
+    s1 = SyntheticSuite(num_tasks=6, seed=3)
+    s2 = SyntheticSuite(num_tasks=6, seed=3)
+    d1 = s1.dataset(2, 64, 16, 24)
+    d2 = s2.dataset(2, 64, 16, 24)
+    np.testing.assert_array_equal(d1["x_train"], d2["x_train"])
+    np.testing.assert_array_equal(d1["y_train"], d2["y_train"])
+
+
+def test_labels_follow_motif_rule():
+    suite = SyntheticSuite(num_tasks=4, seed=0, noise=0.0)  # no label noise
+    x, y = suite.sample(1, 128, 24, rng=np.random.default_rng(0))
+    W, _ = suite.task_params(1)
+    relabel = (suite.phi[x].mean(1) @ W).argmax(1)
+    assert (relabel == y).mean() == 1.0
+
+
+def test_tasks_have_distinct_rules_and_domains():
+    suite = SyntheticSuite(num_tasks=8, seed=0)
+    W0, u0 = suite.task_params(0)
+    W1, u1 = suite.task_params(1)
+    assert not np.allclose(W0[:, : min(W0.shape[1], W1.shape[1])],
+                           W1[:, : min(W0.shape[1], W1.shape[1])])
+    assert not np.allclose(u0, u1)
+
+
+def test_class_counts_in_range():
+    suite = SyntheticSuite(num_tasks=36, seed=1)
+    for t in suite.tasks:
+        assert 2 <= t.num_classes <= 5
+
+
+def test_special_tokens_respected():
+    suite = SyntheticSuite(num_tasks=2, seed=0)
+    x, _ = suite.sample(0, 64, 16, rng=np.random.default_rng(0))
+    assert (x[:, 0] == CLS).all()
+    assert (x[:, 1:] >= N_SPECIAL).all()
+
+
+def test_mlm_masking():
+    suite = SyntheticSuite(num_tasks=2, seed=0)
+    toks = suite.lm_stream(32, 24)
+    inp, tgt, mask = mask_for_mlm(toks, np.random.default_rng(0))
+    assert (tgt == toks).all()
+    frac = mask.mean()
+    assert 0.05 < frac < 0.3
+    assert ((inp == 2) == (mask == 1)).all()  # MASK token exactly where masked
+
+
+def test_batches_shapes_and_shuffling():
+    x = np.arange(100)[:, None].repeat(4, 1)
+    y = np.arange(100)
+    bs = list(batches(x, y, 32, rng=np.random.default_rng(0)))
+    assert len(bs) == 3 and bs[0]["tokens"].shape == (32, 4)
+    assert num_steps(100, 32, epochs=2) == 6
+    flat = np.concatenate([b["labels"] for b in bs])
+    assert not (flat[:32] == np.arange(32)).all()  # shuffled

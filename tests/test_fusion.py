@@ -1,0 +1,126 @@
+"""Fusion-operator unit + property tests (hypothesis) — invariants of the
+paper's §3 operator and the §8 extensions."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import fusion
+
+hypothesis.settings.register_profile("ci", deadline=None, max_examples=30)
+hypothesis.settings.load_profile("ci")
+
+
+def _trees(draw, n_models, shape=(3, 4)):
+    arrs = draw(
+        st.lists(
+            st.lists(
+                st.floats(-10, 10, allow_nan=False, width=32),
+                min_size=int(np.prod(shape)), max_size=int(np.prod(shape)),
+            ),
+            min_size=n_models, max_size=n_models,
+        )
+    )
+    return [{"w": jnp.asarray(a, jnp.float32).reshape(shape)} for a in arrs]
+
+
+@given(st.data(), st.integers(2, 6))
+def test_average_within_convex_hull(data, n):
+    models = _trees(data.draw, n)
+    fused = fusion.average(models)
+    stack = jnp.stack([m["w"] for m in models])
+    assert bool(jnp.all(fused["w"] >= stack.min(0) - 1e-5))
+    assert bool(jnp.all(fused["w"] <= stack.max(0) + 1e-5))
+
+
+@given(st.data(), st.integers(2, 5))
+def test_average_permutation_invariant(data, n):
+    models = _trees(data.draw, n)
+    f1 = fusion.average(models)
+    f2 = fusion.average(models[::-1])
+    np.testing.assert_allclose(np.asarray(f1["w"]), np.asarray(f2["w"]), atol=1e-5)
+
+
+@given(st.data())
+def test_average_of_identical_is_identity(data):
+    (m,) = _trees(data.draw, 1)
+    fused = fusion.average([m, m, m])
+    np.testing.assert_allclose(np.asarray(fused["w"]), np.asarray(m["w"]), atol=1e-6)
+
+
+@given(st.data(), st.floats(0.0, 1.0))
+def test_damped_interpolates(data, alpha):
+    base, m = _trees(data.draw, 2)
+    fused = fusion.damped(base, [m], alpha=alpha)
+    expect = (1 - alpha) * np.asarray(base["w"]) + alpha * np.asarray(m["w"])
+    np.testing.assert_allclose(np.asarray(fused["w"]), expect, atol=1e-4)
+
+
+@given(st.data())
+def test_damped_alpha1_equals_average(data):
+    base, m1, m2 = _trees(data.draw, 3)
+    f1 = fusion.damped(base, [m1, m2], alpha=1.0)
+    f2 = fusion.average([m1, m2])
+    np.testing.assert_allclose(np.asarray(f1["w"]), np.asarray(f2["w"]), atol=1e-5)
+
+
+@given(st.data())
+def test_fisher_equal_importance_equals_average(data):
+    m1, m2 = _trees(data.draw, 2)
+    ones = [jax.tree.map(jnp.ones_like, m) for m in (m1, m2)]
+    f1 = fusion.fisher_weighted([m1, m2], ones)
+    f2 = fusion.average([m1, m2])
+    np.testing.assert_allclose(np.asarray(f1["w"]), np.asarray(f2["w"]), atol=1e-5)
+
+
+@given(st.data())
+def test_task_arithmetic_single_model_lambda1_is_model(data):
+    base, m = _trees(data.draw, 2)
+    f = fusion.task_arithmetic(base, [m], lam=1.0)
+    np.testing.assert_allclose(np.asarray(f["w"]), np.asarray(m["w"]), atol=1e-5)
+
+
+def test_weighted_average_weights():
+    m1 = {"w": jnp.zeros((4,))}
+    m2 = {"w": jnp.ones((4,))}
+    f = fusion.average([m1, m2], weights=[1, 3])
+    np.testing.assert_allclose(np.asarray(f["w"]), 0.75)
+
+
+def test_ties_agreeing_models_average():
+    base = {"w": jnp.zeros((8,))}
+    m1 = {"w": jnp.ones((8,))}
+    m2 = {"w": 3 * jnp.ones((8,))}
+    f = fusion.ties(base, [m1, m2], density=1.0)
+    np.testing.assert_allclose(np.asarray(f["w"]), 2.0)
+
+
+def test_ties_sign_conflict_drops_minority():
+    base = {"w": jnp.zeros((4,))}
+    m1 = {"w": jnp.asarray([4.0, 4.0, 4.0, 4.0])}
+    m2 = {"w": jnp.asarray([6.0, 6.0, 6.0, 6.0])}
+    m3 = {"w": jnp.asarray([-1.0, -1.0, -1.0, -1.0])}
+    f = fusion.ties(base, [m1, m2, m3], density=1.0)
+    # elected sign is +, m3 excluded: mean(4, 6) = 5
+    np.testing.assert_allclose(np.asarray(f["w"]), 5.0)
+
+
+def test_fuse_dispatch_errors():
+    with pytest.raises(KeyError):
+        fusion.fuse("nope", {"w": jnp.zeros(2)}, [{"w": jnp.ones(2)}])
+    with pytest.raises(ValueError):
+        fusion.average([])
+    with pytest.raises(ValueError):
+        fusion.average([{"w": jnp.ones(2)}], weights=[1, 2])
+    with pytest.raises(ValueError):
+        fusion.average([{"w": jnp.ones(2)}], weights=[0.0])
+
+
+def test_fusion_preserves_dtype():
+    m1 = {"w": jnp.ones((4,), jnp.bfloat16)}
+    m2 = {"w": 2 * jnp.ones((4,), jnp.bfloat16)}
+    f = fusion.average([m1, m2])
+    assert f["w"].dtype == jnp.bfloat16

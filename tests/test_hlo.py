@@ -1,0 +1,41 @@
+"""HLO collective parser unit tests."""
+from repro.utils.hlo import collect_collectives, shape_bytes, wire_bytes
+
+HLO = """
+HloModule test
+  %p = bf16[16,512]{1,0} parameter(0)
+  %ar = bf16[16,512]{1,0} all-reduce(%p), replica_groups={{0,1}}
+  %ag = f32[4,128]{1,0} all-gather(%p), dimensions={0}
+  %rs = f32[2,64]{1,0} reduce-scatter(%ag), dimensions={0}
+  %a2a = s32[8]{0} all-to-all(%x)
+  %cp = bf16[3,3]{1,0} collective-permute(%p)
+  %ars = bf16[16,512]{1,0} all-reduce-start(%p)
+  %tuple = (f32[2,2]{1,0}, f32[4]{0}) all-to-all(%a, %b)
+"""
+
+
+def test_shape_bytes():
+    assert shape_bytes("bf16[16,512]{1,0}") == 16 * 512 * 2
+    assert shape_bytes("f32[4,128]") == 4 * 128 * 4
+    assert shape_bytes("(f32[2,2]{1,0}, f32[4]{0})") == 16 + 16
+    assert shape_bytes("pred[7]") == 7
+    assert shape_bytes("s32[]") == 4
+
+
+def test_collect_collectives():
+    st = collect_collectives(HLO)
+    assert st.count_by_kind["all-reduce"] == 2  # all-reduce + all-reduce-start
+    assert st.count_by_kind["all-gather"] == 1
+    assert st.count_by_kind["reduce-scatter"] == 1
+    assert st.count_by_kind["all-to-all"] == 2
+    assert st.count_by_kind["collective-permute"] == 1
+    assert st.bytes_by_kind["all-reduce"] == 2 * 16 * 512 * 2
+    assert st.bytes_by_kind["all-to-all"] == 8 * 4 + 32
+    assert st.total_count == 7
+
+
+def test_wire_bytes_multipliers():
+    st = collect_collectives(HLO)
+    w = wire_bytes(st)
+    # all-reduce counts 2x
+    assert w > st.total_bytes

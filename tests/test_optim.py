@@ -1,0 +1,89 @@
+"""Optimizer unit tests (hand-rolled SGD/AdamW/Adafactor)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.optimizers import (
+    adafactor, adamw, clip_by_global_norm, constant_lr, linear_decay_lr,
+    make_optimizer, sgd, warmup_cosine_lr,
+)
+
+
+def _minimize(opt, steps=200):
+    """Minimize ||x - t||^2 from zero init; return final distance."""
+    target = {"a": jnp.asarray([1.0, -2.0, 3.0]), "b": jnp.asarray([[0.5, -0.5]])}
+    params = jax.tree.map(jnp.zeros_like, target)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state):
+        grads = jax.tree.map(lambda p, t: 2 * (p - t), params, target)
+        upd, state = opt.update(grads, state, params)
+        return jax.tree.map(jnp.add, params, upd), state
+
+    for _ in range(steps):
+        params, state = step(params, state)
+    return float(
+        sum(jnp.sum(jnp.abs(p - t)) for p, t in zip(jax.tree.leaves(params), jax.tree.leaves(target)))
+    )
+
+
+@pytest.mark.parametrize(
+    "opt",
+    [
+        sgd(constant_lr(0.1)),
+        sgd(constant_lr(0.05), momentum=0.9),
+        adamw(constant_lr(0.1), weight_decay=0.0),
+        adafactor(linear_decay_lr(0.5, 1.0 / 200)),
+    ],
+    ids=["sgd", "sgd-mom", "adamw", "adafactor"],
+)
+def test_optimizers_converge(opt):
+    assert _minimize(opt) < 0.05
+
+
+def test_adamw_weight_decay_shrinks():
+    opt = adamw(constant_lr(0.1), weight_decay=0.5)
+    params = {"w": jnp.asarray([10.0])}
+    state = opt.init(params)
+    zero = {"w": jnp.zeros((1,))}
+    for _ in range(50):
+        upd, state = opt.update(zero, state, params)
+        params = jax.tree.map(jnp.add, params, upd)
+    assert abs(float(params["w"][0])) < 1.0
+
+
+def test_adafactor_state_is_factored():
+    opt = adafactor(constant_lr(0.1))
+    params = {"w": jnp.zeros((64, 32)), "b": jnp.zeros((32,))}
+    st = opt.init(params)
+    assert st["v"]["w"]["vr"].shape == (64,)
+    assert st["v"]["w"]["vc"].shape == (32,)
+    assert st["v"]["b"]["v"].shape == (32,)
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.ones((4,)) * 3.0}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert abs(float(norm) - 6.0) < 1e-5
+    got = float(jnp.sqrt(jnp.sum(jnp.square(clipped["a"]))))
+    assert abs(got - 1.0) < 1e-4
+
+
+def test_schedules():
+    lin = linear_decay_lr(1.0, 0.01)
+    assert float(lin(jnp.asarray(0))) == 1.0
+    assert abs(float(lin(jnp.asarray(50))) - 0.5) < 1e-6
+    assert float(lin(jnp.asarray(1000))) == 0.0
+    wc = warmup_cosine_lr(1.0, warmup=10, total=110)
+    assert float(wc(jnp.asarray(5))) == pytest.approx(0.5)
+    assert float(wc(jnp.asarray(10))) == pytest.approx(1.0, abs=1e-3)
+    assert float(wc(jnp.asarray(110))) == pytest.approx(0.1, abs=1e-3)
+
+
+def test_make_optimizer_dispatch():
+    for name in ("sgd", "adamw", "adafactor"):
+        assert make_optimizer(name, constant_lr(0.1)).name == name
+    with pytest.raises(ValueError):
+        make_optimizer("lion", constant_lr(0.1))

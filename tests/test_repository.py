@@ -1,0 +1,128 @@
+"""Repository behaviour: screening, fusion, versioning, disk persistence."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Repository, screen_contributions
+
+
+def _m(v):
+    return {"w": jnp.full((16,), float(v))}
+
+
+def test_fuse_average_and_iteration_advance():
+    repo = Repository(_m(0))
+    repo.upload(_m(1))
+    repo.upload(_m(3))
+    rec = repo.fuse_pending()
+    assert rec.iteration == 0 and repo.iteration == 1
+    np.testing.assert_allclose(np.asarray(repo.download()["w"]), 2.0)
+
+
+def test_screening_rejects_nan_and_outliers():
+    repo = Repository(_m(0), mad_threshold=5.0)
+    for v in (1.0, 1.1, 0.9, 1.05):
+        repo.upload(_m(v))
+    repo.upload({"w": jnp.full((16,), jnp.nan)})
+    repo.upload(_m(1e5))
+    rec = repo.fuse_pending()
+    assert rec.n_accepted == 4 and rec.n_contributions == 6
+    assert abs(float(repo.download()["w"][0]) - 1.0125) < 1e-4
+
+
+def test_screening_disabled():
+    repo = Repository(_m(0), screen=False)
+    repo.upload(_m(1))
+    repo.upload(_m(1e5))
+    rec = repo.fuse_pending()
+    assert rec.n_accepted == 2
+
+
+def test_all_rejected_raises():
+    repo = Repository(_m(0))
+    repo.upload({"w": jnp.full((16,), jnp.inf)})
+    with pytest.raises(RuntimeError):
+        repo.fuse_pending()
+
+
+def test_empty_fuse_raises():
+    with pytest.raises(RuntimeError):
+        Repository(_m(0)).fuse_pending()
+
+
+def test_damped_fusion_op():
+    repo = Repository(_m(0), fusion_op="damped", fusion_kwargs={"alpha": 0.5})
+    repo.upload(_m(2))
+    repo.fuse_pending()
+    np.testing.assert_allclose(np.asarray(repo.download()["w"]), 1.0)
+
+
+def test_rollback():
+    repo = Repository(_m(0), keep_history=True)
+    repo.upload(_m(2)); repo.fuse_pending()
+    repo.upload(_m(4)); repo.fuse_pending()
+    assert repo.iteration == 2
+    repo.rollback(1)
+    assert repo.iteration == 1
+    np.testing.assert_allclose(np.asarray(repo.download()["w"]), 2.0)
+
+
+def test_disk_persistence(tmp_path):
+    root = str(tmp_path / "repo")
+    repo = Repository(_m(0), root=root)
+    repo.upload(_m(2))
+    repo.fuse_pending()
+    again = Repository.open(root)
+    assert again.iteration == 1
+    np.testing.assert_allclose(np.asarray(again.download()["w"]), 2.0)
+
+
+def test_screen_zero_diff_rejected():
+    base = _m(1)
+    rep = screen_contributions(base, [_m(1), _m(1.2), _m(0.8), _m(1.1)])
+    assert 0 in rep.rejected and "no-op" in rep.reasons[0]
+
+
+def test_fisher_fusion_via_repository():
+    """fusion_op='fisher' consumes per-contribution Fishers (§8 beyond-paper)."""
+    repo = Repository(_m(0), fusion_op="fisher", screen=False)
+    repo.upload(_m(1), fisher={"w": jnp.ones((16,))})
+    repo.upload(_m(3), fisher={"w": 3 * jnp.ones((16,))})
+    repo.fuse_pending()
+    # (1*1 + 3*3) / (1+3) = 2.5
+    np.testing.assert_allclose(np.asarray(repo.download()["w"]), 2.5, rtol=1e-5)
+
+
+def test_fisher_fusion_missing_fisher_raises():
+    repo = Repository(_m(0), fusion_op="fisher", screen=False)
+    repo.upload(_m(1))
+    with pytest.raises(RuntimeError):
+        repo.fuse_pending()
+
+
+def test_weighted_uploads():
+    """§8 contributor weights: weight by (e.g.) dataset size."""
+    repo = Repository(_m(0), screen=False)
+    repo.upload(_m(1), weight=3)
+    repo.upload(_m(5), weight=1)
+    repo.fuse_pending()
+    np.testing.assert_allclose(np.asarray(repo.download()["w"]), 2.0)  # (3*1+1*5)/4
+
+
+def test_async_contribution():
+    """§8 asynchronous repository updates via damped task arithmetic."""
+    repo = Repository(_m(0), screen=False)
+    rec = repo.contribute_async(_m(4))  # alpha = 1/(1+0) = 1
+    np.testing.assert_allclose(np.asarray(repo.download()["w"]), 4.0)
+    assert rec.op.startswith("async")
+    repo.contribute_async(_m(0))  # alpha = 1/2 -> (4+0)/2
+    np.testing.assert_allclose(np.asarray(repo.download()["w"]), 2.0)
+    repo.contribute_async(_m(8), alpha=0.25)  # 2 + 0.25*(8-2) = 3.5
+    np.testing.assert_allclose(np.asarray(repo.download()["w"]), 3.5)
+    assert repo.iteration == 3
+
+
+def test_async_screens_nan():
+    repo = Repository(_m(1))
+    with pytest.raises(RuntimeError):
+        repo.contribute_async({"w": jnp.full((16,), jnp.nan)})

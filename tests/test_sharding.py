@@ -1,0 +1,68 @@
+"""Sharding-rule tests (no fake devices needed: specs are mesh-shape math)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+class FakeMesh:
+    """Duck-typed mesh: only .shape is consulted by the rule engine."""
+
+    def __init__(self, shape):
+        self.shape = shape
+
+    @property
+    def axis_names(self):
+        return tuple(self.shape)
+
+
+from repro.launch.sharding import _fit, param_spec  # noqa: E402
+from repro.configs import get_config  # noqa: E402
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+
+
+def _leaf(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def test_attention_projection_rules():
+    cfg = get_config("mistral-nemo-12b")
+    sp = param_spec(MESH, "scan/pos0/attn/wq", _leaf(40, 5120, 4096), fsdp=True, prefix=(None,))
+    assert sp == P(None, "data", "model")
+    sp = param_spec(MESH, "scan/pos0/attn/wo", _leaf(40, 4096, 5120), fsdp=True, prefix=(None,))
+    assert sp == P(None, "model", "data")
+
+
+def test_embed_vocab_not_divisible_falls_back():
+    # granite-moe vocab 49155 is not divisible by 16 -> replicate that dim
+    sp = param_spec(MESH, "embed", _leaf(49155, 1024), fsdp=False)
+    assert sp == P(None, None)
+    sp2 = param_spec(MESH, "embed", _leaf(131072, 5120), fsdp=True)
+    assert sp2 == P("model", "data")
+
+
+def test_moe_expert_parallel():
+    sp = param_spec(MESH, "scan/pos0/moe/w_gate", _leaf(32, 32, 1024, 512), fsdp=False, prefix=(None,))
+    assert sp == P(None, "model", None, None)
+    sp = param_spec(MESH, "scan/pos0/moe/w_down", _leaf(32, 32, 512, 1024), fsdp=False, prefix=(None,))
+    assert sp == P(None, "model", None, None)
+
+
+def test_norm_scales_replicated():
+    sp = param_spec(MESH, "scan/pos0/norm1/scale", _leaf(40, 5120), prefix=(None,))
+    assert sp == P(None, None)
+
+
+def test_fit_divisibility():
+    assert _fit(MESH, (64, 48), ("data", "model")) == P("data", "model")
+    assert _fit(MESH, (60, 48), ("data", "model")) == P(None, "model")
+    assert _fit(MESH, (64, 49), ("data", "model")) == P("data", None)
+
+
+def test_contrib_prefix():
+    mesh = FakeMesh({"contrib": 8, "replica": 2, "model": 16})
+    sp = param_spec(mesh, "scan/pos0/attn/wq", _leaf(8, 40, 5120, 4096),
+                    data_axis="replica", fsdp=False, prefix=("contrib", None))
+    assert sp == P("contrib", None, None, "model")
