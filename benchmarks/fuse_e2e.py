@@ -1,0 +1,97 @@
+"""End-to-end Repository fuse benchmark — the ColD Fusion hot path.
+
+Compares, for K=8 contributions of a ~1M-param model (non-block-aligned
+leaf shapes, ~58 leaves), upload -> screen -> fuse -> publish wall time on:
+
+* **seed per-leaf path** (``REPRO_NO_KERNELS`` oracle): ``upload`` keeps K
+  live pytrees, ``screen_contributions`` re-reads every contribution for
+  its diff norm, ``fusion.average`` re-reads everything again leaf by leaf
+  — 3+ passes over the data and O(K x leaves) tiny device ops.
+* **streaming flat engine**: ``upload`` folds each contribution into a flat
+  staging row, ``fuse_pending`` issues ONE kernel launch that returns the
+  fused model and the screening statistics together.
+
+The speedup is recorded in BENCH_kernels.json (benchmarks/run.py) so every
+future PR inherits the perf trajectory.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common as C
+from repro.core.repository import Repository
+from repro.kernels import ops
+
+K = 8
+D = 100           # deliberately not a multiple of 8*128
+N_BLOCKS = 8
+
+
+def _model(key):
+    """~1M params over ~58 non-aligned leaves (a small transformer's shape
+    census, without the model code)."""
+    ks = jax.random.split(key, 2 + N_BLOCKS)
+    tree = {"embed": jax.random.normal(ks[0], (397, D), jnp.float32) * 0.02,
+            "final_norm": jnp.ones((D,), jnp.float32), "blocks": {}}
+    for b in range(N_BLOCKS):
+        kb = jax.random.split(ks[2 + b], 6)
+        tree["blocks"][f"b{b:02d}"] = {
+            "wq": jax.random.normal(kb[0], (D, D)) * 0.02,
+            "wk": jax.random.normal(kb[1], (D, D)) * 0.02,
+            "wv": jax.random.normal(kb[2], (D, D)) * 0.02,
+            "wo": jax.random.normal(kb[3], (D, D)) * 0.02,
+            "w_up": jax.random.normal(kb[4], (D, 399)) * 0.02,
+            "w_down": jax.random.normal(kb[5], (399, D)) * 0.02,
+            "norm": jnp.ones((D,), jnp.float32),
+        }
+    return tree
+
+
+def _contributions(base, k):
+    out = []
+    for i in range(k):
+        key = jax.random.PRNGKey(1000 + i)
+        out.append(jax.tree.map(
+            lambda x: x + jax.random.normal(
+                jax.random.fold_in(key, x.size), x.shape, jnp.float32) * 0.01,
+            base))
+    return out
+
+
+def _run_once(base, contribs, *, flat: bool) -> float:
+    t0 = time.time()
+    repo = Repository(base, use_flat=flat)
+    for c in contribs:
+        repo.upload(c)
+    repo.fuse_pending()
+    jax.block_until_ready(jax.tree.leaves(repo.download()))
+    return (time.time() - t0) * 1e6
+
+
+def _best_of(base, contribs, *, flat: bool, reps: int = 3) -> float:
+    _run_once(base, contribs, flat=flat)  # warm the jit caches
+    return min(_run_once(base, contribs, flat=flat) for _ in range(reps))
+
+
+def run(rows: C.Rows):
+    base = _model(jax.random.PRNGKey(0))
+    contribs = _contributions(base, K)
+    n_params = sum(x.size for x in jax.tree.leaves(base))
+    n_leaves = len(jax.tree.leaves(base))
+
+    prev = ops.kernels_enabled()
+    try:
+        ops.use_kernels(False)
+        us_seed = _best_of(base, contribs, flat=False)
+        ops.use_kernels(True)
+        us_flat = _best_of(base, contribs, flat=True)
+    finally:
+        ops.use_kernels(prev)
+
+    speedup = us_seed / us_flat
+    gb = (K + 2) * n_params * 4 / 1e9
+    rows.add("fuse_e2e/seed_per_leaf", us_seed,
+             f"K={K};params={n_params};leaves={n_leaves}")
+    rows.add("fuse_e2e/flat_stream", us_flat,
+             f"speedup={speedup:.2f}x;stream_GB={gb:.3f}")

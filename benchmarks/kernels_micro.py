@@ -14,11 +14,13 @@ from repro.kernels.rwkv6_scan import rwkv6_scan
 
 
 def _time(fn, *args, n=5, **kw):
-    fn(*args, **kw)  # compile
+    # block on the warmup so compile time never leaks into the timed loop,
+    # and on EVERY timed call — jax dispatch is async, so un-blocked calls
+    # only measure enqueue time, not the kernel
+    jax.block_until_ready(fn(*args, **kw))
     t0 = time.time()
     for _ in range(n):
-        out = fn(*args, **kw)
-    jax.block_until_ready(out)
+        jax.block_until_ready(fn(*args, **kw))
     return (time.time() - t0) / n * 1e6
 
 

@@ -1,13 +1,47 @@
 """Benchmark entry point: one module per paper table/figure + kernel micro +
 the dry-run roofline table.  Prints ``name,us_per_call,derived`` CSV.
 
+Kernel-level rows (``kernel/*`` and ``fuse_e2e/*``) are also written to
+``BENCH_kernels.json`` at the repo root so the perf trajectory of the
+Repository hot path survives across PRs.
+
   PYTHONPATH=src python -m benchmarks.run [--only fig2,fig5] [--skip-main]
   REPRO_BENCH_SCALE=quick|std|full
 """
 import argparse
+import datetime
+import json
+import os
 import sys
 import time
 import traceback
+
+_KERNEL_PREFIXES = ("kernel/", "fuse_e2e/")
+_BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_kernels.json")
+
+
+def _emit_kernel_json(rows) -> None:
+    entries = {}
+    for r in rows.rows:
+        if not r.startswith(_KERNEL_PREFIXES):
+            continue
+        name, us, derived = r.split(",", 2)
+        entries[name] = {"us_per_call": float(us), "derived": derived}
+    if not entries:
+        return
+    import jax  # deferred: only the benches themselves need jax otherwise
+
+    payload = {
+        "generated": datetime.date.today().isoformat(),
+        "scale": os.environ.get("REPRO_BENCH_SCALE", "std"),
+        # pallas_interp rows run the interpret-mode harness regardless of
+        # backend; the rest use the backend named here
+        "backend": jax.default_backend(),
+        "entries": entries,
+    }
+    with open(_BENCH_JSON, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {os.path.normpath(_BENCH_JSON)}")
 
 
 def main() -> None:
@@ -18,11 +52,12 @@ def main() -> None:
     from benchmarks import common as C
     from benchmarks import (appE_scale, appF_fixed_examples, beyond_fusion_ops,
                             fig2_main, fig3_unseen, fig4_fewshot, fig5_contributors,
-                            fig6_single_dataset, kernels_micro, roofline,
+                            fig6_single_dataset, fuse_e2e, kernels_micro, roofline,
                             table1_per_task)
 
     benches = {
         "kernels": kernels_micro.run,
+        "fuse_e2e": fuse_e2e.run,
         "fig2": fig2_main.run,
         "fig3": fig3_unseen.run,
         "fig4": fig4_fewshot.run,
@@ -49,6 +84,7 @@ def main() -> None:
             traceback.print_exc(file=sys.stderr)
         rows.rows.append(f"# {name} done in {time.time()-t1:.0f}s")
     rows.emit()
+    _emit_kernel_json(rows)
     print(f"# total {time.time()-t0:.0f}s scale={C.SCALE}")
 
 

@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Tier-1 CI: the full test suite plus the kernel micro-bench in smoke mode.
+#
+#   scripts/ci.sh
+#
+# pytest exits non-zero on COLLECTION errors as well as failures (exit code
+# 2), and `set -e` propagates both — a module that fails to import cannot
+# slip through as "0 tests ran".
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+python -m pytest -q
+
+# kernel + end-to-end fuse micro-benches (smoke scale); refreshes
+# BENCH_kernels.json so the perf trajectory stays current
+REPRO_BENCH_SCALE=quick python -m benchmarks.run --only kernels,fuse_e2e

@@ -4,20 +4,35 @@ Flattens a pytree of arrays into an ``.npz`` keyed by the path string; the
 treedef is reconstructed from the keys on load, so files are self-contained
 and diff-able.  Used by the host-level Repository (contributors exchange
 checkpoints, Fig. 1) and by the training driver.
+
+All writes are atomic: the npz is written to a ``.tmp-<pid>`` sibling and
+``os.replace``d into place, so a contributor crashing mid-upload can never
+leave a truncated checkpoint in the repository root.
+
+Two formats share the atomic writer:
+
+* **tree** (``save``/``load``) — one npz entry per leaf, human-diffable;
+* **flat** (``save_flat``/``load_flat``) — a single contiguous buffer plus
+  its ``FlatSpec`` layout (JSON), the Repository's staging/spill format —
+  one sequential read brings a contribution back as a fusable ``[N]`` row.
 """
 from __future__ import annotations
 
+import json
 import os
-from typing import Any, Dict
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.utils.flat import FlatSpec
 from repro.utils.pytree import path_str
 
 _SEP = "::"
 _BF16 = "__bf16__"  # npz has no bfloat16: stored as uint16 bit pattern
+_FLAT_BUF = "__flat_buffer__"
+_FLAT_SPEC = "__flat_spec__"
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -47,9 +62,28 @@ def _unflatten(d: Dict[str, np.ndarray]) -> Any:
     return tree
 
 
+def _atomic_savez(path: str, arrays: Dict[str, np.ndarray]) -> None:
+    path = os.path.abspath(path)
+    # preserve np.savez semantics: a suffix-less target gets ".npz" appended
+    if not path.endswith(".npz"):
+        path += ".npz"
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    tmp = f"{path}.tmp-{os.getpid()}"
+    try:
+        np.savez(tmp, **arrays)
+        # np.savez itself appends .npz when the target lacks the suffix
+        if not tmp.endswith(".npz") and os.path.exists(tmp + ".npz"):
+            tmp += ".npz"
+        os.replace(tmp, path)
+    except BaseException:
+        for cand in (tmp, tmp + ".npz"):
+            if os.path.exists(cand):
+                os.remove(cand)
+        raise
+
+
 def save(path: str, tree) -> None:
-    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    np.savez(path, **_flatten(tree))
+    _atomic_savez(path, _flatten(tree))
 
 
 def load(path: str, *, as_jax: bool = True):
@@ -58,3 +92,38 @@ def load(path: str, *, as_jax: bool = True):
     if as_jax:
         tree = jax.tree.map(jnp.asarray, tree)
     return tree
+
+
+# -- flat-buffer format (Repository staging / spill) ------------------------
+
+
+def save_flat(path: str, buf, spec: FlatSpec) -> None:
+    """Persist a flat parameter buffer + its layout spec in one npz."""
+    arr = np.asarray(buf)
+    if arr.dtype == jnp.bfloat16:
+        arr = arr.view(np.uint16)
+    _atomic_savez(path, {
+        _FLAT_BUF: arr,
+        _FLAT_SPEC: np.frombuffer(
+            json.dumps(spec.to_json()).encode(), dtype=np.uint8),
+    })
+
+
+def load_flat(path: str, *, as_jax: bool = True) -> Tuple[Any, FlatSpec]:
+    """Load (buffer, spec) written by ``save_flat``."""
+    with np.load(path) as data:
+        if _FLAT_BUF not in data.files:
+            raise ValueError(f"{path} is not a flat checkpoint")
+        meta = json.loads(bytes(data[_FLAT_SPEC]).decode())
+        spec = FlatSpec.from_json(meta)
+        buf = data[_FLAT_BUF]
+    if spec.dtype == "bfloat16":
+        buf = buf.view(jnp.bfloat16)
+    if as_jax:
+        buf = jnp.asarray(buf)
+    return buf, spec
+
+
+def is_flat(path: str) -> bool:
+    with np.load(path) as data:
+        return _FLAT_BUF in data.files

@@ -25,6 +25,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
@@ -75,21 +76,69 @@ def make_cold_train_step(
     return jax.vmap(local)
 
 
-def make_fuse_step(cfg: ArchConfig, mesh: Mesh, schedule: ColdSchedule) -> Callable:
+def make_fuse_step(cfg: ArchConfig, mesh: Mesh, schedule: ColdSchedule,
+                   *, flat: bool = True) -> Callable:
     """The Repository collective: θ ← θ_base + α·(mean_c θ_c − θ_base),
-    broadcast back to every contributor slab."""
+    broadcast back to every contributor slab.
 
-    def fuse(params):
-        def leaf_fuse(x):
-            mean = jnp.mean(x.astype(jnp.float32), axis=0, keepdims=True)
-            if schedule.alpha != 1.0:
-                # damped fusion: each slab relaxes toward the cohort mean
-                mean = x.astype(jnp.float32) * (1 - schedule.alpha) + mean * schedule.alpha
-            return jnp.broadcast_to(mean, x.shape).astype(x.dtype)
+    ``flat=True`` (default) runs the fuse over ONE concatenated ``[C, N]``
+    buffer instead of one reduction per leaf — the mesh-level counterpart of
+    the Repository's flat-buffer engine: a single fused mean/lerp/broadcast
+    chain for GSPMD to schedule (one logical all-reduce over the contributor
+    axes) rather than hundreds of per-leaf ops.  ``flat=False`` keeps the
+    per-leaf path as the oracle.
 
+    The flat path pins every reshaped piece to a common
+    ``P(contrib, None)`` sharding before concatenating: GSPMD (observed on
+    jax 0.4.37 CPU) miscompiles ``concat -> mean`` over a sharded leading
+    axis into a SUM when the concat inputs carry heterogeneous shardings.
+    The constraint replicates the staged buffer over the model/replica axes
+    for the duration of the fuse (it runs once every H steps, so the extra
+    gather amortizes like the fuse all-reduce itself).
+    """
+
+    def leaf_fuse(x):
+        mean = jnp.mean(x.astype(jnp.float32), axis=0, keepdims=True)
+        if schedule.alpha != 1.0:
+            # damped fusion: each slab relaxes toward the cohort mean
+            mean = x.astype(jnp.float32) * (1 - schedule.alpha) + mean * schedule.alpha
+        return jnp.broadcast_to(mean, x.shape).astype(x.dtype)
+
+    def fuse_per_leaf(params):
         return jax.tree.map(leaf_fuse, params)
 
-    return fuse
+    contrib = contrib_axes_of(mesh)
+    if not (flat and contrib):
+        # no contributor axis (plain data/model mesh): nothing to pin the
+        # staged rows to — the per-leaf reduction handles any mesh
+        return fuse_per_leaf
+    row_sharding = NamedSharding(
+        mesh, P(contrib if len(contrib) > 1 else contrib[0], None))
+
+    def fuse_flat(params):
+        leaves, treedef = jax.tree.flatten(params)
+        C = leaves[0].shape[0]
+        shapes = [l.shape for l in leaves]
+        dtypes = [l.dtype for l in leaves]
+        sizes = [int(np.prod(s[1:])) for s in shapes]
+        buf = jnp.concatenate(
+            [jax.lax.with_sharding_constraint(
+                l.reshape(C, -1).astype(jnp.float32), row_sharding)
+             for l in leaves], axis=1)
+        buf = jax.lax.with_sharding_constraint(buf, row_sharding)
+        mean = jnp.mean(buf, axis=0, keepdims=True)
+        if schedule.alpha != 1.0:
+            fused = buf * (1 - schedule.alpha) + mean * schedule.alpha
+        else:
+            fused = jnp.broadcast_to(mean, buf.shape)
+        outs = []
+        off = 0
+        for shape, dtype, n in zip(shapes, dtypes, sizes):
+            outs.append(fused[:, off:off + n].reshape(shape).astype(dtype))
+            off += n
+        return jax.tree.unflatten(treedef, outs)
+
+    return fuse_flat
 
 
 def cold_shardings(mesh: Mesh, cfg: ArchConfig, state, batch):

@@ -17,6 +17,12 @@ first-class, composable operators (all pure pytree->pytree functions):
 
 All operators accept a list of contributor pytrees (and the previous base
 where meaningful) and return the new base pytree.  They are jit-friendly.
+
+``average``, ``damped``, and ``task_arithmetic`` route through the streaming
+flat-buffer kernel (`repro.kernels.ops.fuse_pytrees` — one launch over the
+whole concatenated model) whenever kernels are enabled; the per-leaf jnp
+implementations below remain the ``REPRO_NO_KERNELS`` oracle and the path
+for operators the kernel does not cover (``fisher``, ``ties``).
 """
 from __future__ import annotations
 
@@ -25,24 +31,36 @@ from typing import Optional, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops as _ops
+
 
 def _check(models: Sequence):
     if not models:
         raise ValueError("fusion requires at least one model")
 
 
+def _check_weights(models: Sequence, weights: Optional[Sequence[float]]):
+    if weights is None:
+        return
+    if len(weights) != len(models):
+        raise ValueError("len(weights) != len(models)")
+    if float(sum(weights)) <= 0:
+        raise ValueError("weights must sum to a positive value")
+
+
 def average(models: Sequence, weights: Optional[Sequence[float]] = None):
     """Uniform (paper §3) or weighted parameter average."""
     _check(models)
+    _check_weights(models, weights)
+    if _ops.kernels_enabled():
+        # flat path: α=1 makes the fuse independent of the base operand, so
+        # reuse models[0] as the base rather than materializing zeros
+        fused, _ = _ops.fuse_pytrees(models[0], models, weights, 1.0)
+        return fused
     if weights is None:
         w = [1.0 / len(models)] * len(models)
     else:
-        if len(weights) != len(models):
-            raise ValueError("len(weights) != len(models)")
-        tot = float(sum(weights))
-        if tot <= 0:
-            raise ValueError("weights must sum to a positive value")
-        w = [float(x) / tot for x in weights]
+        w = [float(x) / float(sum(weights)) for x in weights]
 
     def avg(*leaves):
         acc = leaves[0].astype(jnp.float32) * w[0]
@@ -57,6 +75,11 @@ def damped(base, models: Sequence, alpha: float = 1.0,
            weights: Optional[Sequence[float]] = None):
     """θ' = θ + α·(average(models) − θ).  α=1 recovers the paper; α<1 is the
     §8 "restrict the effect of each iteration" lever."""
+    _check(models)
+    _check_weights(models, weights)
+    if _ops.kernels_enabled():
+        fused, _ = _ops.fuse_pytrees(base, models, weights, float(alpha))
+        return fused
     fused = average(models, weights)
     return jax.tree.map(
         lambda b, f: (b.astype(jnp.float32) * (1 - alpha) + f.astype(jnp.float32) * alpha).astype(b.dtype),
@@ -84,6 +107,10 @@ def fisher_weighted(models: Sequence, fishers: Sequence, eps: float = 1e-8):
 def task_arithmetic(base, models: Sequence, lam: float = 1.0):
     """θ' = θ + λ · Σ_c (θ_c − θ)."""
     _check(models)
+    if _ops.kernels_enabled():
+        # θ + λ·Σ(θ_c − θ) == θ + (λ·K)·(mean − θ): one kernel pass
+        fused, _ = _ops.fuse_pytrees(base, models, None, float(lam) * len(models))
+        return fused
 
     def fuse(b, *ts):
         delta = sum(t.astype(jnp.float32) - b.astype(jnp.float32) for t in ts)

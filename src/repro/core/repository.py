@@ -9,8 +9,23 @@ Two transports share this logic:
 * **on-disk**   — contributions arrive as npz checkpoints in a directory
   (the stand-in for the HF-hub exchange); useful across processes.
 
-The fuse itself delegates to `repro.core.fusion` (host/jnp path) or to the
-Pallas ``cold_fuse`` kernel via ``repro.kernels.ops`` when requested.
+Two fuse engines share the contributor-facing API:
+
+* **streaming flat engine** (default for ``average``/``damped``/
+  ``task_arithmetic`` when kernels are enabled) — ``upload`` immediately
+  folds each contribution into a flat ``[N]`` staging row (the pytree is
+  dropped, bounding peak memory to the staging buffer — optionally spilled
+  to the npz root) and ``fuse_pending`` performs screen+fuse in a SINGLE
+  streaming pass: the Pallas ``cold_fuse`` kernel emits the fused model and
+  the per-contributor ``sq_diff`` screening statistic together, the §9 MAD
+  screen runs on those norms, and any rejected contributors get weight 0 in
+  one cheap second pass over the already-staged buffer.  No contribution is
+  ever re-read as a pytree.
+* **per-leaf pytree engine** — the seed path (`repro.core.fusion`), kept
+  verbatim as the ``REPRO_NO_KERNELS`` oracle and for operators the kernel
+  does not cover (``fisher``, ``ties``).
+
+See docs/fusion_engine.md for the full contract.
 """
 from __future__ import annotations
 
@@ -21,10 +36,18 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.checkpoint import io as ckpt
 from repro.core import fusion
-from repro.core.validation import ScreenReport, screen_contributions
+from repro.core.validation import ScreenReport, screen_contributions, screen_norms
+from repro.kernels import ops
+from repro.utils.flat import FlatSpec
+
+# operators the streaming flat engine covers; everything else (fisher, ties)
+# falls back to the per-leaf pytree engine
+FLAT_OPS = ("average", "damped", "task_arithmetic")
 
 
 @dataclass
@@ -35,6 +58,12 @@ class FusionRecord:
     op: str
     diff_norms: List[float]
     wall_time: float
+
+
+def _json_default(o):
+    if isinstance(o, (np.ndarray, np.generic, jax.Array)):
+        return np.asarray(o).tolist()
+    return str(o)
 
 
 class Repository:
@@ -48,6 +77,8 @@ class Repository:
         mad_threshold: float = 5.0,
         root: Optional[str] = None,
         keep_history: bool = False,
+        use_flat: Optional[bool] = None,
+        spill: bool = False,
     ):
         self._base = base_params
         self.fusion_op = fusion_op
@@ -57,14 +88,35 @@ class Repository:
         self.iteration = 0
         self.root = root
         self.keep_history = keep_history
+        if use_flat is None:
+            use_flat = fusion_op in FLAT_OPS and ops.kernels_enabled()
+        elif use_flat and fusion_op not in FLAT_OPS:
+            raise ValueError(f"flat engine does not cover fusion_op={fusion_op!r}")
+        self.use_flat = use_flat
+        if spill and not root:
+            raise ValueError("spill=True requires an on-disk root")
+        self.spill = spill
         self.history: List[FusionRecord] = []
-        self._pending: List[Any] = []
+        self._pending: List[Any] = []       # pytrees, flat rows, or spill paths
         self._pending_fishers: List[Any] = []
         self._pending_weights: List[Any] = []
         self._snapshots: List[Any] = []
+        self._spec: Optional[FlatSpec] = None
+        self._base_flat: Optional[jax.Array] = None
         if root:
             os.makedirs(root, exist_ok=True)
             self._persist_base()
+
+    # -- flat staging ---------------------------------------------------
+    def _ensure_flat_base(self):
+        if self._spec is None:
+            self._spec = FlatSpec.from_tree(self._base)
+        if self._base_flat is None:
+            self._base_flat = self._spec.flatten(self._base)
+
+    def _contrib_path(self, idx: int) -> str:
+        return os.path.join(
+            self.root, f"iter{self.iteration:04d}_contrib{idx:03d}.npz")
 
     # -- contributor-facing API ----------------------------------------
     def download(self):
@@ -76,16 +128,29 @@ class Repository:
         with its diagonal Fisher (for fusion_op="fisher") and a contribution
         weight (§8 "assigning individual weights to each contributor" — e.g.
         dataset size; used when fusion_op="average"/"damped").  Returns a
-        contribution ticket id."""
-        self._pending.append(params)
+        contribution ticket id.
+
+        On the flat engine the pytree is folded into a contiguous staging
+        row right here and released — the Repository never holds K live
+        pytrees.  With ``spill=True`` the row goes to the npz root instead
+        and only its path stays in memory."""
+        idx = len(self._pending)
+        if self.use_flat:
+            self._ensure_flat_base()
+            row = self._spec.flatten(params)
+            if self.root:
+                ckpt.save_flat(self._contrib_path(idx), row, self._spec)
+            if self.spill:
+                self._pending.append(self._contrib_path(idx))
+            else:
+                self._pending.append(row)
+        else:
+            self._pending.append(params)
+            if self.root:
+                ckpt.save(self._contrib_path(idx), params)
         self._pending_fishers.append(fisher)
         self._pending_weights.append(weight)
-        if self.root:
-            path = os.path.join(
-                self.root, f"iter{self.iteration:04d}_contrib{len(self._pending) - 1:03d}.npz"
-            )
-            ckpt.save(path, params)
-        return len(self._pending) - 1
+        return idx
 
     def contribute_async(self, params, *, alpha: Optional[float] = None) -> FusionRecord:
         """Asynchronous contribution (paper §8: "it would be beneficial if
@@ -93,15 +158,34 @@ class Repository:
         finetuned model into the base via a damped task-arithmetic update
         θ ← θ + α·(θ_c − θ), without waiting for a cohort (Ilharco et al.
         2022).  α defaults to 1/(1 + iteration) — early contributions move
-        the base more, later ones refine it (Polyak-style averaging)."""
-        if self.screen:
-            report = screen_contributions(
-                self._base, [params], mad_threshold=self.mad_threshold)
-            if not report.accepted:
-                raise RuntimeError(f"async contribution rejected: {report.reasons}")
+        the base more, later ones refine it (Polyak-style averaging).
+
+        On the flat engine this is one streaming kernel pass: the same
+        launch yields the merged model and the screening norm; if the screen
+        rejects, the merged buffer is simply discarded."""
         a = alpha if alpha is not None else 1.0 / (1.0 + self.iteration)
         t0 = time.time()
-        new_base = fusion.damped(self._base, [params], alpha=a)
+        if self.use_flat:
+            self._ensure_flat_base()
+            row = self._spec.flatten(params)
+            fused, sq = ops.fuse_flat(
+                self._base_flat, row[None, :], jnp.ones((1,), jnp.float32), a)
+            if self.screen:
+                norm = float(np.sqrt(np.float64(jax.device_get(sq)[0])))
+                report = screen_norms([norm], mad_threshold=self.mad_threshold)
+                if not report.accepted:
+                    raise RuntimeError(f"async contribution rejected: {report.reasons}")
+            fused.block_until_ready()
+            new_base = self._spec.unflatten(fused)
+            new_flat = fused
+        else:
+            if self.screen:
+                report = screen_contributions(
+                    self._base, [params], mad_threshold=self.mad_threshold)
+                if not report.accepted:
+                    raise RuntimeError(f"async contribution rejected: {report.reasons}")
+            new_base = fusion.damped(self._base, [params], alpha=a)
+            new_flat = None
         rec = FusionRecord(
             iteration=self.iteration, n_contributions=1, n_accepted=1,
             op=f"async-damped({a:.3f})", diff_norms=[], wall_time=time.time() - t0,
@@ -110,6 +194,7 @@ class Repository:
         if self.keep_history:
             self._snapshots.append(self._base)
         self._base = new_base
+        self._base_flat = new_flat
         self.iteration += 1
         if self.root:
             self._persist_base()
@@ -122,6 +207,91 @@ class Repository:
         if not self._pending:
             raise RuntimeError("no contributions to fuse")
         t0 = time.time()
+        if self.use_flat:
+            rec = self._fuse_pending_flat(t0)
+        else:
+            rec = self._fuse_pending_pytree(t0)
+        self.history.append(rec)
+        self._pending = []
+        self._pending_fishers = []
+        self._pending_weights = []
+        self.iteration += 1
+        if self.root:
+            self._persist_base()
+        return rec
+
+    def _cohort_weights(self, K: int) -> jnp.ndarray:
+        """Per-contributor weights for the flat engine (average/damped)."""
+        kw = self.fusion_kwargs
+        if self.fusion_op in ("average", "damped"):
+            if "weights" in kw:
+                w = list(kw["weights"])
+                if len(w) != K:
+                    raise ValueError(f"len(fusion_kwargs['weights'])={len(w)} != K={K}")
+                return jnp.asarray(w, jnp.float32)
+            if self._pending_weights and all(w is not None for w in self._pending_weights):
+                return jnp.asarray(self._pending_weights, jnp.float32)
+        return jnp.ones((K,), jnp.float32)
+
+    def _flat_alpha(self, n_effective: int) -> float:
+        """The kernel's damping coefficient for the configured operator."""
+        if self.fusion_op == "damped":
+            return float(self.fusion_kwargs.get("alpha", 1.0))
+        if self.fusion_op == "task_arithmetic":
+            # θ + λ·Σ(θ_c − θ) == θ + (λ·K)·(mean − θ)
+            return float(self.fusion_kwargs.get("lam", 1.0)) * n_effective
+        return 1.0
+
+    def _fuse_pending_flat(self, t0: float) -> FusionRecord:
+        """Single streaming pass: one kernel launch fuses the staged buffer
+        AND emits the §9 screening statistic; rejections trigger one cheap
+        weight-zeroed re-pass over the same staged buffer."""
+        self._ensure_flat_base()
+        K = len(self._pending)
+        rows = [
+            ckpt.load_flat(p)[0] if isinstance(p, str) else p
+            for p in self._pending
+        ]
+        stage = jnp.stack(rows)
+        del rows
+        w = self._cohort_weights(K)
+        alpha = self._flat_alpha(K)
+        # pass 1: fused + sq_diff in one read of the staged buffer.  Keep the
+        # buffer alive only if a screening re-pass might need it.
+        fused, sq = ops.fuse_flat(
+            self._base_flat, stage, w, alpha, donate=not self.screen)
+        report: Optional[ScreenReport] = None
+        n_accepted = K
+        if self.screen:
+            norms = np.sqrt(np.asarray(jax.device_get(sq), np.float64))
+            report = screen_norms(norms.tolist(), mad_threshold=self.mad_threshold)
+            n_accepted = len(report.accepted)
+            if not report.accepted:
+                raise RuntimeError(f"all contributions rejected: {report.reasons}")
+            if report.rejected:
+                w2 = np.asarray(jax.device_get(w), np.float32).copy()
+                w2[report.rejected] = 0.0
+                alpha = self._flat_alpha(n_accepted)
+                fused, _ = ops.fuse_flat(
+                    self._base_flat, stage, jnp.asarray(w2), alpha, donate=True)
+        fused.block_until_ready()
+        rec = FusionRecord(
+            iteration=self.iteration,
+            n_contributions=K,
+            n_accepted=n_accepted,
+            op=self.fusion_op,
+            diff_norms=report.diff_norms if report else [],
+            wall_time=time.time() - t0,
+        )
+        if self.keep_history:
+            self._snapshots.append(self._base)
+        self._base = self._spec.unflatten(fused)
+        self._base_flat = fused
+        return rec
+
+    def _fuse_pending_pytree(self, t0: float) -> FusionRecord:
+        """The seed per-leaf engine (REPRO_NO_KERNELS oracle; also serves
+        the operators the kernel does not cover)."""
         models = self._pending
         report: Optional[ScreenReport] = None
         fishers = self._pending_fishers
@@ -150,16 +320,10 @@ class Repository:
             diff_norms=report.diff_norms if report else [],
             wall_time=time.time() - t0,
         )
-        self.history.append(rec)
         if self.keep_history:
             self._snapshots.append(self._base)
         self._base = new_base
-        self._pending = []
-        self._pending_fishers = []
-        self._pending_weights = []
-        self.iteration += 1
-        if self.root:
-            self._persist_base()
+        self._base_flat = None
         return rec
 
     def rollback(self, to_iteration: int):
@@ -169,6 +333,7 @@ class Repository:
         if not (0 <= to_iteration < len(self._snapshots)):
             raise ValueError(f"no snapshot for iteration {to_iteration}")
         self._base = self._snapshots[to_iteration]
+        self._base_flat = None
         self._snapshots = self._snapshots[:to_iteration]
         self.history = self.history[:to_iteration]
         self.iteration = to_iteration
@@ -185,27 +350,54 @@ class Repository:
         meta = {
             "iteration": self.iteration,
             "fusion_op": self.fusion_op,
+            "fusion_kwargs": self.fusion_kwargs,
+            "screen": self.screen,
+            "mad_threshold": self.mad_threshold,
             "history": [
                 {
                     "iteration": r.iteration,
                     "n_contributions": r.n_contributions,
                     "n_accepted": r.n_accepted,
                     "op": r.op,
+                    "diff_norms": [float(n) for n in r.diff_norms],
+                    "wall_time": r.wall_time,
                 }
                 for r in self.history
             ],
         }
         with open(os.path.join(self.root, "repository.json"), "w") as f:
-            json.dump(meta, f, indent=2)
+            json.dump(meta, f, indent=2, default=_json_default)
 
     @classmethod
     def open(cls, root: str, **kw) -> "Repository":
-        """Re-open an on-disk repository at its latest base model."""
+        """Re-open an on-disk repository at its latest base model, restoring
+        the fusion configuration, screen settings, and history recorded in
+        ``repository.json`` (explicit keyword arguments win)."""
         with open(os.path.join(root, "repository.json")) as f:
             meta = json.load(f)
         it = meta["iteration"]
         base = ckpt.load(os.path.join(root, f"base_iter{it:04d}.npz"))
-        repo = cls(base, fusion_op=meta.get("fusion_op", "average"), root=None, **kw)
+        kw.setdefault("fusion_op", meta.get("fusion_op", "average"))
+        if meta.get("fusion_kwargs"):
+            kw.setdefault("fusion_kwargs", meta["fusion_kwargs"])
+        kw.setdefault("screen", meta.get("screen", True))
+        kw.setdefault("mad_threshold", meta.get("mad_threshold", 5.0))
+        # constructed with root=None so __init__ does not re-persist (and
+        # clobber) base_iter0000; root/spill are restored afterwards
+        spill = bool(kw.pop("spill", False))
+        repo = cls(base, root=None, **kw)
         repo.iteration = it
         repo.root = root
+        repo.spill = spill
+        repo.history = [
+            FusionRecord(
+                iteration=r["iteration"],
+                n_contributions=r["n_contributions"],
+                n_accepted=r["n_accepted"],
+                op=r["op"],
+                diff_norms=[float(n) for n in r.get("diff_norms", [])],
+                wall_time=float(r.get("wall_time", 0.0)),
+            )
+            for r in meta.get("history", [])
+        ]
         return repo

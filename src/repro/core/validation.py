@@ -2,13 +2,24 @@
 harmful update done by a contributor": monitor diffs from the base and
 reject anomalous or non-finite contributions before fusing.
 
-Checks (all cheap, streaming; the Pallas ``cold_fuse`` kernel computes the
-same diff norms for free during fusion):
+Checks (all cheap, streaming):
 
 * non-finite leaves (NaN/Inf screens),
 * diff-norm too LARGE vs the cohort (runaway finetune / random weights),
 * diff-norm zero (no-op "contribution"),
 * optional absolute norm ceiling.
+
+Two entry points share the decision logic:
+
+* ``screen_contributions`` — pytree-level: reads every contribution to
+  compute its diff norm (the seed path; one extra pass over the data).
+* ``screen_norms`` — statistic-level: consumes *precomputed* diff norms.
+  The Pallas ``cold_fuse`` kernel emits ``sq_diff[k] = ||θ_k − base||²``
+  for free during fusion, so the Repository's streaming engine feeds
+  ``sqrt(sq_diff)`` straight in here and never re-reads a contribution
+  just to screen it.  A non-finite contribution surfaces as a NaN/Inf
+  norm, which this function treats exactly like the pytree-level
+  non-finite check.
 """
 from __future__ import annotations
 
@@ -33,30 +44,24 @@ def diff_norm(base, model) -> float:
     return float(jnp.sqrt(tree_sq_norm(tree_sub(model, base))))
 
 
-def screen_contributions(
-    base,
-    models: Sequence,
+def screen_norms(
+    norms: Sequence[float],
     *,
     mad_threshold: float = 5.0,
     max_norm: Optional[float] = None,
     allow_zero: bool = False,
 ) -> ScreenReport:
-    """Return indices of models safe to fuse.
-
-    A contribution is rejected if it contains non-finite values, has zero
-    diff (unless ``allow_zero``), exceeds ``max_norm``, or its diff norm is a
-    ``mad_threshold``-sigma outlier under the median-absolute-deviation rule
-    (robust to the outlier itself contaminating the statistics).
-    """
+    """Screen from precomputed diff norms (NaN/Inf norm = non-finite
+    contribution).  Same decision rule as ``screen_contributions``: reject
+    non-finite, zero-diff (unless ``allow_zero``), over-ceiling, and
+    ``mad_threshold``-sigma MAD outliers (cohort of >= 3; the median/MAD
+    statistics are robust to the outlier contaminating them)."""
     report = ScreenReport()
-    norms = []
-    finite = []
-    for m in models:
-        finite.append(bool(tree_isfinite(m)))
-        norms.append(diff_norm(base, m) if finite[-1] else float("inf"))
+    norms = [float(n) for n in norms]
+    finite = [bool(np.isfinite(n)) for n in norms]
     report.diff_norms = norms
 
-    arr = np.asarray([n for n, f in zip(norms, finite) if f and np.isfinite(n)])
+    arr = np.asarray([n for n, f in zip(norms, finite) if f])
     med = float(np.median(arr)) if arr.size else 0.0
     mad = float(np.median(np.abs(arr - med))) if arr.size else 0.0
     cutoff_hi = med + mad_threshold * max(mad, 1e-12 + 0.05 * med)
@@ -77,3 +82,23 @@ def screen_contributions(
         else:
             report.accepted.append(i)
     return report
+
+
+def screen_contributions(
+    base,
+    models: Sequence,
+    *,
+    mad_threshold: float = 5.0,
+    max_norm: Optional[float] = None,
+    allow_zero: bool = False,
+) -> ScreenReport:
+    """Return indices of models safe to fuse (pytree path: reads every
+    contribution once to compute its diff norm)."""
+    norms = []
+    for m in models:
+        if bool(tree_isfinite(m)):
+            norms.append(diff_norm(base, m))
+        else:
+            norms.append(float("inf"))
+    return screen_norms(
+        norms, mad_threshold=mad_threshold, max_norm=max_norm, allow_zero=allow_zero)

@@ -8,6 +8,25 @@ three times.  This kernel performs, in a single VMEM pass per block:
     fused = base + α·(Σ_k w_k θ_k − base)          (damped weighted average)
     sq_diff[k] += ||θ_k − base||²_block            (screening statistic)
 
+so one streaming read of the staged contributions yields BOTH the fused
+model and the §9 screening statistics — the Repository's single-pass
+screen+fuse contract (see docs/fusion_engine.md).
+
+Contract details:
+
+* **zero-weight masking** — a contributor with weight exactly 0 contributes
+  nothing to ``fused`` even if its parameters are non-finite (NaN·0 would
+  otherwise poison the average).  This is what lets the Repository's second
+  pass simply zero the weights of screened-out contributors and re-use the
+  already-staged ``[K, N]`` buffer.  ``sq_diff`` is still computed from the
+  raw values, so the screening statistic always reflects the real diff.
+* **bf16 streaming, f32 accumulation** — contributions may arrive in bf16
+  (half the HBM traffic); all arithmetic runs in f32 inside VMEM and the
+  fused output is cast back to the base dtype.
+* **donation** — ``donate=True`` donates the staged ``[K, N]`` buffer to
+  XLA (the Repository discards it after the fuse), letting the backend
+  reuse its pages for the output instead of allocating fresh ones.
+
 TPU adaptation (DESIGN.md §2): parameters are flattened and tiled into
 (8·128)-aligned VMEM blocks; the K contributions arrive as a stacked [K, N]
 operand so the per-block working set is (K+1)·BLOCK·4B — BLOCK is chosen so
@@ -18,6 +37,7 @@ Pallas reduction.
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Tuple
 
 import jax
@@ -25,6 +45,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 DEFAULT_BLOCK = 64 * 1024  # f32 elems: (K+1)*256KB at K=8 -> ~2.3 MB VMEM
+_LANE = 1024               # min 1-D tile granularity (8 sublanes x 128 lanes)
 
 
 def _kernel(w_ref, base_ref, contribs_ref, alpha_ref, fused_ref, sq_ref):
@@ -39,33 +60,31 @@ def _kernel(w_ref, base_ref, contribs_ref, alpha_ref, fused_ref, sq_ref):
     w = w_ref[...].astype(jnp.float32)  # [K]
     alpha = alpha_ref[0].astype(jnp.float32)
     wn = w / jnp.sum(w)
-    avg = jnp.einsum("k,kn->n", wn, contribs)
+    # zero-weight rows are masked out entirely: 0 * NaN must not reach the sum
+    masked = jnp.where((w == 0.0)[:, None], 0.0, contribs)
+    avg = jnp.einsum("k,kn->n", wn, masked)
     fused_ref[...] = (base + alpha * (avg - base)).astype(fused_ref.dtype)
     diff = contribs - base[None, :]
     sq_ref[...] += jnp.sum(diff * diff, axis=1)
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
-def cold_fuse(
-    base: jax.Array,      # [N]
-    contribs: jax.Array,  # [K, N]
-    weights: jax.Array,   # [K]
-    alpha=1.0,
-    *,
-    block: int = DEFAULT_BLOCK,
-    interpret: bool = True,
-) -> Tuple[jax.Array, jax.Array]:
-    """Returns (fused [N], sq_diff [K]).  N is padded to the block size
-    internally (padding contributes 0 to both outputs)."""
+def _pad_to_blocks(base, contribs, block):
     K, N = contribs.shape
     pad = (-N) % block
     if pad:
-        base_p = jnp.concatenate([base, jnp.zeros((pad,), base.dtype)])
-        contribs_p = jnp.concatenate([contribs, jnp.zeros((K, pad), contribs.dtype)], axis=1)
-    else:
-        base_p, contribs_p = base, contribs
+        base = jnp.concatenate([base, jnp.zeros((pad,), base.dtype)])
+        contribs = jnp.concatenate(
+            [contribs, jnp.zeros((K, pad), contribs.dtype)], axis=1)
+    return base, contribs
+
+
+def _cold_fuse_impl(base, contribs, weights, alpha, block, interpret):
+    K, N = contribs.shape
+    # shrink the block for small inputs so padding stays bounded (tile-aligned)
+    block = min(block, max(_LANE, ((N + _LANE - 1) // _LANE) * _LANE))
+    base_p, contribs_p = _pad_to_blocks(base, contribs, block)
     n_blocks = base_p.shape[0] // block
-    alpha_arr = jnp.asarray([alpha], jnp.float32)
+    alpha_arr = jnp.asarray(jnp.reshape(alpha, (1,)), jnp.float32)
 
     fused, sq = pl.pallas_call(
         _kernel,
@@ -87,3 +106,37 @@ def cold_fuse(
         interpret=interpret,
     )(weights, base_p, contribs_p, alpha_arr)
     return fused[:N], sq
+
+
+_jit_fuse = functools.partial(jax.jit, static_argnames=("block", "interpret"))
+_cold_fuse = _jit_fuse(_cold_fuse_impl)
+_cold_fuse_donated = _jit_fuse(_cold_fuse_impl, donate_argnums=(1,))
+
+
+def call_donated(fn, *args, **kw):
+    """Invoke a donated-jit function; backends that decline the donation
+    (CPU) emit a warning we deliberately swallow."""
+    with warnings.catch_warnings():
+        warnings.filterwarnings("ignore", message=".*donat.*")
+        return fn(*args, **kw)
+
+
+def cold_fuse(
+    base: jax.Array,      # [N]
+    contribs: jax.Array,  # [K, N]
+    weights: jax.Array,   # [K]
+    alpha=1.0,
+    *,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = True,
+    donate: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (fused [N], sq_diff [K]).  N is padded to the block size
+    internally (padding contributes 0 to both outputs).  ``donate=True``
+    hands the ``contribs`` buffer to XLA for reuse — only pass buffers you
+    will not touch again."""
+    if donate:
+        return call_donated(
+            _cold_fuse_donated, base, contribs, weights, alpha,
+            block=block, interpret=interpret)
+    return _cold_fuse(base, contribs, weights, alpha, block=block, interpret=interpret)

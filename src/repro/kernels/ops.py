@@ -15,9 +15,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.cold_fuse import call_donated as _call_donated
 from repro.kernels.cold_fuse import cold_fuse as _cold_fuse_kernel
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
 from repro.kernels.rwkv6_scan import rwkv6_scan as _rwkv_kernel
+from repro.utils.flat import FlatSpec
 
 RWKV_LOGW_FLOOR = -4.0  # kernel contract (see rwkv6_scan docstring)
 
@@ -39,30 +41,45 @@ def _interpret() -> bool:
 # ---------------------------------------------------------------------------
 
 
-def fuse_flat(base, contribs, weights, alpha: float = 1.0) -> Tuple[jax.Array, jax.Array]:
+def fuse_flat(base, contribs, weights, alpha: float = 1.0,
+              *, donate: bool = False) -> Tuple[jax.Array, jax.Array]:
     """Fused repository update over flattened parameter vectors.
-    Returns (fused [N], sq_diff [K])."""
-    if kernels_enabled():
-        return _cold_fuse_kernel(base, contribs, weights, alpha, interpret=_interpret())
-    return ref.cold_fuse(base, contribs, weights, alpha)
+    Returns (fused [N], sq_diff [K]).  ``donate=True`` hands the staged
+    ``contribs`` buffer to the backend for reuse (kernel path only).
+
+    Unlike attention/rwkv, the Mosaic kernel only runs on real TPUs: the
+    interpret-mode emulation is a correctness harness, several times slower
+    than plain XLA, so on other backends the (jitted) flat jnp oracle serves
+    the same single-pass contract (one read of the staged [K, N] buffer
+    yields both the fused model and the screening statistics)."""
+    if kernels_enabled() and not _interpret():
+        return _cold_fuse_kernel(
+            base, contribs, weights, alpha, interpret=False, donate=donate)
+    if donate:
+        return _call_donated(_ref_fuse_donated, base, contribs, weights, alpha)
+    return _ref_fuse(base, contribs, weights, alpha)
 
 
-def fuse_pytrees(base_tree, contrib_trees, weights=None, alpha: float = 1.0):
-    """Repository fuse over pytrees via the kernel: flatten, fuse, restore.
-    Returns (fused_tree, sq_diff [K] aggregated over all leaves)."""
+_ref_fuse = jax.jit(ref.cold_fuse)
+_ref_fuse_donated = jax.jit(ref.cold_fuse, donate_argnums=(1,))
+
+
+def fuse_pytrees(base_tree, contrib_trees, weights=None, alpha: float = 1.0,
+                 *, spec: Optional[FlatSpec] = None, donate: bool = False):
+    """Repository fuse over pytrees: flatten the WHOLE model into one
+    contiguous buffer per contributor, stack to [K, N], and issue ONE
+    streaming kernel launch (not one padded launch per leaf).
+
+    Returns (fused_tree, sq_diff [K] over all parameters).  Pass ``spec``
+    when the caller already holds the FlatSpec (saves re-deriving it)."""
     K = len(contrib_trees)
     w = jnp.ones((K,), jnp.float32) if weights is None else jnp.asarray(weights, jnp.float32)
-    leaves_b, treedef = jax.tree.flatten(base_tree)
-    leaves_c = [jax.tree.leaves(t) for t in contrib_trees]
-    fused_leaves = []
-    sq_total = jnp.zeros((K,), jnp.float32)
-    for i, lb in enumerate(leaves_b):
-        flat_b = lb.reshape(-1)
-        flat_c = jnp.stack([leaves_c[k][i].reshape(-1) for k in range(K)])
-        fused, sq = fuse_flat(flat_b, flat_c, w, alpha)
-        fused_leaves.append(fused.reshape(lb.shape))
-        sq_total = sq_total + sq
-    return jax.tree.unflatten(treedef, fused_leaves), sq_total
+    if spec is None:
+        spec = FlatSpec.from_tree(base_tree)
+    base_flat = spec.flatten(base_tree)
+    stage = jnp.stack([spec.flatten(t) for t in contrib_trees])
+    fused, sq = fuse_flat(base_flat, stage, w, alpha, donate=donate)
+    return spec.unflatten(fused), sq
 
 
 def attention(q, k, v, *, causal=True, window: Optional[int] = None, q_offset: int = 0,

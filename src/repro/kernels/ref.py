@@ -22,12 +22,18 @@ def cold_fuse(
 
     fused = base + alpha * (Σ_k w_k θ_k / Σ_k w_k − base)
     sq_diff[k] = ||θ_k − base||² (the §9 screening statistic).
+
+    Zero-weight contributions are masked out of the average entirely (even
+    non-finite ones — NaN·0 must not poison the sum), matching the Pallas
+    kernel's single-pass screen+fuse contract; sq_diff always reflects the
+    raw values.
     """
     w = weights.astype(jnp.float32)
-    w = w / jnp.sum(w)
+    wn = w / jnp.sum(w)
     cf = contribs.astype(jnp.float32)
     bf = base.astype(jnp.float32)
-    avg = jnp.einsum("k,kn->n", w, cf)
+    masked = jnp.where((w == 0.0)[:, None], 0.0, cf)
+    avg = jnp.einsum("k,kn->n", wn, masked)
     fused = (bf + alpha * (avg - bf)).astype(base.dtype)
     sq = jnp.sum(jnp.square(cf - bf[None, :]), axis=1)
     return fused, sq

@@ -249,9 +249,14 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, *, strategy: str = "sync
         res = _analyze(compiled, mesh, cfg, shape, training=True,
                        wall_s=time.time() - t0, microbatches=mb,
                        extra={"strategy": "cold", "contributors": C})
-        # fuse step (the Repository collective), reported separately
+        # fuse step (the Repository collective), reported separately.
+        # flat=False: the flat fuse currently pins its staging buffer to a
+        # replicated sharding (GSPMD concat+mean workaround, see
+        # make_fuse_step), which at pod scale would charge a full parameter
+        # all-gather to the fuse budget; the per-leaf collective is the
+        # honest pod-scale model until the sharded flat fuse lands (ROADMAP)
         t1 = time.time()
-        fuse = make_fuse_step(cfg, mesh, ColdSchedule())
+        fuse = make_fuse_step(cfg, mesh, ColdSchedule(), flat=False)
         with mesh:
             jf = jax.jit(fuse, in_shardings=(state_sh["params"],),
                          out_shardings=state_sh["params"])

@@ -1,0 +1,178 @@
+"""FlatParams — the contiguous flat-buffer parameter representation.
+
+The Repository hot path (screen + fuse, paper §3/§9) is HBM-bandwidth-bound
+streaming arithmetic over whole checkpoints.  Operating per-leaf costs one
+device dispatch per (leaf, contributor) pair and forces the Pallas kernel
+into one padded launch per leaf.  ``FlatSpec`` fixes the layout once:
+
+* a **static spec** — an ordered tuple of ``(path, shape, dtype, offset)``
+  records plus the treedef — hashable, so it can ride through ``jax.jit``
+  as a static argument and be serialized next to checkpoints;
+* a **1-D buffer** of ``spec.size`` elements in a single storage dtype
+  (bf16 if every floating leaf is bf16, else f32), so K contributions stack
+  into one ``[K, N]`` operand and the whole model fuses in ONE kernel launch.
+
+Round-trips are views/reshapes inside jit (XLA fuses the slicing into the
+consumer); nothing here allocates per-leaf Python-side temporaries beyond
+the single concatenated buffer.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils.pytree import path_str
+
+
+@dataclass(frozen=True)
+class LeafSpec:
+    path: str
+    shape: Tuple[int, ...]
+    dtype: str          # canonical dtype name, e.g. "float32", "bfloat16"
+    offset: int         # element offset into the flat buffer
+    size: int           # number of elements
+
+    def slice_of(self, buf: jax.Array) -> jax.Array:
+        return buf[self.offset : self.offset + self.size].reshape(self.shape)
+
+
+@dataclass(frozen=True)
+class FlatSpec:
+    """Static description of a pytree's flat layout.  Hashable/comparable so
+    two checkpoints with the same architecture share one spec (and one jit
+    cache entry)."""
+
+    leaves: Tuple[LeafSpec, ...]
+    treedef: Any                 # jax PyTreeDef (hashable)
+    size: int                    # total elements
+    dtype: str                   # storage dtype of the flat buffer
+
+    # -- construction ---------------------------------------------------
+    @classmethod
+    def from_tree(cls, tree) -> "FlatSpec":
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        specs: List[LeafSpec] = []
+        off = 0
+        all_bf16 = True
+        for path, leaf in flat:
+            arr = jnp.asarray(leaf)
+            n = int(np.prod(arr.shape)) if arr.shape else 1
+            specs.append(LeafSpec(path_str(path), tuple(arr.shape), arr.dtype.name, off, n))
+            if arr.dtype != jnp.bfloat16:
+                all_bf16 = False
+            off += n
+        storage = "bfloat16" if (specs and all_bf16) else "float32"
+        return cls(tuple(specs), treedef, off, storage)
+
+    # -- round trips ----------------------------------------------------
+    def flatten(self, tree) -> jax.Array:
+        """Pytree -> contiguous [size] buffer in the storage dtype.
+
+        Concrete leaves on the CPU backend are concatenated through numpy —
+        XLA:CPU's many-operand concatenate is ~25x slower than a memcpy
+        (measured: 94ms vs 3.9ms for 58 leaves / 4 MB) and this staging
+        step IS the Repository upload hot path.  Tracers (or accelerator
+        backends, where device->host would be the slow path) go through a
+        cached jitted concatenation instead — one dispatch per call, not
+        one per leaf."""
+        flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+        if len(flat) != len(self.leaves):
+            raise ValueError(
+                f"tree has {len(flat)} leaves, spec expects {len(self.leaves)}")
+        leaves = []
+        for spec, (path, leaf) in zip(self.leaves, flat):
+            path = path_str(path)
+            if path != spec.path:
+                raise ValueError(f"leaf path {path!r} != spec path {spec.path!r}")
+            shape = tuple(jnp.shape(leaf))
+            if shape != spec.shape:
+                raise ValueError(
+                    f"leaf {spec.path}: shape {shape} != spec {spec.shape}")
+            leaves.append(leaf)
+        concrete = not any(isinstance(l, jax.core.Tracer) for l in leaves)
+        if concrete and jax.default_backend() == "cpu":
+            dt = jnp.dtype(self.dtype)
+            parts = [np.ravel(np.asarray(l)).astype(dt, copy=False) for l in leaves]
+            buf = np.concatenate(parts) if parts else np.zeros((0,), dt)
+            return jnp.asarray(buf)
+        return _flatten_fn(self)(tuple(leaves))
+
+    def unflatten(self, buf) -> Any:
+        """Contiguous [size] buffer -> pytree with original shapes/dtypes."""
+        buf = jnp.asarray(buf)
+        if buf.shape != (self.size,):
+            raise ValueError(f"buffer shape {buf.shape} != ({self.size},)")
+        return jax.tree.unflatten(self.treedef, _unflatten_fn(self)(buf))
+
+    # -- serialization (for on-disk spill / flat checkpoints) -----------
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "dtype": self.dtype,
+            "size": self.size,
+            "leaves": [
+                {"path": s.path, "shape": list(s.shape), "dtype": s.dtype,
+                 "offset": s.offset, "size": s.size}
+                for s in self.leaves
+            ],
+        }
+
+    @classmethod
+    def from_json(cls, meta: Dict[str, Any]) -> "FlatSpec":
+        """Rebuild a spec from its JSON form.  The treedef is reconstructed
+        as a nested dict keyed by the path components — the same convention
+        the npz checkpoint format uses — so a spec round-tripped through disk
+        unflattens to a plain dict tree.
+
+        The leaf tuple is re-derived by flattening that reconstructed dict
+        (with each LeafSpec as its own placeholder), NOT taken in JSON file
+        order: dicts flatten in sorted-key order, which differs from the
+        original flatten order whenever paths do not sort lexicographically
+        (e.g. list indices '0','1',...,'10' sort as '0','1','10','2',...).
+        The recorded offsets keep every leaf pointing at its original slice
+        of the buffer regardless of the new ordering."""
+        nested: Dict[str, Any] = {}
+        for s in meta["leaves"]:
+            node = nested
+            parts = s["path"].split("/")
+            for p in parts[:-1]:
+                node = node.setdefault(p, {})
+            node[parts[-1]] = LeafSpec(
+                s["path"], tuple(s["shape"]), s["dtype"], s["offset"], s["size"])
+        flat, treedef = jax.tree_util.tree_flatten(
+            nested, is_leaf=lambda x: isinstance(x, LeafSpec))
+        return cls(tuple(flat), treedef, int(meta["size"]), meta["dtype"])
+
+
+@functools.lru_cache(maxsize=128)
+def _flatten_fn(spec: FlatSpec):
+    dt = jnp.dtype(spec.dtype)
+
+    @jax.jit
+    def f(leaves):
+        if not leaves:
+            return jnp.zeros((0,), dt)
+        return jnp.concatenate([jnp.ravel(l).astype(dt) for l in leaves])
+
+    return f
+
+
+@functools.lru_cache(maxsize=128)
+def _unflatten_fn(spec: FlatSpec):
+    casts = [(s, jnp.dtype(s.dtype)) for s in spec.leaves]
+
+    @jax.jit
+    def f(buf):
+        return [s.slice_of(buf).astype(dt) for s, dt in casts]
+
+    return f
+
+
+def flatten_tree(tree) -> Tuple[jax.Array, FlatSpec]:
+    """Convenience: build the spec and flatten in one call."""
+    spec = FlatSpec.from_tree(tree)
+    return spec.flatten(tree), spec

@@ -1,0 +1,465 @@
+"""Streaming flat-buffer fusion engine: FlatParams round-trips, kernel vs
+jnp-oracle parity, single-pass screen+fuse semantics, spill, persistence."""
+import contextlib
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import io as ckpt
+from repro.core import fusion
+from repro.core.repository import Repository
+from repro.core.validation import screen_norms
+from repro.kernels import ops
+from repro.utils.flat import FlatSpec, flatten_tree
+
+KEY = jax.random.PRNGKey(3)
+
+
+@contextlib.contextmanager
+def kernels(enabled: bool):
+    prev = ops.kernels_enabled()
+    ops.use_kernels(enabled)
+    try:
+        yield
+    finally:
+        ops.use_kernels(prev)
+
+
+def _odd_tree(key, dtype=jnp.float32, scale=1.0):
+    """Non-block-aligned leaf shapes (nothing is a multiple of 8*128)."""
+    ks = jax.random.split(key, 4)
+    return {
+        "emb": {"w": jax.random.normal(ks[0], (7, 13), jnp.float32).astype(dtype) * scale},
+        "blocks": [
+            {"w": jax.random.normal(ks[1], (5,), jnp.float32).astype(dtype) * scale},
+            {"w": jax.random.normal(ks[2], (3, 11, 2), jnp.float32).astype(dtype) * scale},
+        ],
+        "head": jax.random.normal(ks[3], (17,), jnp.float32).astype(dtype) * scale,
+    }
+
+
+# ---------------------------------------------------------------------------
+# FlatParams round trips
+# ---------------------------------------------------------------------------
+
+
+def test_flat_roundtrip_mixed_dtypes():
+    tree = {
+        "a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+        "b": {"c": jnp.ones((4,), jnp.bfloat16), "d": jnp.asarray(7, jnp.int32)},
+    }
+    buf, spec = flatten_tree(tree)
+    assert spec.dtype == "float32"  # mixed tree widens to f32 storage
+    assert buf.shape == (11,)
+    back = spec.unflatten(buf)
+    assert jax.tree.structure(back) == jax.tree.structure(tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_flat_roundtrip_bf16_storage():
+    tree = {"w": jnp.ones((3, 5), jnp.bfloat16), "v": jnp.zeros((9,), jnp.bfloat16)}
+    buf, spec = flatten_tree(tree)
+    assert spec.dtype == "bfloat16"  # all-bf16 tree stays bf16 (half the HBM traffic)
+    back = spec.unflatten(buf)
+    assert back["w"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(back["w"], np.float32), 1.0)
+
+
+def test_flat_spec_json_roundtrip():
+    tree = _odd_tree(KEY)
+    buf, spec = flatten_tree(tree)
+    spec2 = FlatSpec.from_json(spec.to_json())
+    assert spec2.size == spec.size and spec2.dtype == spec.dtype
+    back = spec2.unflatten(buf)  # reconstructed treedef is path-keyed dicts
+    np.testing.assert_allclose(
+        np.asarray(back["emb"]["w"]), np.asarray(tree["emb"]["w"]))
+
+
+def test_flat_spec_json_roundtrip_nonsorted_paths():
+    """List indices '0'..'10' do NOT sort lexicographically ('10' < '2'):
+    the reconstructed dict tree flattens in a different order than the
+    original list, and every value must still land at its own path."""
+    tree = {"l": [jnp.full((3,), float(i)) for i in range(11)]}
+    buf, spec = flatten_tree(tree)
+    back = FlatSpec.from_json(spec.to_json()).unflatten(buf)
+    for i in range(11):
+        np.testing.assert_array_equal(np.asarray(back["l"][str(i)]), float(i))
+
+
+def test_flat_shape_mismatch_raises():
+    tree = {"w": jnp.ones((4,))}
+    spec = FlatSpec.from_tree(tree)
+    with pytest.raises(ValueError):
+        spec.flatten({"w": jnp.ones((5,))})
+    with pytest.raises(ValueError):
+        # same leaf count and shape, different key: must not silently fuse
+        spec.flatten({"v": jnp.ones((4,))})
+    with pytest.raises(ValueError):
+        spec.unflatten(jnp.ones((3,)))
+
+
+def test_save_flat_roundtrip(tmp_path):
+    for dtype in (jnp.float32, jnp.bfloat16):
+        tree = _odd_tree(KEY, dtype=dtype)
+        buf, spec = flatten_tree(tree)
+        path = os.path.join(tmp_path, f"flat_{jnp.dtype(dtype).name}.npz")
+        ckpt.save_flat(path, buf, spec)
+        assert ckpt.is_flat(path)
+        buf2, spec2 = ckpt.load_flat(path)
+        assert buf2.dtype == buf.dtype
+        np.testing.assert_array_equal(
+            np.asarray(buf2, np.float32), np.asarray(buf, np.float32))
+        assert spec2.size == spec.size
+
+
+# ---------------------------------------------------------------------------
+# kernel path vs jnp oracle parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fuse_average_kernel_vs_oracle(dtype):
+    models = [_odd_tree(jax.random.PRNGKey(i), dtype=dtype) for i in range(4)]
+    with kernels(False):
+        want = fusion.average(models)
+    with kernels(True):
+        got = fusion.average(models)
+    rtol = 1e-5 if dtype == jnp.float32 else 2e-2
+    for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(got)):
+        assert a.dtype == b.dtype
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            rtol=rtol, atol=rtol)
+
+
+@pytest.mark.parametrize("alpha", [0.3, 1.0])
+def test_fuse_damped_kernel_vs_oracle(alpha):
+    base = _odd_tree(jax.random.PRNGKey(9))
+    models = [_odd_tree(jax.random.PRNGKey(i)) for i in range(3)]
+    weights = [1.0, 2.5, 0.5]
+    with kernels(False):
+        want = fusion.damped(base, models, alpha=alpha, weights=weights)
+    with kernels(True):
+        got = fusion.damped(base, models, alpha=alpha, weights=weights)
+    for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(got)):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+def test_fuse_task_arithmetic_kernel_vs_oracle():
+    base = _odd_tree(jax.random.PRNGKey(9))
+    models = [_odd_tree(jax.random.PRNGKey(i), scale=0.1) for i in range(3)]
+    with kernels(False):
+        want = fusion.task_arithmetic(base, models, lam=0.4)
+    with kernels(True):
+        got = fusion.task_arithmetic(base, models, lam=0.4)
+    for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(got)):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+def test_zero_weight_masks_nonfinite_row():
+    """A weight-0 contributor full of NaN must not poison the fuse — the
+    contract behind the engine's second (re-weighted) pass."""
+    N = 1000  # non-block-aligned
+    base = jax.random.normal(KEY, (N,))
+    good = jnp.stack([base + 1.0, base - 1.0])
+    bad = jnp.full((1, N), jnp.nan)
+    contribs = jnp.concatenate([good, bad])
+    w = jnp.asarray([1.0, 1.0, 0.0])
+    for enabled in (True, False):
+        with kernels(enabled):
+            fused, sq = ops.fuse_flat(base, contribs, w, 1.0)
+        np.testing.assert_allclose(np.asarray(fused), np.asarray(base), atol=1e-5)
+        assert not np.isfinite(np.asarray(sq)[2])  # statistic still honest
+
+
+# ---------------------------------------------------------------------------
+# screening edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_screen_norms_all_rejected():
+    rep = screen_norms([float("nan"), float("inf"), 0.0])
+    assert rep.accepted == [] and len(rep.rejected) == 3
+
+
+def test_screen_norms_cohort_below_three_no_mad():
+    # with only 2 finite norms the MAD outlier rule must NOT fire
+    rep = screen_norms([1.0, 1e6])
+    assert rep.accepted == [0, 1]
+    rep3 = screen_norms([1.0, 1.1, 0.9, 1e6])
+    assert 3 in rep3.rejected
+
+
+def test_screen_norms_zero_diff_allow_zero():
+    rep = screen_norms([0.0, 1.0], allow_zero=True)
+    assert rep.accepted == [0, 1]
+    rep = screen_norms([0.0, 1.0], allow_zero=False)
+    assert 0 in rep.rejected and "no-op" in rep.reasons[0]
+
+
+def test_screen_norms_max_norm_ceiling():
+    rep = screen_norms([1.0, 3.0], max_norm=2.0)
+    assert rep.accepted == [0] and 1 in rep.rejected
+
+
+# ---------------------------------------------------------------------------
+# Repository streaming engine
+# ---------------------------------------------------------------------------
+
+
+def _contribs(base, n, seed=0, scale=0.1):
+    out = []
+    for i in range(n):
+        noise = jax.tree.map(
+            lambda x, k=jax.random.fold_in(jax.random.PRNGKey(seed), i):
+                jax.random.normal(k, x.shape, jnp.float32) * scale,
+            base)
+        out.append(jax.tree.map(jnp.add, base, noise))
+    return out
+
+
+def test_repository_flat_vs_pytree_engine_parity():
+    base = _odd_tree(KEY)
+    uploads = _contribs(base, 4)
+    uploads.append(jax.tree.map(lambda x: jnp.full_like(x, jnp.nan), base))  # screened out
+    with kernels(True):
+        repo_flat = Repository(base)
+        assert repo_flat.use_flat
+        for u in uploads:
+            repo_flat.upload(u)
+        rec_flat = repo_flat.fuse_pending()
+    with kernels(False):
+        repo_leaf = Repository(base)
+        assert not repo_leaf.use_flat
+        for u in uploads:
+            repo_leaf.upload(u)
+        rec_leaf = repo_leaf.fuse_pending()
+    assert rec_flat.n_accepted == rec_leaf.n_accepted == 4
+    np.testing.assert_allclose(rec_flat.diff_norms[:4], rec_leaf.diff_norms[:4], rtol=1e-4)
+    for a, b in zip(jax.tree.leaves(repo_flat.download()),
+                    jax.tree.leaves(repo_leaf.download())):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+def test_repository_single_pass_when_all_accepted(monkeypatch):
+    """Screen-enabled fuse must be exactly ONE streaming pass over the staged
+    buffer when nothing is rejected, and exactly two when something is."""
+    calls = []
+    real = ops.fuse_flat
+
+    def counting(*a, **kw):
+        calls.append(1)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(ops, "fuse_flat", counting)
+    base = _odd_tree(KEY)
+    with kernels(True):
+        repo = Repository(base)
+        for u in _contribs(base, 4):
+            repo.upload(u)
+        rec = repo.fuse_pending()
+    assert rec.n_accepted == 4
+    assert len(calls) == 1  # screen + fuse in one pass
+
+    calls.clear()
+    with kernels(True):
+        repo = Repository(base)
+        for u in _contribs(base, 4):
+            repo.upload(u)
+        repo.upload(jax.tree.map(lambda x: jnp.full_like(x, jnp.nan), base))
+        rec = repo.fuse_pending()
+    assert rec.n_accepted == 4
+    assert len(calls) == 2  # one screen+fuse pass + one re-weighted pass
+
+
+def test_repository_flat_drops_pytrees_on_upload():
+    base = _odd_tree(KEY)
+    with kernels(True):
+        repo = Repository(base)
+        repo.upload(_contribs(base, 1)[0])
+        staged = repo._pending[0]
+        assert isinstance(staged, jax.Array) and staged.ndim == 1  # flat row, not a pytree
+
+
+def test_repository_flat_task_arithmetic():
+    base = _odd_tree(KEY)
+    uploads = _contribs(base, 3)
+    with kernels(True):
+        repo = Repository(base, fusion_op="task_arithmetic",
+                          fusion_kwargs={"lam": 0.4}, screen=False)
+        assert repo.use_flat
+        for u in uploads:
+            repo.upload(u)
+        repo.fuse_pending()
+    with kernels(False):
+        want = fusion.task_arithmetic(base, uploads, lam=0.4)
+    for a, b in zip(jax.tree.leaves(want), jax.tree.leaves(repo.download())):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+def test_repository_flat_all_rejected_raises():
+    base = _odd_tree(KEY)
+    with kernels(True):
+        repo = Repository(base)
+        repo.upload(jax.tree.map(lambda x: jnp.full_like(x, jnp.inf), base))
+        with pytest.raises(RuntimeError, match="all contributions rejected"):
+            repo.fuse_pending()
+        # the failed fuse must not have advanced or corrupted the base
+        assert repo.iteration == 0
+        for a, b in zip(jax.tree.leaves(base), jax.tree.leaves(repo.download())):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_repository_spill_to_disk(tmp_path):
+    root = str(tmp_path / "repo")
+    base = _odd_tree(KEY)
+    uploads = _contribs(base, 3)
+    with kernels(True):
+        repo = Repository(base, root=root, spill=True)
+        for u in uploads:
+            repo.upload(u)
+        # staged rows live on disk, not in memory
+        assert all(isinstance(p, str) and os.path.exists(p) for p in repo._pending)
+        rec = repo.fuse_pending()
+        assert rec.n_accepted == 3
+        repo_mem = Repository(base)
+        for u in uploads:
+            repo_mem.upload(u)
+        repo_mem.fuse_pending()
+    for a, b in zip(jax.tree.leaves(repo.download()),
+                    jax.tree.leaves(repo_mem.download())):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+def test_repository_spill_requires_root():
+    with pytest.raises(ValueError):
+        Repository(_odd_tree(KEY), spill=True)
+
+
+def test_repository_open_with_spill(tmp_path):
+    """A spill repository must be reopenable with spill=True (open()
+    constructs with root=None internally and restores root/spill after)."""
+    root = str(tmp_path / "repo")
+    base = _odd_tree(KEY)
+    with kernels(True):
+        repo = Repository(base, root=root, spill=True)
+        for u in _contribs(base, 3):
+            repo.upload(u)
+        repo.fuse_pending()
+        again = Repository.open(root, spill=True)
+        assert again.spill and again.root == root
+        again.upload(_contribs(again.download(), 1)[0])
+        rec = again.fuse_pending()
+    assert rec.n_accepted == 1 and again.iteration == 2
+
+
+def test_make_fuse_step_mesh_without_contrib_axis():
+    """flat=True must fall back to the per-leaf reduction on meshes that
+    have no contributor axis instead of crashing."""
+    from jax.sharding import Mesh
+
+    from repro.core.distributed import ColdSchedule, make_fuse_step
+
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    params = {"w": jnp.stack([jnp.zeros((4,)), jnp.full((4,), 2.0)])}
+    fuse = make_fuse_step(None, mesh, ColdSchedule())
+    out = jax.jit(fuse)(params)
+    np.testing.assert_allclose(np.asarray(out["w"]), 1.0)
+
+
+def test_repository_open_restores_settings(tmp_path):
+    root = str(tmp_path / "repo")
+    base = _odd_tree(KEY)
+    with kernels(True):
+        repo = Repository(
+            base, root=root, fusion_op="damped",
+            fusion_kwargs={"alpha": 0.5}, screen=False, mad_threshold=3.0)
+        for u in _contribs(base, 3):
+            repo.upload(u)
+        rec = repo.fuse_pending()
+        again = Repository.open(root)
+    assert again.iteration == 1
+    assert again.fusion_op == "damped"
+    assert again.fusion_kwargs == {"alpha": 0.5}
+    assert again.screen is False
+    assert again.mad_threshold == 3.0
+    assert len(again.history) == 1
+    assert again.history[0].n_contributions == rec.n_contributions
+    assert again.history[0].op == "damped"
+    np.testing.assert_allclose(again.history[0].diff_norms, rec.diff_norms)
+    for a, b in zip(jax.tree.leaves(repo.download()), jax.tree.leaves(again.download())):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-7)
+
+
+def test_repository_async_flat_single_pass(monkeypatch):
+    calls = []
+    real = ops.fuse_flat
+
+    def counting(*a, **kw):
+        calls.append(1)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(ops, "fuse_flat", counting)
+    base = _odd_tree(KEY)
+    contrib = _contribs(base, 1)[0]
+    with kernels(True):
+        repo = Repository(base)
+        repo.contribute_async(contrib, alpha=0.5)
+    assert len(calls) == 1
+    with kernels(False):
+        repo2 = Repository(base)
+        repo2.contribute_async(contrib, alpha=0.5)
+    for a, b in zip(jax.tree.leaves(repo.download()), jax.tree.leaves(repo2.download())):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+def test_repository_async_flat_rejects_nan():
+    base = _odd_tree(KEY)
+    with kernels(True):
+        repo = Repository(base)
+        with pytest.raises(RuntimeError, match="rejected"):
+            repo.contribute_async(jax.tree.map(lambda x: jnp.full_like(x, jnp.nan), base))
+        assert repo.iteration == 0
+
+
+# ---------------------------------------------------------------------------
+# atomic checkpoint writes
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_write_is_atomic(tmp_path, monkeypatch):
+    """A crash mid-write must leave the previous file intact and no temp
+    droppings behind."""
+    path = os.path.join(tmp_path, "m.npz")
+    ckpt.save(path, {"w": jnp.zeros((4,))})
+
+    real_savez = np.savez
+
+    def exploding(fname, **arrays):
+        real_savez(fname, **arrays)  # file fully written...
+        raise OSError("simulated crash before publish")
+
+    monkeypatch.setattr(np, "savez", exploding)
+    with pytest.raises(OSError):
+        ckpt.save(path, {"w": jnp.ones((4,))})
+    monkeypatch.undo()
+
+    back = ckpt.load(path)  # previous checkpoint survives untouched
+    np.testing.assert_array_equal(np.asarray(back["w"]), 0.0)
+    leftovers = [f for f in os.listdir(tmp_path) if "tmp" in f]
+    assert leftovers == []
+
+
+def test_checkpoint_save_appends_npz_suffix(tmp_path):
+    """np.savez semantics: a suffix-less target still produces <name>.npz."""
+    ckpt.save(os.path.join(tmp_path, "model"), {"w": jnp.ones((2,))})
+    assert os.path.exists(os.path.join(tmp_path, "model.npz"))
+    back = ckpt.load(os.path.join(tmp_path, "model.npz"))
+    np.testing.assert_array_equal(np.asarray(back["w"]), 1.0)

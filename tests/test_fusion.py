@@ -1,17 +1,15 @@
 """Fusion-operator unit + property tests (hypothesis) — invariants of the
 paper's §3 operator and the §8 extensions."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
 
 from repro.core import fusion
 
-hypothesis.settings.register_profile("ci", deadline=None, max_examples=30)
-hypothesis.settings.load_profile("ci")
+# When hypothesis is missing, only the @given tests skip — the deterministic
+# tests below still run (see the shim for details)
+from _hypothesis_compat import given, st  # noqa: E402
 
 
 def _trees(draw, n_models, shape=(3, 4)):
