@@ -11,9 +11,24 @@ leaf shapes, ~58 leaves), upload -> screen -> fuse -> publish wall time on:
   staging row, ``fuse_pending`` issues ONE kernel launch that returns the
   fused model and the screening statistics together.
 
+A third row covers the **mesh-sharded engine** (docs/sharding.md): the same
+upload -> screen -> fuse -> publish flow with the staging buffer laid out
+block-cyclically over a forced 8-device CPU mesh
+(``--xla_force_host_platform_device_count``).  Because the fake devices
+share one physical CPU this measures the sharding *overhead* (layout,
+shard_map dispatch, the one all-reduce), not a speedup — the number to
+watch is that overhead staying small relative to the fuse itself.  Run
+directly with ``python -m benchmarks.fuse_e2e --mesh 8``; ``run()`` spawns
+that subprocess automatically (device count must be fixed before jax
+initializes) and the rows land in BENCH_kernels.json.
+
 The speedup is recorded in BENCH_kernels.json (benchmarks/run.py) so every
 future PR inherits the perf trajectory.
 """
+import argparse
+import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -59,9 +74,9 @@ def _contributions(base, k):
     return out
 
 
-def _run_once(base, contribs, *, flat: bool) -> float:
+def _run_once(base, contribs, *, flat: bool, mesh=None) -> float:
     t0 = time.time()
-    repo = Repository(base, use_flat=flat)
+    repo = Repository(base, use_flat=flat if mesh is None else None, mesh=mesh)
     for c in contribs:
         repo.upload(c)
     repo.fuse_pending()
@@ -69,9 +84,9 @@ def _run_once(base, contribs, *, flat: bool) -> float:
     return (time.time() - t0) * 1e6
 
 
-def _best_of(base, contribs, *, flat: bool, reps: int = 3) -> float:
-    _run_once(base, contribs, flat=flat)  # warm the jit caches
-    return min(_run_once(base, contribs, flat=flat) for _ in range(reps))
+def _best_of(base, contribs, *, flat: bool, mesh=None, reps: int = 3) -> float:
+    _run_once(base, contribs, flat=flat, mesh=mesh)  # warm the jit caches
+    return min(_run_once(base, contribs, flat=flat, mesh=mesh) for _ in range(reps))
 
 
 def run(rows: C.Rows):
@@ -95,3 +110,86 @@ def run(rows: C.Rows):
              f"K={K};params={n_params};leaves={n_leaves}")
     rows.add("fuse_e2e/flat_stream", us_flat,
              f"speedup={speedup:.2f}x;stream_GB={gb:.3f}")
+
+    # mesh-sharded engine: the fake device count must be set before jax
+    # initializes, so the measurement runs in a subprocess and its rows are
+    # merged here (same CSV contract -> same BENCH_kernels.json entries)
+    for line in _mesh_bench_subprocess(8):
+        name, us, derived = line.split(",", 2)
+        rows.add(name, float(us), derived)
+
+
+def _force_device_env(n_devices: int) -> dict:
+    """Env with the forced host-platform device count APPENDED to any
+    pre-existing XLA_FLAGS (so user tuning/determinism flags survive and
+    the mesh rows are measured under the same XLA config as the rest)."""
+    env = dict(os.environ)
+    flags = env.get("XLA_FLAGS", "")
+    env["XLA_FLAGS"] = (flags + " " if flags else "") + \
+        f"--xla_force_host_platform_device_count={n_devices}"
+    return env
+
+
+def _mesh_bench_subprocess(n_devices: int):
+    env = _force_device_env(n_devices)
+    env["PYTHONPATH"] = "src" + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    try:
+        res = subprocess.run(
+            [sys.executable, "-m", "benchmarks.fuse_e2e", "--mesh", str(n_devices)],
+            capture_output=True, text=True, env=env, timeout=600,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        )
+    except subprocess.TimeoutExpired:
+        return [f"fuse_e2e/mesh{n_devices}_ERROR,0.0,timeout"]
+    if res.returncode != 0:
+        return [f"fuse_e2e/mesh{n_devices}_ERROR,0.0,rc={res.returncode}"]
+    return [l for l in res.stdout.splitlines() if l.startswith("fuse_e2e/")]
+
+
+def _mesh_main(n_devices: int) -> None:
+    """Entry for the subprocess: sharded vs single-device fuse on a forced
+    n-device host-platform mesh.  Prints fuse_e2e/ CSV rows on stdout."""
+    assert jax.device_count() == n_devices, (
+        f"expected {n_devices} devices, got {jax.device_count()} — "
+        "set XLA_FLAGS=--xla_force_host_platform_device_count before jax init")
+    mesh = jax.make_mesh((n_devices,), ("model",))
+    base = _model(jax.random.PRNGKey(0))
+    contribs = _contributions(base, K)
+    n_params = sum(x.size for x in jax.tree.leaves(base))
+    us_flat = _best_of(base, contribs, flat=True)
+    us_mesh = _best_of(base, contribs, flat=True, mesh=mesh)
+    overhead = us_mesh / us_flat
+    print(f"fuse_e2e/mesh{n_devices}_sharded,{us_mesh:.1f},"
+          f"K={K};params={n_params};shards={n_devices};"
+          f"vs_1dev={overhead:.2f}x;collectives=1_allreduce")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--mesh", type=int, default=None, metavar="N",
+                    help="measure the sharded engine on N forced host devices "
+                         "(requires XLA_FLAGS=--xla_force_host_platform_device_count=N; "
+                         "set automatically when invoked via run())")
+    args = ap.parse_args()
+    rows = C.Rows()
+    if args.mesh:
+        if (jax.device_count() != args.mesh
+                and os.environ.get("_REPRO_MESH_REEXEC") != "1"):
+            # direct CLI use without the flag: re-exec ONCE with it set (the
+            # guard env var stops an exec loop on backends where forcing the
+            # host-platform count cannot yield args.mesh devices, e.g. GPU)
+            env = _force_device_env(args.mesh)
+            env["_REPRO_MESH_REEXEC"] = "1"
+            os.execvpe(sys.executable,
+                       [sys.executable, "-m", "benchmarks.fuse_e2e",
+                        "--mesh", str(args.mesh)], env)
+        _mesh_main(args.mesh)
+    else:
+        run(rows)
+        rows.emit()
+
+
+if __name__ == "__main__":
+    main()
+

@@ -1,11 +1,20 @@
 """Multitask ColD Fusion with baselines + a malicious contributor.
 
-Mirrors the paper's main experiment (§5.1) plus the §9 robustness story:
-one contributor uploads NaN weights, another uploads a destructive update;
-the Repository's screening rejects both and the run is unaffected.
+Demonstrates the paper's main loop end-to-end on the synthetic multitask
+suite: (1) the §5.1 collaborative schedule — several contributors finetune
+the shared base on their own tasks, the Repository screens and fuses every
+cohort, and both seen- and unseen-task accuracy improve across iterations;
+then (2) the §9 robustness story — one contributor uploads NaN weights and
+another a runaway update, the Repository's MAD screen rejects both, and the
+fused model is unaffected.
 
-  PYTHONPATH=src python examples/cold_fusion_multitask.py
+  PYTHONPATH=src python examples/cold_fusion_multitask.py [--dry-run]
+
+``--dry-run`` shrinks every knob (steps, cohort size, eval budget) so the
+whole script finishes in seconds — scripts/ci.sh runs it on every CI pass
+so this example cannot silently rot.
 """
+import argparse
 import dataclasses
 import sys
 
@@ -21,39 +30,71 @@ from repro.data.synthetic import SyntheticSuite
 from repro.train.pretrain import pretrain_mlm
 
 SEQ = 24
-cfg = dataclasses.replace(TINY, d_model=64, num_heads=2, num_kv_heads=2, head_dim=32,
-                          d_ff=128, vocab_size=256, max_seq_len=SEQ + 8)
-suite = SyntheticSuite(vocab_size=256, num_tasks=16, seed=0, noise=0.15)
-body, _ = pretrain_mlm(cfg, suite, steps=150, seq_len=SEQ)
 
-contribs = []
-for tid in range(8):
-    d = suite.dataset(tid, 1024, 64, SEQ)
-    contribs.append(Contributor(cfg, tid, suite.tasks[tid].num_classes,
-                                d["x_train"], d["y_train"], steps=30, lr=2e-3, seed=tid))
 
-ev_seen = [EvalTask(t, suite.tasks[t].num_classes, *(suite.dataset(t, 256, 256, SEQ, split_seed=1)[k]
-           for k in ("x_train", "y_train", "x_test", "y_test"))) for t in (0, 1)]
-ev_unseen = [EvalTask(t, suite.tasks[t].num_classes, *(suite.dataset(t, 256, 256, SEQ, split_seed=1)[k]
-             for k in ("x_train", "y_train", "x_test", "y_test"))) for t in (12, 13)]
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="minimal steps/cohort for a seconds-long smoke run")
+    args = ap.parse_args(argv)
 
-print("== honest cohort ==")
-repo = Repository(body)
-log = run_cold_fusion(cfg, repo, contribs, iterations=3, contributors_per_iter=4,
-                      eval_seen=ev_seen, eval_unseen=ev_unseen, eval_every=3,
-                      eval_steps=60, eval_lr=2e-3, progress=True)
-print(f"seen  finetuned: {log.mean('seen_finetuned')[-1]:.3f}  frozen: {log.mean('seen_frozen')[-1]:.3f}")
-print(f"unseen finetuned: {log.mean('unseen_finetuned')[-1]:.3f}  frozen: {log.mean('unseen_frozen')[-1]:.3f}")
+    if args.dry_run:
+        knobs = dict(pretrain=8, n_contrib=3, ft_steps=4, iters=1,
+                     per_iter=3, eval_steps=8, n_train=96, n_eval=48)
+    else:
+        knobs = dict(pretrain=150, n_contrib=8, ft_steps=30, iters=3,
+                     per_iter=4, eval_steps=60, n_train=1024, n_eval=256)
 
-print("\n== adversarial iteration: NaN + runaway contributions get screened ==")
-base = repo.download()
-for c in contribs[:3]:
-    repo.upload(c.contribute(base))
-repo.upload(jax.tree.map(lambda x: jnp.full_like(x, jnp.nan), base))          # malicious NaN
-repo.upload(jax.tree.map(lambda x: x + 100.0 * jax.random.normal(jax.random.PRNGKey(0), x.shape, x.dtype), base))  # runaway
-rec = repo.fuse_pending()
-print(f"fused {rec.n_accepted}/{rec.n_contributions} contributions "
-      f"(rejected {rec.n_contributions - rec.n_accepted} anomalous uploads)")
-acc = np.mean(list(evaluate_base_model(cfg, repo.download(), ev_seen, frozen=True,
-                                       steps=60, lr=2e-3).values()))
-print(f"post-adversarial frozen accuracy still healthy: {acc:.3f}")
+    cfg = dataclasses.replace(TINY, d_model=64, num_heads=2, num_kv_heads=2,
+                              head_dim=32, d_ff=128, vocab_size=256,
+                              max_seq_len=SEQ + 8)
+    suite = SyntheticSuite(vocab_size=256, num_tasks=16, seed=0, noise=0.15)
+    body, _ = pretrain_mlm(cfg, suite, steps=knobs["pretrain"], seq_len=SEQ)
+
+    contribs = []
+    for tid in range(knobs["n_contrib"]):
+        d = suite.dataset(tid, knobs["n_train"], 64, SEQ)
+        contribs.append(Contributor(cfg, tid, suite.tasks[tid].num_classes,
+                                    d["x_train"], d["y_train"],
+                                    steps=knobs["ft_steps"], lr=2e-3, seed=tid))
+
+    def ev_tasks(tids):
+        return [EvalTask(t, suite.tasks[t].num_classes,
+                         *(suite.dataset(t, knobs["n_eval"], knobs["n_eval"], SEQ,
+                                         split_seed=1)[k]
+                           for k in ("x_train", "y_train", "x_test", "y_test")))
+                for t in tids]
+
+    ev_seen, ev_unseen = ev_tasks((0, 1)), ev_tasks((12, 13))
+
+    print("== honest cohort ==")
+    repo = Repository(body)
+    log = run_cold_fusion(cfg, repo, contribs, iterations=knobs["iters"],
+                          contributors_per_iter=knobs["per_iter"],
+                          eval_seen=ev_seen, eval_unseen=ev_unseen,
+                          eval_every=knobs["iters"], eval_steps=knobs["eval_steps"],
+                          eval_lr=2e-3, progress=True)
+    print(f"seen  finetuned: {log.mean('seen_finetuned')[-1]:.3f}  "
+          f"frozen: {log.mean('seen_frozen')[-1]:.3f}")
+    print(f"unseen finetuned: {log.mean('unseen_finetuned')[-1]:.3f}  "
+          f"frozen: {log.mean('unseen_frozen')[-1]:.3f}")
+
+    print("\n== adversarial iteration: NaN + runaway contributions get screened ==")
+    base = repo.download()
+    for c in contribs[:3]:
+        repo.upload(c.contribute(base))
+    repo.upload(jax.tree.map(lambda x: jnp.full_like(x, jnp.nan), base))          # malicious NaN
+    repo.upload(jax.tree.map(
+        lambda x: x + 100.0 * jax.random.normal(jax.random.PRNGKey(0), x.shape, x.dtype),
+        base))                                                                    # runaway
+    rec = repo.fuse_pending()
+    print(f"fused {rec.n_accepted}/{rec.n_contributions} contributions "
+          f"(rejected {rec.n_contributions - rec.n_accepted} anomalous uploads)")
+    acc = np.mean(list(evaluate_base_model(cfg, repo.download(), ev_seen, frozen=True,
+                                           steps=knobs["eval_steps"], lr=2e-3).values()))
+    print(f"post-adversarial frozen accuracy still healthy: {acc:.3f}")
+    assert rec.n_accepted == rec.n_contributions - 2, "screen must reject both attacks"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,136 @@
+#!/usr/bin/env python
+"""Docs consistency check (run by scripts/ci.sh).
+
+Three rules keep the docs suite from rotting:
+
+1. **Reachability** — every ``docs/*.md`` file is linked from README.md
+   (the repo's entry point), so no page can silently fall off the map.
+2. **No dead relative links** — every relative markdown link in README.md
+   and ``docs/*.md`` resolves to an existing file (anchors are stripped;
+   http(s) links are not checked).
+3. **Code blocks import-check** — every fenced ```` ```python ```` block in
+   README.md and ``docs/*.md`` must parse, and every ``import repro.x`` /
+   ``from repro.x import y`` statement in it must resolve against ``src/``
+   (module importable, attribute present).  Blocks are NOT executed —
+   pseudo-code belongs in untagged fences.
+
+Exit code 0 = clean; 1 = problems (all listed on stderr).
+"""
+from __future__ import annotations
+
+import ast
+import importlib
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"^```(\w*)\s*$")
+
+problems: list[str] = []
+
+
+def _read(path: str) -> str:
+    with open(path, encoding="utf-8") as f:
+        return f.read()
+
+
+def check_reachability(readme: str) -> None:
+    docs_dir = os.path.join(ROOT, "docs")
+    for name in sorted(os.listdir(docs_dir)):
+        if name.endswith(".md") and f"docs/{name}" not in readme:
+            problems.append(f"README.md does not reference docs/{name}")
+
+
+def check_links(path: str, text: str) -> None:
+    base = os.path.dirname(path)
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not os.path.exists(os.path.join(base, rel)):
+            problems.append(f"{os.path.relpath(path, ROOT)}: dead link -> {target}")
+
+
+def python_blocks(text: str):
+    lines = text.splitlines()
+    block: list[str] | None = None
+    lang = None
+    start = 0
+    for i, line in enumerate(lines, 1):
+        m = FENCE_RE.match(line)
+        if m and block is None:
+            lang, block, start = m.group(1), [], i
+        elif line.strip() == "```" and block is not None:
+            if lang == "python":
+                yield start, "\n".join(block)
+            block = None
+        elif block is not None:
+            block.append(line)
+
+
+def check_code_blocks(path: str, text: str) -> None:
+    rel = os.path.relpath(path, ROOT)
+    for lineno, code in python_blocks(text):
+        try:
+            tree = ast.parse(code)
+        except SyntaxError as e:
+            problems.append(f"{rel}:{lineno}: python block does not parse: {e}")
+            continue
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    _check_module(rel, lineno, alias.name)
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                mod = _check_module(rel, lineno, node.module)
+                if mod is None:
+                    continue
+                for alias in node.names:
+                    if alias.name != "*" and not hasattr(mod, alias.name):
+                        try:
+                            importlib.import_module(f"{node.module}.{alias.name}")
+                        except ImportError:
+                            problems.append(
+                                f"{rel}:{lineno}: `from {node.module} import "
+                                f"{alias.name}` does not resolve")
+
+
+def _check_module(rel: str, lineno: int, name: str):
+    if not name.split(".")[0] == "repro":
+        return None  # only our own modules are checked (jax etc. assumed)
+    try:
+        return importlib.import_module(name)
+    except ImportError as e:
+        problems.append(f"{rel}:{lineno}: cannot import {name}: {e}")
+        return None
+
+
+def main() -> int:
+    readme_path = os.path.join(ROOT, "README.md")
+    readme = _read(readme_path)
+    check_reachability(readme)
+    pages = [readme_path] + [
+        os.path.join(ROOT, "docs", n)
+        for n in sorted(os.listdir(os.path.join(ROOT, "docs")))
+        if n.endswith(".md")
+    ]
+    for path in pages:
+        text = _read(path)
+        check_links(path, text)
+        check_code_blocks(path, text)
+    if problems:
+        for p in problems:
+            print(f"DOCS: {p}", file=sys.stderr)
+        print(f"docs check FAILED ({len(problems)} problem(s))", file=sys.stderr)
+        return 1
+    print(f"docs check OK ({len(pages)} pages)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,5 +1,7 @@
 #!/usr/bin/env bash
-# Tier-1 CI: the full test suite plus the kernel micro-bench in smoke mode.
+# Tier-1 CI: the full test suite, docs consistency, a multi-device smoke of
+# the sharded fusion engine, the kernel micro-bench in smoke mode, and the
+# examples in --dry-run mode.
 #
 #   scripts/ci.sh
 #
@@ -12,6 +14,21 @@ export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
 python -m pytest -q
 
+# docs suite: every docs/*.md reachable from README, no dead relative
+# links, fenced python blocks import-check against src/
+python scripts/check_docs.py
+
+# multi-device smoke: the sharded-fuse tests on a real (fake-)8-device mesh
+# — under plain pytest above they ran on the single CPU device.  The slow
+# subprocess test forces its own 8 devices and already ran above: skip it.
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python -m pytest tests/test_sharded_fuse.py -q -m "not slow"
+
 # kernel + end-to-end fuse micro-benches (smoke scale); refreshes
-# BENCH_kernels.json so the perf trajectory stays current
+# BENCH_kernels.json (including the fuse_e2e/mesh8_sharded row) so the
+# perf trajectory stays current
 REPRO_BENCH_SCALE=quick python -m benchmarks.run --only kernels,fuse_e2e
+
+# examples cannot silently rot: both must run end-to-end at dry-run scale
+python examples/cold_fusion_multitask.py --dry-run
+python examples/federated_single_dataset.py --dry-run

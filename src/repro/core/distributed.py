@@ -26,12 +26,14 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 from repro.configs.base import ArchConfig
+from repro.kernels import ops
 from repro.launch import sharding as SH
 from repro.optim.optimizers import Optimizer
 from repro.train.step import make_train_step
+from repro.utils.flat import ShardedFlatSpec
 
 
 @dataclass(frozen=True)
@@ -76,25 +78,36 @@ def make_cold_train_step(
     return jax.vmap(local)
 
 
+def shard_axes_of(mesh: Mesh) -> Tuple[str, ...]:
+    """Axes the flat fuse buffer is block-cyclically sharded over (the
+    non-contributor part of the ColD mesh)."""
+    return tuple(a for a in ("replica", "model") if a in mesh.axis_names)
+
+
 def make_fuse_step(cfg: ArchConfig, mesh: Mesh, schedule: ColdSchedule,
                    *, flat: bool = True) -> Callable:
     """The Repository collective: θ ← θ_base + α·(mean_c θ_c − θ_base),
     broadcast back to every contributor slab.
 
-    ``flat=True`` (default) runs the fuse over ONE concatenated ``[C, N]``
-    buffer instead of one reduction per leaf — the mesh-level counterpart of
-    the Repository's flat-buffer engine: a single fused mean/lerp/broadcast
-    chain for GSPMD to schedule (one logical all-reduce over the contributor
-    axes) rather than hundreds of per-leaf ops.  ``flat=False`` keeps the
-    per-leaf path as the oracle.
+    ``flat=True`` (default) runs the fuse over ONE ``[C, N]`` flat buffer
+    instead of one reduction per leaf — the mesh-level face of the sharded
+    flat engine (docs/sharding.md): the buffer is laid out block-cyclically
+    (``ShardedFlatSpec``) with C over the contributor axes and N over the
+    replica/model axes, and ``ops.cohort_fuse_sharded`` computes a
+    per-device partial sum over its local slabs that exactly ONE psum over
+    the contributor axes completes.  ``flat=False`` keeps the per-leaf path
+    as the oracle.
 
-    The flat path pins every reshaped piece to a common
-    ``P(contrib, None)`` sharding before concatenating: GSPMD (observed on
-    jax 0.4.37 CPU) miscompiles ``concat -> mean`` over a sharded leading
-    axis into a SUM when the concat inputs carry heterogeneous shardings.
-    The constraint replicates the staged buffer over the model/replica axes
-    for the duration of the fuse (it runs once every H steps, so the extra
-    gather amortizes like the fuse all-reduce itself).
+    This shares the Repository fuse's implementation (the same layout, the
+    same partial+one-all-reduce structure — only the reduced dim differs)
+    and it *retires* the old GSPMD workaround: jax 0.4.37 CPU miscompiled
+    ``concat -> mean`` over a sharded leading axis into a SUM when the
+    concat inputs carried heterogeneous shardings, which previously forced
+    every piece to be pinned to ``P(contrib, None)`` — replicating the
+    staged buffer over the model/replica axes.  With the mean computed
+    manually under ``shard_map`` no GSPMD mean ever lowers, no pin is
+    needed, and each device holds only its ``1/S`` block-cyclic slice of
+    the buffer through the fuse.
     """
 
     def leaf_fuse(x):
@@ -109,11 +122,11 @@ def make_fuse_step(cfg: ArchConfig, mesh: Mesh, schedule: ColdSchedule,
 
     contrib = contrib_axes_of(mesh)
     if not (flat and contrib):
-        # no contributor axis (plain data/model mesh): nothing to pin the
-        # staged rows to — the per-leaf reduction handles any mesh
+        # no contributor axis (plain data/model mesh): nothing to fuse over
+        # a mesh dim — the per-leaf reduction handles any mesh
         return fuse_per_leaf
-    row_sharding = NamedSharding(
-        mesh, P(contrib if len(contrib) > 1 else contrib[0], None))
+    shard_axes = shard_axes_of(mesh)
+    n_shards = SH.axes_extent(mesh, shard_axes)
 
     def fuse_flat(params):
         leaves, treedef = jax.tree.flatten(params)
@@ -122,15 +135,12 @@ def make_fuse_step(cfg: ArchConfig, mesh: Mesh, schedule: ColdSchedule,
         dtypes = [l.dtype for l in leaves]
         sizes = [int(np.prod(s[1:])) for s in shapes]
         buf = jnp.concatenate(
-            [jax.lax.with_sharding_constraint(
-                l.reshape(C, -1).astype(jnp.float32), row_sharding)
-             for l in leaves], axis=1)
-        buf = jax.lax.with_sharding_constraint(buf, row_sharding)
-        mean = jnp.mean(buf, axis=0, keepdims=True)
-        if schedule.alpha != 1.0:
-            fused = buf * (1 - schedule.alpha) + mean * schedule.alpha
-        else:
-            fused = jnp.broadcast_to(mean, buf.shape)
+            [l.reshape(C, -1).astype(jnp.float32) for l in leaves], axis=1)
+        sspec = ShardedFlatSpec.for_size(buf.shape[1], n_shards)
+        fused = ops.cohort_fuse_sharded(
+            sspec.shard(buf), mesh=mesh, contrib_axes=contrib,
+            shard_axes=shard_axes, alpha=schedule.alpha)
+        fused = sspec.unshard(fused)
         outs = []
         off = 0
         for shape, dtype, n in zip(shapes, dtypes, sizes):

@@ -25,10 +25,19 @@ Two fuse engines share the contributor-facing API:
   verbatim as the ``REPRO_NO_KERNELS`` oracle and for operators the kernel
   does not cover (``fisher``, ``ties``).
 
-See docs/fusion_engine.md for the full contract.
+Passing ``mesh=`` (with optional ``mesh_axes=``) distributes the flat
+engine: ``upload`` stages each row directly into its block-cyclic shard
+placement (``ShardedFlatSpec``), ``fuse_pending`` runs the screen+fuse
+per-shard under ``shard_map`` with exactly ONE all-reduce (the ``sq_diff``
+partials), and no device ever materializes the full ``[K, N]`` staging
+buffer.  Cohort capacity then scales with the mesh instead of a single
+device's HBM.  See docs/sharding.md.
+
+See docs/fusion_engine.md and docs/repository.md for the full contract.
 """
 from __future__ import annotations
 
+import functools
 import json
 import os
 import time
@@ -41,9 +50,11 @@ import numpy as np
 
 from repro.checkpoint import io as ckpt
 from repro.core import fusion
-from repro.core.validation import ScreenReport, screen_contributions, screen_norms
+from repro.core.validation import (ScreenReport, norms_from_sq,
+                                   screen_contributions, screen_norms)
 from repro.kernels import ops
-from repro.utils.flat import FlatSpec
+from repro.launch import sharding as SH
+from repro.utils.flat import FlatSpec, ShardedFlatSpec
 
 # operators the streaming flat engine covers; everything else (fisher, ties)
 # falls back to the per-leaf pytree engine
@@ -58,6 +69,16 @@ class FusionRecord:
     op: str
     diff_norms: List[float]
     wall_time: float
+
+
+@functools.lru_cache(maxsize=32)
+def _stack_fn(k: int, sharding):
+    """Jitted K-row stack with the staging out-sharding: each device
+    concatenates its local shard slices, so stacking never gathers the
+    cohort onto one device.  Cached per (K, sharding) to avoid re-tracing
+    every fuse."""
+    del k  # shapes key the jit cache; K only keys the lru entry
+    return jax.jit(lambda *rows: jnp.stack(rows), out_shardings=sharding)
 
 
 def _json_default(o):
@@ -79,6 +100,8 @@ class Repository:
         keep_history: bool = False,
         use_flat: Optional[bool] = None,
         spill: bool = False,
+        mesh: Optional[Any] = None,
+        mesh_axes: Optional[Any] = None,
     ):
         self._base = base_params
         self.fusion_op = fusion_op
@@ -89,10 +112,28 @@ class Repository:
         self.root = root
         self.keep_history = keep_history
         if use_flat is None:
-            use_flat = fusion_op in FLAT_OPS and ops.kernels_enabled()
+            # the sharded engine is plain XLA under shard_map, so a mesh
+            # forces the flat path regardless of the kernel toggle
+            use_flat = fusion_op in FLAT_OPS and (
+                mesh is not None or ops.kernels_enabled())
         elif use_flat and fusion_op not in FLAT_OPS:
             raise ValueError(f"flat engine does not cover fusion_op={fusion_op!r}")
+        if mesh is not None and not use_flat:
+            raise ValueError("mesh= requires the flat engine "
+                             f"(fusion_op={fusion_op!r}, use_flat={use_flat})")
         self.use_flat = use_flat
+        self.mesh = mesh
+        if mesh is not None:
+            axes = SH.norm_axes(
+                mesh.axis_names if mesh_axes is None else mesh_axes)
+            missing = [a for a in axes if a not in mesh.axis_names]
+            if missing:
+                raise ValueError(f"mesh_axes {missing} not in mesh {mesh.axis_names}")
+            self.mesh_axes = axes
+            self._n_shards = SH.axes_extent(mesh, axes)
+        else:
+            self.mesh_axes = ()
+            self._n_shards = 1
         if spill and not root:
             raise ValueError("spill=True requires an on-disk root")
         self.spill = spill
@@ -102,6 +143,7 @@ class Repository:
         self._pending_weights: List[Any] = []
         self._snapshots: List[Any] = []
         self._spec: Optional[FlatSpec] = None
+        self._sspec: Optional[ShardedFlatSpec] = None
         self._base_flat: Optional[jax.Array] = None
         if root:
             os.makedirs(root, exist_ok=True)
@@ -111,8 +153,43 @@ class Repository:
     def _ensure_flat_base(self):
         if self._spec is None:
             self._spec = FlatSpec.from_tree(self._base)
+        if self.mesh is not None and self._sspec is None:
+            self._sspec = ShardedFlatSpec.from_spec(self._spec, self._n_shards)
         if self._base_flat is None:
-            self._base_flat = self._spec.flatten(self._base)
+            flat = self._spec.flatten(self._base)
+            self._base_flat = self._stage_row(flat) if self.mesh is not None else flat
+
+    def _stage_row(self, row: jax.Array) -> jax.Array:
+        """[N] row -> its block-cyclic [S, shard_len] placement: each device
+        receives only its own slice, at upload time — the full row never
+        needs to exist on a fuse device."""
+        return jax.device_put(
+            self._sspec.shard(row), SH.flat_row_sharding(self.mesh, self.mesh_axes))
+
+    def _stack_stage(self, rows: List[jax.Array]) -> jax.Array:
+        """Stack K staged rows into the fuse operand.  On a mesh the stack
+        runs under jit with the staging out-sharding, so each device
+        concatenates its local slices — the [K, N] buffer is never
+        materialized on one device."""
+        if self.mesh is None:
+            return jnp.stack(rows)
+        rows = [r if r.ndim == 2 else self._stage_row(r) for r in rows]  # spilled rows load as [N]
+        stack = _stack_fn(
+            len(rows), SH.flat_stage_sharding(self.mesh, self.mesh_axes))
+        return stack(*rows)
+
+    def _fuse_flat(self, stage, weights, alpha, *, donate: bool):
+        if self.mesh is not None:
+            return ops.fuse_flat_sharded(
+                self._base_flat, stage, weights, alpha,
+                mesh=self.mesh, axes=self.mesh_axes)
+        return ops.fuse_flat(self._base_flat, stage, weights, alpha, donate=donate)
+
+    def _publish_flat(self, fused: jax.Array):
+        """Fused flat buffer -> the new base pytree (+ cached flat form)."""
+        row = self._sspec.unshard(fused) if self.mesh is not None else fused
+        self._base = self._spec.unflatten(row)
+        self._base_flat = fused
 
     def _contrib_path(self, idx: int) -> str:
         return os.path.join(
@@ -139,9 +216,13 @@ class Repository:
             self._ensure_flat_base()
             row = self._spec.flatten(params)
             if self.root:
+                # the on-disk row stays the portable [N] form — spill files
+                # are mesh-independent and re-shard on load
                 ckpt.save_flat(self._contrib_path(idx), row, self._spec)
             if self.spill:
                 self._pending.append(self._contrib_path(idx))
+            elif self.mesh is not None:
+                self._pending.append(self._stage_row(row))
             else:
                 self._pending.append(row)
         else:
@@ -168,15 +249,22 @@ class Repository:
         if self.use_flat:
             self._ensure_flat_base()
             row = self._spec.flatten(params)
-            fused, sq = ops.fuse_flat(
-                self._base_flat, row[None, :], jnp.ones((1,), jnp.float32), a)
+            if self.mesh is not None:
+                stage = self._stage_row(row)[None]
+            else:
+                stage = row[None, :]
+            fused, sq = self._fuse_flat(stage, jnp.ones((1,), jnp.float32), a,
+                                        donate=False)
             if self.screen:
-                norm = float(np.sqrt(np.float64(jax.device_get(sq)[0])))
+                norm = norms_from_sq(jax.device_get(sq))[0]
                 report = screen_norms([norm], mad_threshold=self.mad_threshold)
                 if not report.accepted:
                     raise RuntimeError(f"async contribution rejected: {report.reasons}")
             fused.block_until_ready()
-            new_base = self._spec.unflatten(fused)
+            if self.mesh is not None:
+                new_base = self._spec.unflatten(self._sspec.unshard(fused))
+            else:
+                new_base = self._spec.unflatten(fused)
             new_flat = fused
         else:
             if self.screen:
@@ -252,19 +340,20 @@ class Repository:
             ckpt.load_flat(p)[0] if isinstance(p, str) else p
             for p in self._pending
         ]
-        stage = jnp.stack(rows)
+        stage = self._stack_stage(rows)
         del rows
         w = self._cohort_weights(K)
         alpha = self._flat_alpha(K)
         # pass 1: fused + sq_diff in one read of the staged buffer.  Keep the
-        # buffer alive only if a screening re-pass might need it.
-        fused, sq = ops.fuse_flat(
-            self._base_flat, stage, w, alpha, donate=not self.screen)
+        # buffer alive only if a screening re-pass might need it.  (On a mesh
+        # the sq_diff per-shard partials are completed by the fuse's single
+        # all-reduce — the statistic arriving here is already global.)
+        fused, sq = self._fuse_flat(stage, w, alpha, donate=not self.screen)
         report: Optional[ScreenReport] = None
         n_accepted = K
         if self.screen:
-            norms = np.sqrt(np.asarray(jax.device_get(sq), np.float64))
-            report = screen_norms(norms.tolist(), mad_threshold=self.mad_threshold)
+            norms = norms_from_sq(jax.device_get(sq))
+            report = screen_norms(norms, mad_threshold=self.mad_threshold)
             n_accepted = len(report.accepted)
             if not report.accepted:
                 raise RuntimeError(f"all contributions rejected: {report.reasons}")
@@ -272,8 +361,8 @@ class Repository:
                 w2 = np.asarray(jax.device_get(w), np.float32).copy()
                 w2[report.rejected] = 0.0
                 alpha = self._flat_alpha(n_accepted)
-                fused, _ = ops.fuse_flat(
-                    self._base_flat, stage, jnp.asarray(w2), alpha, donate=True)
+                fused, _ = self._fuse_flat(
+                    stage, jnp.asarray(w2), alpha, donate=True)
         fused.block_until_ready()
         rec = FusionRecord(
             iteration=self.iteration,
@@ -285,8 +374,7 @@ class Repository:
         )
         if self.keep_history:
             self._snapshots.append(self._base)
-        self._base = self._spec.unflatten(fused)
-        self._base_flat = fused
+        self._publish_flat(fused)
         return rec
 
     def _fuse_pending_pytree(self, t0: float) -> FusionRecord:

@@ -20,6 +20,13 @@ Two entry points share the decision logic:
   just to screen it.  A non-finite contribution surfaces as a NaN/Inf
   norm, which this function treats exactly like the pytree-level
   non-finite check.
+
+On the mesh-sharded engine (docs/sharding.md) each shard contributes a
+``sq_diff`` *partial* over its block-cyclic slice; the single all-reduce
+that completes them happens inside the fuse, so by the time the statistic
+reaches this module it is already the global norm — the decision rule is
+identical across all three engines.  ``norms_from_sq`` is the shared
+sq→norm bridge (f64 sqrt of the f32 kernel accumulations).
 """
 from __future__ import annotations
 
@@ -42,6 +49,14 @@ class ScreenReport:
 
 def diff_norm(base, model) -> float:
     return float(jnp.sqrt(tree_sq_norm(tree_sub(model, base))))
+
+
+def norms_from_sq(sq) -> List[float]:
+    """``sq_diff [K]`` (from the fuse kernel / the sharded psum) → diff
+    norms for ``screen_norms``.  The sqrt runs in float64 host-side: the
+    kernel accumulates in f32, and squaring back and forth in f32 would
+    cost precision exactly where the MAD cutoff is decided."""
+    return np.sqrt(np.asarray(sq, np.float64)).tolist()
 
 
 def screen_norms(

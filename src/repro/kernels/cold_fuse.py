@@ -33,6 +33,15 @@ operand so the per-block working set is (K+1)·BLOCK·4B — BLOCK is chosen so
 this fits comfortably in ~16 MB VMEM.  The diff-norm outputs accumulate
 across the sequential grid (same output block every step), an idiomatic
 Pallas reduction.
+
+**Per-shard use** (docs/sharding.md): the kernel is oblivious to whether
+``[K, N]`` is the whole staging buffer or one block-cyclic shard of it —
+the math is elementwise over N, so ``ops.fuse_flat_sharded`` simply runs
+this launch on each shard's ``[K, shard_len]`` slice (tile-aligned by
+construction: ``ShardedFlatSpec.block`` is a LANE multiple) and the
+``sq_diff`` output becomes a *partial* that one ``psum`` completes.  The
+weight normalization w/Σw is shard-invariant (weights are replicated), so
+the fused output needs no communication at all.
 """
 from __future__ import annotations
 
@@ -44,8 +53,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.utils.flat import LANE as _LANE  # min 1-D tile (8 sublanes x 128 lanes)
+
 DEFAULT_BLOCK = 64 * 1024  # f32 elems: (K+1)*256KB at K=8 -> ~2.3 MB VMEM
-_LANE = 1024               # min 1-D tile granularity (8 sublanes x 128 lanes)
 
 
 def _kernel(w_ref, base_ref, contribs_ref, alpha_ref, fused_ref, sq_ref):

@@ -8,17 +8,21 @@ CPU host platform.
 """
 from __future__ import annotations
 
+import functools
 import os
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.kernels import ref
 from repro.kernels.cold_fuse import call_donated as _call_donated
 from repro.kernels.cold_fuse import cold_fuse as _cold_fuse_kernel
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
 from repro.kernels.rwkv6_scan import rwkv6_scan as _rwkv_kernel
+from repro.launch.sharding import axes_entry, axes_extent, norm_axes
 from repro.utils.flat import FlatSpec
 
 RWKV_LOGW_FLOOR = -4.0  # kernel contract (see rwkv6_scan docstring)
@@ -80,6 +84,127 @@ def fuse_pytrees(base_tree, contrib_trees, weights=None, alpha: float = 1.0,
     stage = jnp.stack([spec.flatten(t) for t in contrib_trees])
     fused, sq = fuse_flat(base_flat, stage, w, alpha, donate=donate)
     return spec.unflatten(fused), sq
+
+
+# ---------------------------------------------------------------------------
+# sharded flat fuse (docs/sharding.md) — the SAME single-pass screen+fuse
+# contract as fuse_flat, run per block-cyclic shard under shard_map.  The
+# fused output is elementwise over N (zero communication); the per-shard
+# sq_diff partials are completed by exactly ONE psum per fuse.  The
+# single-device fuse_flat / the per-leaf engine remain the oracles.
+# ---------------------------------------------------------------------------
+
+Axes = Union[str, Sequence[str]]
+
+
+def _shard_cold_fuse(base, contribs, weights, alpha, *, use_kernel: bool):
+    """The per-shard screen+fuse: the single-device cold_fuse contract run on
+    one ``[K, shard_len]`` slice.  Returns (fused [shard_len], sq PARTIAL [K]).
+
+    The weight normalization w/Σw uses the replicated global weights, so it
+    is identical on every shard; zero-weight masking (the re-weighted second
+    pass of the screen) therefore behaves exactly as on a single device."""
+    if use_kernel:
+        return _cold_fuse_kernel(base, contribs, weights, alpha, interpret=False)
+    return ref.cold_fuse(base, contribs, weights, alpha)
+
+
+@functools.lru_cache(maxsize=32)
+def _sharded_fuse_fn(mesh: Mesh, axes: Tuple[str, ...], use_kernel: bool):
+    """Build (once per mesh/axes) the jitted shard_map fuse over a
+    ``[S, L]`` base and ``[K, S, L]`` staging buffer laid out by
+    ``ShardedFlatSpec``.  Exactly one collective: the sq_diff psum."""
+    row_spec = P(axes_entry(axes), None)
+    stage_spec = P(None, axes_entry(axes), None)
+
+    def local(base, contribs, weights, alpha):
+        # local blocks carry a size-1 stub of the shard dim: strip/re-add it
+        fused, sq = _shard_cold_fuse(
+            base[0], contribs[:, 0, :], weights, alpha[0], use_kernel=use_kernel)
+        return fused[None], jax.lax.psum(sq, axes)
+
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(row_spec, stage_spec, P(), P()),
+        out_specs=(row_spec, P()),
+        check_rep=False,
+    )
+    return jax.jit(fn)
+
+
+def fuse_flat_sharded(
+    base: jax.Array,      # [S, shard_len] — sharded over `axes`
+    contribs: jax.Array,  # [K, S, shard_len]
+    weights: jax.Array,   # [K] (replicated)
+    alpha=1.0,
+    *,
+    mesh: Mesh,
+    axes: Axes,
+) -> Tuple[jax.Array, jax.Array]:
+    """Distributed fuse_flat over a block-cyclic staging layout.
+
+    Returns (fused [S, shard_len] sharded like ``base``, sq_diff [K]
+    replicated).  Padding introduced by the layout is zero in both base and
+    contributions, so it cancels in the diff and never biases ``sq_diff``.
+    """
+    ax = norm_axes(axes)
+    use_kernel = kernels_enabled() and not _interpret()
+    fn = _sharded_fuse_fn(mesh, ax, use_kernel)
+    return fn(base, contribs,
+              jnp.asarray(weights, jnp.float32),
+              jnp.asarray(jnp.reshape(alpha, (1,)), jnp.float32))
+
+
+@functools.lru_cache(maxsize=32)
+def _cohort_fuse_fn(mesh: Mesh, contrib_axes: Tuple[str, ...],
+                    shard_axes: Tuple[str, ...], alpha: float):
+    """Mesh-level cohort fuse over a ``[C, S, L]`` stage: every contributor
+    slab relaxes toward the α-damped cohort mean.
+
+    Same sharded-flat structure as ``_sharded_fuse_fn`` with the roles of
+    the axes swapped: here the *contributor* dim is the sharded reduction
+    dim, so the per-shard partial is the local weighted sum over C_local and
+    the single psum (over the contributor axes) completes the mean — no
+    GSPMD ``concat -> mean`` ever lowers, which is what retires the jax
+    0.4.37 miscompile workaround (see docs/sharding.md)."""
+    in_spec = P(axes_entry(contrib_axes),
+                axes_entry(shard_axes) if shard_axes else None, None)
+    c_axes = axes_extent(mesh, contrib_axes)
+
+    def local(x):  # [C_local, S_local(=1 when sharded), L]
+        xf = x.astype(jnp.float32)
+        # total cohort size: local slabs x contributor-axis extent
+        part = jnp.sum(xf, axis=0, keepdims=True) / (x.shape[0] * c_axes)
+        mean = jax.lax.psum(part, contrib_axes)
+        if alpha != 1.0:
+            fused = xf * (1.0 - alpha) + mean * alpha
+        else:
+            fused = jnp.broadcast_to(mean, xf.shape)
+        return fused.astype(x.dtype)
+
+    fn = shard_map(local, mesh=mesh, in_specs=(in_spec,),
+                   out_specs=in_spec, check_rep=False)
+    return jax.jit(fn)
+
+
+def cohort_fuse_sharded(
+    stage: jax.Array,  # [C, S, shard_len] — C over contrib_axes, S over shard_axes
+    *,
+    mesh: Mesh,
+    contrib_axes: Axes,
+    shard_axes: Axes = (),
+    alpha: float = 1.0,
+) -> jax.Array:
+    """θ_c ← θ_c + α·(mean_c θ_c − θ_c), one psum over the contributor axes.
+
+    The mesh-level counterpart of ``fuse_flat_sharded`` (the Repository
+    path): both lay the flat buffer out block-cyclically and complete a
+    per-shard partial with a single all-reduce; they differ only in which
+    dim the psum runs over (sq_diff over the shard axes there, the
+    contributor mean here)."""
+    fn = _cohort_fuse_fn(
+        mesh, norm_axes(contrib_axes), norm_axes(shard_axes), float(alpha))
+    return fn(stage)
 
 
 def attention(q, k, v, *, causal=True, window: Optional[int] = None, q_offset: int = 0,

@@ -308,3 +308,42 @@ def cache_shardings(
 
 def replicated(mesh: Mesh):
     return NamedSharding(mesh, P())
+
+
+# ---------------------------------------------------------------------------
+# Repository staging buffers (block-cyclic flat layout — docs/sharding.md)
+# ---------------------------------------------------------------------------
+
+
+def norm_axes(axes) -> Tuple[str, ...]:
+    """Mesh-axis argument normalization: a bare name or any sequence of
+    names -> a tuple of names (the canonical form everywhere in the
+    sharded-fuse stack)."""
+    return (axes,) if isinstance(axes, str) else tuple(axes)
+
+
+def axes_entry(axes):
+    """The PartitionSpec entry for one dim sharded over ``axes`` (a single
+    name collapses out of its tuple, matching jax's P conventions)."""
+    axes = norm_axes(axes)
+    return axes if len(axes) > 1 else axes[0]
+
+
+def axes_extent(mesh: Mesh, axes) -> int:
+    """Product of the mesh extents of ``axes`` — the shard count S of a
+    flat buffer laid out over them."""
+    return _axis_size(mesh, norm_axes(axes))
+
+
+def flat_row_sharding(mesh: Mesh, axes) -> NamedSharding:
+    """Sharding of one block-cyclic flat row ``[S, shard_len]``: the shard
+    dim over ``axes``, the payload replicated-free (each device holds only
+    its own contiguous slice)."""
+    return NamedSharding(mesh, P(axes_entry(axes), None))
+
+
+def flat_stage_sharding(mesh: Mesh, axes) -> NamedSharding:
+    """Sharding of the stacked staging buffer ``[K, S, shard_len]``: K whole
+    rows, each laid out like ``flat_row_sharding`` — no device ever holds
+    more than ``K x shard_len`` elements of the cohort."""
+    return NamedSharding(mesh, P(None, axes_entry(axes), None))

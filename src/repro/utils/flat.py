@@ -15,18 +15,30 @@ into one padded launch per leaf.  ``FlatSpec`` fixes the layout once:
 Round-trips are views/reshapes inside jit (XLA fuses the slicing into the
 consumer); nothing here allocates per-leaf Python-side temporaries beyond
 the single concatenated buffer.
+
+``ShardedFlatSpec`` layers a block-cyclic shard layout on top: it maps the
+flat ``[N]`` buffer (and the stacked ``[K, N]`` staging buffer) onto a
+``[S, shard_len]`` grid whose leading dim lands on a mesh axis, so the
+Repository's staging and fuse can be distributed without any device ever
+holding the full buffer (see docs/sharding.md).
 """
 from __future__ import annotations
 
 import functools
 from dataclasses import dataclass
-from typing import Any, Dict, List, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.utils.pytree import path_str
+
+# minimum 1-D tile granularity on TPU (8 sublanes x 128 lanes); the Pallas
+# kernel and the block-cyclic shard layout share this alignment so a shard's
+# slice is always a whole number of kernel tiles
+LANE = 1024
+DEFAULT_SHARD_BLOCK = 64 * 1024
 
 
 @dataclass(frozen=True)
@@ -176,3 +188,111 @@ def flatten_tree(tree) -> Tuple[jax.Array, FlatSpec]:
     """Convenience: build the spec and flatten in one call."""
     spec = FlatSpec.from_tree(tree)
     return spec.flatten(tree), spec
+
+
+# ---------------------------------------------------------------------------
+# ShardedFlatSpec — block-cyclic layout of a flat buffer over a mesh axis
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class ShardedFlatSpec:
+    """Block-cyclic layout of a flat ``[N]`` buffer over ``n_shards`` shards.
+
+    The padded buffer is a ``(G, S, B)`` grid of ``G·S`` blocks of ``B``
+    elements: block ``j`` lives on shard ``j % S`` at slot ``j // S``
+    (classic block-cyclic).  A sharded row is the ``[S, G·B]`` rearrangement
+    of that grid, so placing its leading dim on a mesh axis gives every
+    device a contiguous ``shard_len``-element slice that is
+
+    * **balanced** — every shard holds exactly ``padded_size / S`` elements
+      regardless of the leaf structure underneath, and
+    * **tile-aligned** — ``B`` is a multiple of ``LANE`` (8x128), so each
+      shard's slice is whole kernel tiles and the per-shard fuse needs no
+      re-padding.
+
+    Padding elements are zero; they contribute nothing to either the fused
+    output (sliced away on unshard) or the ``sq_diff`` screening statistic
+    (0 - 0 = 0), which is what lets the per-shard partials be all-reduced
+    without any padding mask.
+
+    The layout is independent of the leaf layout (`FlatSpec`): shard, fuse,
+    and unshard all operate on the flat buffer; only the final publish
+    re-derives the pytree.
+    """
+
+    size: int      # N — unpadded element count
+    n_shards: int  # S — mesh-axis extent the layout targets
+    block: int     # B — elements per layout block (LANE-aligned)
+
+    # -- construction ---------------------------------------------------
+    @classmethod
+    def for_size(cls, size: int, n_shards: int,
+                 block: Optional[int] = None) -> "ShardedFlatSpec":
+        """Pick a layout for an ``[N]`` buffer over ``n_shards`` shards.
+
+        ``block`` defaults to ``DEFAULT_SHARD_BLOCK`` clamped so tiny models
+        do not pad to S full kernel blocks: the block shrinks (LANE-aligned)
+        until one round of the cycle covers the whole buffer."""
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        if block is None:
+            per_shard = -(-max(size, 1) // n_shards)          # ceil
+            aligned = -(-per_shard // LANE) * LANE            # lane-align up
+            block = min(DEFAULT_SHARD_BLOCK, aligned)
+        if block % LANE:
+            raise ValueError(f"block {block} is not a multiple of LANE={LANE}")
+        return cls(size, n_shards, block)
+
+    @classmethod
+    def from_spec(cls, spec: FlatSpec, n_shards: int,
+                  block: Optional[int] = None) -> "ShardedFlatSpec":
+        return cls.for_size(spec.size, n_shards, block)
+
+    # -- derived geometry ----------------------------------------------
+    @property
+    def n_super(self) -> int:
+        """G — rounds of the block cycle."""
+        return -(-max(self.size, 1) // (self.n_shards * self.block))
+
+    @property
+    def padded_size(self) -> int:
+        return self.n_super * self.n_shards * self.block
+
+    @property
+    def shard_len(self) -> int:
+        return self.n_super * self.block
+
+    def shard_of(self, i: int) -> Tuple[int, int]:
+        """(shard, offset-within-shard) of flat element ``i``."""
+        if not (0 <= i < self.size):
+            raise ValueError(f"element {i} out of range [0, {self.size})")
+        j, r = divmod(i, self.block)
+        return j % self.n_shards, (j // self.n_shards) * self.block + r
+
+    # -- rearrangement --------------------------------------------------
+    def shard(self, buf) -> jax.Array:
+        """``[..., N]`` -> ``[..., S, shard_len]`` block-cyclic rearrangement
+        (zero-padded to the block grid)."""
+        buf = jnp.asarray(buf)
+        if buf.shape[-1] != self.size:
+            raise ValueError(f"buffer last dim {buf.shape[-1]} != size {self.size}")
+        lead = buf.shape[:-1]
+        pad = self.padded_size - self.size
+        if pad:
+            buf = jnp.concatenate(
+                [buf, jnp.zeros(lead + (pad,), buf.dtype)], axis=-1)
+        grid = buf.reshape(lead + (self.n_super, self.n_shards, self.block))
+        return jnp.swapaxes(grid, -3, -2).reshape(
+            lead + (self.n_shards, self.shard_len))
+
+    def unshard(self, arr) -> jax.Array:
+        """``[..., S, shard_len]`` -> ``[..., N]`` (padding sliced away)."""
+        arr = jnp.asarray(arr)
+        want = (self.n_shards, self.shard_len)
+        if arr.shape[-2:] != want:
+            raise ValueError(f"sharded shape {arr.shape[-2:]} != {want}")
+        lead = arr.shape[:-2]
+        grid = arr.reshape(lead + (self.n_shards, self.n_super, self.block))
+        flat = jnp.swapaxes(grid, -3, -2).reshape(lead + (self.padded_size,))
+        return flat[..., : self.size]

@@ -11,6 +11,13 @@ from repro.configs import get_config, reduce_config
 from repro.configs.roberta_base import TINY
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: multi-second subprocess tests (forced fake-device jax init); "
+        "deselect with -m 'not slow' when they already ran in the same CI pass")
+
+
 @pytest.fixture(scope="session")
 def tiny_cfg():
     """The tiny RoBERTa-style encoder used by the paper reproduction."""
