@@ -22,6 +22,17 @@ directly with ``python -m benchmarks.fuse_e2e --mesh 8``; ``run()`` spawns
 that subprocess automatically (device count must be fixed before jax
 initializes) and the rows land in BENCH_kernels.json.
 
+A fourth row measures the **async double-buffered repository**
+(docs/async_repository.md): R rounds of K uploads each, synchronous
+(``fuse_pending(wait=True)`` — every round blocks on its fuse) vs
+double-buffered (``wait=False`` — the device fuses cohort i while the host
+stages cohort i+1).  The overlap ratio is hardware-dependent: the upload
+staging is host memcpy and the fuse is device streaming, so on a machine
+with spare cores/bandwidth the async path approaches
+``(upload + fuse) / max(upload, fuse)``; on a narrow container the two
+contend and the ratio compresses toward 1.  Run directly with
+``python -m benchmarks.fuse_e2e --async``.
+
 The speedup is recorded in BENCH_kernels.json (benchmarks/run.py) so every
 future PR inherits the perf trajectory.
 """
@@ -89,6 +100,39 @@ def _best_of(base, contribs, *, flat: bool, mesh=None, reps: int = 3) -> float:
     return min(_run_once(base, contribs, flat=flat, mesh=mesh) for _ in range(reps))
 
 
+ASYNC_ROUNDS = 6
+
+
+def _run_rounds(base, cohorts, *, asynchronous: bool) -> float:
+    """R rounds of (K uploads -> fuse): the synchronous path blocks on
+    every fuse; the async path dispatches with ``wait=False`` so the device
+    fuses cohort i while the host stages cohort i+1, and finalizes on the
+    next round's ``fuse_pending`` (double buffering)."""
+    t0 = time.time()
+    repo = Repository(base, use_flat=True)
+    for cohort in cohorts:
+        for c in cohort:
+            repo.upload(c)
+        repo.fuse_pending(wait=not asynchronous)
+    repo.flush()
+    jax.block_until_ready(jax.tree.leaves(repo.download()))
+    return (time.time() - t0) * 1e6
+
+
+def _async_rows(rows: C.Rows, base, n_params: int, reps: int = 5) -> None:
+    cohorts = [_contributions(base, K) for _ in range(ASYNC_ROUNDS)]
+    for mode in (False, True):
+        _run_rounds(base, cohorts, asynchronous=mode)  # warm the jit caches
+    us_sync = min(_run_rounds(base, cohorts, asynchronous=False)
+                  for _ in range(reps))
+    us_async = min(_run_rounds(base, cohorts, asynchronous=True)
+                   for _ in range(reps))
+    overlap = us_sync / us_async
+    rows.add("fuse_e2e/async_overlap", us_async,
+             f"overlap={overlap:.2f}x;sync_us={us_sync:.1f};"
+             f"rounds={ASYNC_ROUNDS};K={K};params={n_params}")
+
+
 def run(rows: C.Rows):
     base = _model(jax.random.PRNGKey(0))
     contribs = _contributions(base, K)
@@ -101,6 +145,7 @@ def run(rows: C.Rows):
         us_seed = _best_of(base, contribs, flat=False)
         ops.use_kernels(True)
         us_flat = _best_of(base, contribs, flat=True)
+        _async_rows(rows, base, n_params)
     finally:
         ops.use_kernels(prev)
 
@@ -171,8 +216,17 @@ def main() -> None:
                     help="measure the sharded engine on N forced host devices "
                          "(requires XLA_FLAGS=--xla_force_host_platform_device_count=N; "
                          "set automatically when invoked via run())")
+    ap.add_argument("--async", dest="asynchronous", action="store_true",
+                    help="measure ONLY the async double-buffered overlap row "
+                         "(sync vs wait=False over %d rounds)" % ASYNC_ROUNDS)
     args = ap.parse_args()
     rows = C.Rows()
+    if args.asynchronous:
+        base = _model(jax.random.PRNGKey(0))
+        n_params = sum(x.size for x in jax.tree.leaves(base))
+        _async_rows(rows, base, n_params)
+        rows.emit()
+        return
     if args.mesh:
         if (jax.device_count() != args.mesh
                 and os.environ.get("_REPRO_MESH_REEXEC") != "1"):

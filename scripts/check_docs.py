@@ -13,6 +13,15 @@ Three rules keep the docs suite from rotting:
    ``from repro.x import y`` statement in it must resolve against ``src/``
    (module importable, attribute present).  Blocks are NOT executed —
    pseudo-code belongs in untagged fences.
+4. **Documented signatures are live** — every inline code span of the form
+   ``` `repro.some.module.fn(arg, kw=...)` ``` (a fully-qualified dotted
+   path under ``repro``, optionally through a class, followed by an
+   argument list) is resolved and each named argument is verified against
+   ``inspect.signature`` of the real callable.  A doc that still shows
+   ``fuse_pending()`` after the code grew ``fuse_pending(buffer=, wait=)``
+   — or that documents a parameter the code no longer has — fails the
+   check instead of silently drifting.  ``...`` in the argument list
+   elides the rest; ``*``/``**`` markers are ignored.
 
 Exit code 0 = clean; 1 = problems (all listed on stderr).
 """
@@ -20,6 +29,7 @@ from __future__ import annotations
 
 import ast
 import importlib
+import inspect
 import os
 import re
 import sys
@@ -110,6 +120,80 @@ def _check_module(rel: str, lineno: int, name: str):
         return None
 
 
+# -- documented call signatures (rule 4) ------------------------------------
+
+SIG_RE = re.compile(r"`(repro(?:\.\w+)+)\(([^`]*)\)`")
+
+
+def _resolve_dotted(dotted: str):
+    """Import the longest importable module prefix, then getattr the rest
+    (classes, methods, nested attributes).  Returns None when unresolvable."""
+    parts = dotted.split(".")
+    for cut in range(len(parts), 0, -1):
+        try:
+            obj = importlib.import_module(".".join(parts[:cut]))
+        except ImportError:
+            continue
+        try:
+            for attr in parts[cut:]:
+                obj = getattr(obj, attr)
+        except AttributeError:
+            return None
+        return obj
+    return None
+
+
+def _documented_params(arglist: str):
+    """Parameter names mentioned in a documented argument list.  Splits on
+    top-level commas; ``name=...`` yields ``name``; bare ``...``/``*``/``**``
+    markers are elided (they claim nothing checkable)."""
+    names, depth, tok = [], 0, []
+    for ch in arglist + ",":
+        if ch == "," and depth == 0:
+            t = "".join(tok).strip()
+            tok = []
+            if not t or t == "...":
+                continue
+            t = t.split("=", 1)[0].strip().lstrip("*").strip()
+            if t and t != "...":
+                names.append(t)
+            continue
+        depth += ch in "([{"
+        depth -= ch in ")]}"
+        tok.append(ch)
+    return names
+
+
+def check_signatures(path: str, text: str) -> None:
+    # scanned over the whole text, not per line: markdown wraps long spans
+    # across lines and a wrapped span must not silently escape the check
+    rel = os.path.relpath(path, ROOT)
+    for m in SIG_RE.finditer(text):
+        dotted, arglist = m.group(1), " ".join(m.group(2).split())
+        lineno = text.count("\n", 0, m.start()) + 1
+        obj = _resolve_dotted(dotted)
+        if obj is None:
+            problems.append(
+                f"{rel}:{lineno}: documented signature `{dotted}(...)` "
+                "does not resolve")
+            continue
+        if isinstance(obj, type):
+            obj = obj.__init__
+        try:
+            sig = inspect.signature(obj)
+        except (TypeError, ValueError):
+            continue  # builtins without introspectable signatures
+        params = set(sig.parameters) - {"self", "cls"}
+        has_var_kw = any(
+            p.kind is inspect.Parameter.VAR_KEYWORD
+            for p in sig.parameters.values())
+        for name in _documented_params(arglist):
+            if name not in params and not has_var_kw:
+                problems.append(
+                    f"{rel}:{lineno}: `{dotted}` has no parameter "
+                    f"{name!r} (stale documented signature; actual: {sig})")
+
+
 def main() -> int:
     readme_path = os.path.join(ROOT, "README.md")
     readme = _read(readme_path)
@@ -123,6 +207,7 @@ def main() -> int:
         text = _read(path)
         check_links(path, text)
         check_code_blocks(path, text)
+        check_signatures(path, text)
     if problems:
         for p in problems:
             print(f"DOCS: {p}", file=sys.stderr)

@@ -24,9 +24,18 @@ python scripts/check_docs.py
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     python -m pytest tests/test_sharded_fuse.py -q -m "not slow"
 
+# crash-recovery under the forced 8-fake-device config: kill-and-reopen
+# spill recovery (per-shard placement, manifest validation) with the mesh
+# tests running on a REAL 8-device mesh rather than the single CPU device.
+# Includes the slow sharded kill-and-reopen subprocess test — it IS this
+# stage's point (its children force their own 8 devices).
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python -m pytest tests/test_repository.py tests/test_sharded_fuse.py \
+    -q -k "crash or recover"
+
 # kernel + end-to-end fuse micro-benches (smoke scale); refreshes
-# BENCH_kernels.json (including the fuse_e2e/mesh8_sharded row) so the
-# perf trajectory stays current
+# BENCH_kernels.json (including the fuse_e2e/mesh8_sharded and
+# fuse_e2e/async_overlap rows) so the perf trajectory stays current
 REPRO_BENCH_SCALE=quick python -m benchmarks.run --only kernels,fuse_e2e
 
 # examples cannot silently rot: both must run end-to-end at dry-run scale

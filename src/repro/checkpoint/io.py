@@ -9,30 +9,40 @@ All writes are atomic: the npz is written to a ``.tmp-<pid>`` sibling and
 ``os.replace``d into place, so a contributor crashing mid-upload can never
 leave a truncated checkpoint in the repository root.
 
-Two formats share the atomic writer:
+Three formats share the atomic writer:
 
 * **tree** (``save``/``load``) — one npz entry per leaf, human-diffable;
 * **flat** (``save_flat``/``load_flat``) — a single contiguous buffer plus
   its ``FlatSpec`` layout (JSON), the Repository's staging/spill format —
-  one sequential read brings a contribution back as a fusable ``[N]`` row.
+  one sequential read brings a contribution back as a fusable ``[N]`` row;
+* **flat-sharded** (``save_flat_shards``/``FlatShardReader``) — the same
+  row split into its S block-cyclic per-shard slices, one npz entry each,
+  so a mesh repository's spilled rows reload shard by shard and the full
+  ``[N]`` row never materializes on the host (docs/async_repository.md).
+
+``save_json_atomic`` extends the same crash discipline to the Repository's
+spill manifest: a reader can never observe a half-written JSON file.
 """
 from __future__ import annotations
 
 import json
 import os
-from typing import Any, Dict, Tuple
+import threading
+from typing import Any, Dict, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.utils.flat import FlatSpec
+from repro.utils.flat import FlatSpec, ShardedFlatSpec
 from repro.utils.pytree import path_str
 
 _SEP = "::"
 _BF16 = "__bf16__"  # npz has no bfloat16: stored as uint16 bit pattern
 _FLAT_BUF = "__flat_buffer__"
 _FLAT_SPEC = "__flat_spec__"
+_FLAT_SSPEC = "__flat_shard_spec__"
+_SHARD_FMT = "__flat_shard_{:04d}__"
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -127,3 +137,121 @@ def load_flat(path: str, *, as_jax: bool = True) -> Tuple[Any, FlatSpec]:
 def is_flat(path: str) -> bool:
     with np.load(path) as data:
         return _FLAT_BUF in data.files
+
+
+# -- atomic JSON (Repository spill manifest) --------------------------------
+
+
+def save_json_atomic(path: str, obj: Any, *, default=None) -> None:
+    """Write JSON with the same tmp + ``os.replace`` discipline as the npz
+    writer: a crash mid-write can never leave a truncated manifest (or
+    repository.json)."""
+    path = os.path.abspath(path)
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    # pid AND thread id: spill-executor threads of one process must not
+    # truncate each other's in-progress tmp file
+    tmp = f"{path}.tmp-{os.getpid()}-{threading.get_ident()}"
+    try:
+        with open(tmp, "w") as f:
+            json.dump(obj, f, indent=2, default=default)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.remove(tmp)
+        raise
+
+
+def load_json(path: str) -> Any:
+    with open(path) as f:
+        return json.load(f)
+
+
+# -- per-shard flat format (sharded spill) ----------------------------------
+
+
+def _spec_entry(spec: FlatSpec) -> np.ndarray:
+    return np.frombuffer(json.dumps(spec.to_json()).encode(), dtype=np.uint8)
+
+
+def save_flat_shards(path: str, slices: Sequence[np.ndarray],
+                     spec: FlatSpec, sspec: ShardedFlatSpec) -> None:
+    """Persist one flat row as its S block-cyclic per-shard slices
+    (``ShardedFlatSpec.shard_slices``), one npz entry per shard, plus both
+    layout specs.  Written atomically like every checkpoint."""
+    if len(slices) != sspec.n_shards:
+        raise ValueError(f"{len(slices)} slices != n_shards {sspec.n_shards}")
+    arrays: Dict[str, np.ndarray] = {
+        _FLAT_SPEC: _spec_entry(spec),
+        _FLAT_SSPEC: np.frombuffer(
+            json.dumps(sspec.to_json()).encode(), dtype=np.uint8),
+    }
+    for i, s in enumerate(slices):
+        arr = np.asarray(s)
+        if arr.dtype == jnp.bfloat16:
+            arr = arr.view(np.uint16)
+        arrays[_SHARD_FMT.format(i)] = arr
+    _atomic_savez(path, arrays)
+
+
+def is_flat_sharded(path: str) -> bool:
+    with np.load(path) as data:
+        return _FLAT_SSPEC in data.files
+
+
+class FlatShardReader:
+    """Lazy per-shard reader over a ``save_flat_shards`` npz.
+
+    ``np.load`` decompresses entries on access, so ``shard(i)`` brings only
+    that shard's ``[shard_len]`` slice onto the host — the reload path of
+    the sharded spill never holds the full ``[N]`` row.  Use as a context
+    manager (the underlying zip file stays open between reads).
+    """
+
+    def __init__(self, path: str):
+        self.path = path
+        self._data = np.load(path)
+        if _FLAT_SSPEC not in self._data.files:
+            self._data.close()
+            raise ValueError(f"{path} is not a sharded flat checkpoint")
+        self.spec = FlatSpec.from_json(
+            json.loads(bytes(self._data[_FLAT_SPEC]).decode()))
+        self.sspec = ShardedFlatSpec.from_json(
+            json.loads(bytes(self._data[_FLAT_SSPEC]).decode()))
+
+    def shard(self, i: int) -> np.ndarray:
+        """One ``[shard_len]`` slice, host-side."""
+        buf = self._data[_SHARD_FMT.format(i)]
+        if self.spec.dtype == "bfloat16":
+            buf = buf.view(jnp.bfloat16)
+        return buf
+
+    def full_row(self) -> np.ndarray:
+        """Reassemble the portable ``[N]`` row (the fallback when the spill
+        layout does not match the mesh the repository reopened under — this
+        path DOES materialize the row on host, by design)."""
+        return self.sspec.unshard_slices(
+            [self.shard(i) for i in range(self.sspec.n_shards)])
+
+    def close(self) -> None:
+        self._data.close()
+
+    def __enter__(self) -> "FlatShardReader":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+def flat_row_meta(path: str) -> Dict[str, Any]:
+    """Peek a spilled row's layout without touching its buffer entries:
+    returns the ``FlatSpec`` JSON dict plus ``{"sharded": bool}`` (and the
+    ``ShardedFlatSpec`` JSON under ``"shard_spec"`` when sharded).  Used by
+    crash recovery to validate manifest entries cheaply."""
+    with np.load(path) as data:
+        if _FLAT_SPEC not in data.files:
+            raise ValueError(f"{path} is not a flat checkpoint")
+        meta = json.loads(bytes(data[_FLAT_SPEC]).decode())
+        meta["sharded"] = _FLAT_SSPEC in data.files
+        if meta["sharded"]:
+            meta["shard_spec"] = json.loads(bytes(data[_FLAT_SSPEC]).decode())
+    return meta

@@ -33,7 +33,7 @@ from repro.kernels import ops
 from repro.launch import sharding as SH
 from repro.optim.optimizers import Optimizer
 from repro.train.step import make_train_step
-from repro.utils.flat import ShardedFlatSpec
+from repro.utils.flat import ShardedFlatSpec, StagedBuffer
 
 
 @dataclass(frozen=True)
@@ -137,8 +137,10 @@ def make_fuse_step(cfg: ArchConfig, mesh: Mesh, schedule: ColdSchedule,
         buf = jnp.concatenate(
             [l.reshape(C, -1).astype(jnp.float32) for l in leaves], axis=1)
         sspec = ShardedFlatSpec.for_size(buf.shape[1], n_shards)
+        # hand the staged cohort to the fuse as an explicit buffer handle —
+        # the same operand contract the async Repository uses
         fused = ops.cohort_fuse_sharded(
-            sspec.shard(buf), mesh=mesh, contrib_axes=contrib,
+            StagedBuffer(sspec.shard(buf)), mesh=mesh, contrib_axes=contrib,
             shard_axes=shard_axes, alpha=schedule.alpha)
         fused = sspec.unshard(fused)
         outs = []

@@ -25,6 +25,23 @@ Two fuse engines share the contributor-facing API:
   verbatim as the ``REPRO_NO_KERNELS`` oracle and for operators the kernel
   does not cover (``fisher``, ``ties``).
 
+The staging side is **double-buffered** (paper §8, asynchronous updates):
+uploads stage into the *front* buffer while ``fuse_pending(wait=False)``
+runs the screen+fuse on the *back* buffer — jax's asynchronous dispatch
+overlaps the device fuse with the host-side staging work of the next
+cohort, no Python threads required.  ``flush()`` (or the next
+``fuse_pending``/``download``) finalizes the in-flight fuse: screening,
+the optional weight-zeroed re-pass, and the publish.  See
+docs/async_repository.md.
+
+``spill=True`` makes the staging buffer **resumable**: every staged row is
+written atomically into the npz root together with a small JSON manifest
+(``staging_manifest.json``), and ``Repository.open`` recovers
+staged-but-unfused rows after a crash — re-staged into the correct buffer
+and, under ``mesh=``, the correct per-shard placement (spill files hold
+per-shard slices, so the reload never materializes a full ``[N]`` row on
+the host).
+
 Passing ``mesh=`` (with optional ``mesh_axes=``) distributes the flat
 engine: ``upload`` stages each row directly into its block-cyclic shard
 placement (``ShardedFlatSpec``), ``fuse_pending`` runs the screen+fuse
@@ -40,9 +57,12 @@ from __future__ import annotations
 import functools
 import json
 import os
+import threading
 import time
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Sequence
+import warnings
+from concurrent.futures import Future, ThreadPoolExecutor
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -54,11 +74,14 @@ from repro.core.validation import (ScreenReport, norms_from_sq,
                                    screen_contributions, screen_norms)
 from repro.kernels import ops
 from repro.launch import sharding as SH
-from repro.utils.flat import FlatSpec, ShardedFlatSpec
+from repro.utils.flat import (BufferPair, FlatSpec, ShardedFlatSpec,
+                              StagedBuffer, StagingSide)
 
 # operators the streaming flat engine covers; everything else (fisher, ties)
 # falls back to the per-leaf pytree engine
 FLAT_OPS = ("average", "damped", "task_arithmetic")
+
+MANIFEST = "staging_manifest.json"
 
 
 @dataclass
@@ -71,6 +94,26 @@ class FusionRecord:
     wall_time: float
 
 
+@dataclass
+class PendingFusion:
+    """Handle to an in-flight fuse: dispatched to the device, not yet
+    screened or published.  ``Repository.flush()`` (or the next
+    ``fuse_pending``/``download``) finalizes it; ``record`` is set once the
+    publish happened."""
+
+    stage: Optional[StagedBuffer]  # kept only while a screen re-pass may need it
+    fused: jax.Array
+    sq: jax.Array
+    weights: jax.Array
+    k: int
+    t0: float
+    record: Optional[FusionRecord] = None
+
+    @property
+    def done(self) -> bool:
+        return self.record is not None
+
+
 @functools.lru_cache(maxsize=32)
 def _stack_fn(k: int, sharding):
     """Jitted K-row stack with the staging out-sharding: each device
@@ -79,6 +122,16 @@ def _stack_fn(k: int, sharding):
     every fuse."""
     del k  # shapes key the jit cache; K only keys the lru entry
     return jax.jit(lambda *rows: jnp.stack(rows), out_shardings=sharding)
+
+
+@functools.lru_cache(maxsize=32)
+def _stack_plain_fn(k: int):
+    """Jitted single-device K-row stack.  Eager ops on the CPU backend
+    execute synchronously; only jitted computations dispatch asynchronously
+    — and the stack must dispatch async for the double-buffered fuse to
+    overlap uploads (docs/async_repository.md)."""
+    del k
+    return jax.jit(lambda *rows: jnp.stack(rows))
 
 
 def _json_default(o):
@@ -100,6 +153,7 @@ class Repository:
         keep_history: bool = False,
         use_flat: Optional[bool] = None,
         spill: bool = False,
+        spill_workers: int = 0,
         mesh: Optional[Any] = None,
         mesh_axes: Optional[Any] = None,
     ):
@@ -136,18 +190,59 @@ class Repository:
             self._n_shards = 1
         if spill and not root:
             raise ValueError("spill=True requires an on-disk root")
+        if spill and not use_flat:
+            raise ValueError("spill=True requires the flat engine "
+                             f"(fusion_op={fusion_op!r}, use_flat={use_flat})")
         self.spill = spill
         self.history: List[FusionRecord] = []
-        self._pending: List[Any] = []       # pytrees, flat rows, or spill paths
-        self._pending_fishers: List[Any] = []
-        self._pending_weights: List[Any] = []
+        # double-buffered staging: uploads fill the FRONT side; a dispatched
+        # fuse owns the BACK side until it publishes (docs/async_repository.md)
+        self._buffers = BufferPair()
+        self._inflight: Optional[PendingFusion] = None
         self._snapshots: List[Any] = []
         self._spec: Optional[FlatSpec] = None
         self._sspec: Optional[ShardedFlatSpec] = None
         self._base_flat: Optional[jax.Array] = None
+        # optional executor draining host-side spill writes off the upload path
+        self._spill_pool = (
+            ThreadPoolExecutor(max_workers=spill_workers,
+                               thread_name_prefix="repo-spill")
+            if spill and spill_workers > 0 else None)
+        self._spill_futures: List[Future] = []
+        self._row_futures: Dict[str, Future] = {}
+        self._manifest_lock = threading.Lock()
+        self._publish_lock = threading.Lock()
+        self._persisted_iteration = -1
         if root:
             os.makedirs(root, exist_ok=True)
             self._persist_base()
+
+    # -- staging-list views (front buffer) ------------------------------
+    # The parallel per-contribution lists keep their historical names; they
+    # always alias the FRONT side of the double buffer.
+    @property
+    def _pending(self) -> List[Any]:
+        return self._buffers.front.rows
+
+    @_pending.setter
+    def _pending(self, v: List[Any]) -> None:
+        self._buffers.front.rows = list(v)
+
+    @property
+    def _pending_fishers(self) -> List[Any]:
+        return self._buffers.front.fishers
+
+    @_pending_fishers.setter
+    def _pending_fishers(self, v: List[Any]) -> None:
+        self._buffers.front.fishers = list(v)
+
+    @property
+    def _pending_weights(self) -> List[Any]:
+        return self._buffers.front.weights
+
+    @_pending_weights.setter
+    def _pending_weights(self, v: List[Any]) -> None:
+        self._buffers.front.weights = list(v)
 
     # -- flat staging ---------------------------------------------------
     def _ensure_flat_base(self):
@@ -166,14 +261,39 @@ class Repository:
         return jax.device_put(
             self._sspec.shard(row), SH.flat_row_sharding(self.mesh, self.mesh_axes))
 
+    def _load_staged_row(self, p):
+        """A pending entry -> its staged array form.  In-memory rows pass
+        through; spilled rows load from disk — per shard for the sharded
+        layout (``FlatShardReader`` + ``stage_row_from_shards``: the host
+        only ever holds one shard's slice, never the full [N] row), or as a
+        portable [N] row for the flat layout (re-sharded by _stack_stage
+        under a mesh)."""
+        if not isinstance(p, str):
+            return p
+        fut = self._row_futures.pop(p, None)
+        if fut is not None:
+            fut.result()  # wait for (and surface errors from) THIS row's write
+        if ckpt.is_flat_sharded(p):
+            with ckpt.FlatShardReader(p) as r:
+                if self.mesh is not None and r.sspec == self._sspec:
+                    return SH.stage_row_from_shards(
+                        self.mesh, self.mesh_axes, r.sspec.n_shards,
+                        r.sspec.shard_len, r.shard)
+                # layout mismatch (repository reopened under a different
+                # mesh): fall back to host reassembly + restage
+                row = jnp.asarray(r.full_row())
+            return self._stage_row(row) if self.mesh is not None else row
+        row, _ = ckpt.load_flat(p)
+        return row
+
     def _stack_stage(self, rows: List[jax.Array]) -> jax.Array:
         """Stack K staged rows into the fuse operand.  On a mesh the stack
         runs under jit with the staging out-sharding, so each device
         concatenates its local slices — the [K, N] buffer is never
         materialized on one device."""
         if self.mesh is None:
-            return jnp.stack(rows)
-        rows = [r if r.ndim == 2 else self._stage_row(r) for r in rows]  # spilled rows load as [N]
+            return _stack_plain_fn(len(rows))(*rows)
+        rows = [r if r.ndim == 2 else self._stage_row(r) for r in rows]  # [N] rows re-shard
         stack = _stack_fn(
             len(rows), SH.flat_stage_sharding(self.mesh, self.mesh_axes))
         return stack(*rows)
@@ -191,13 +311,91 @@ class Repository:
         self._base = self._spec.unflatten(row)
         self._base_flat = fused
 
+    def _staging_iteration(self) -> int:
+        """The iteration newly staged uploads belong to: one ahead of the
+        repository while a fuse is in flight (its publish will advance
+        ``iteration`` before the staged cohort fuses)."""
+        return self.iteration + (1 if self._inflight is not None else 0)
+
     def _contrib_path(self, idx: int) -> str:
         return os.path.join(
-            self.root, f"iter{self.iteration:04d}_contrib{idx:03d}.npz")
+            self.root,
+            f"iter{self._staging_iteration():04d}_contrib{idx:03d}.npz")
+
+    # -- spill manifest -------------------------------------------------
+    def _manifest_path(self) -> str:
+        return os.path.join(self.root, MANIFEST)
+
+    def _write_manifest(self) -> None:
+        """Persist the staged-but-unfused row list (back + front sides).
+        Called with the row file already on disk, so a crash between row
+        write and manifest write only loses the newest row — never records
+        a row that does not exist."""
+        ckpt.save_json_atomic(self._manifest_path(), {
+            "version": 1,
+            "entries": self._buffers.manifest_entries(),
+        })
+
+    def _spill_row(self, row: jax.Array, idx: int, weight) -> str:
+        """Write one staged row to the npz root (per-shard slices under a
+        mesh, portable [N] otherwise), then append it to the manifest —
+        synchronously, or on the spill executor when ``spill_workers>0``."""
+        path = self._contrib_path(idx)
+        side = self._buffers.front
+        spec, sspec, mesh = self._spec, self._sspec, self.mesh
+        row_host = np.asarray(row)
+        entry = {
+            "file": os.path.basename(path),
+            "idx": idx,
+            # the iteration this row will fuse INTO the publish of: a
+            # manifest entry with staged_at < the recorded repository
+            # iteration was already consumed (its publish landed before the
+            # manifest rewrite did) and recovery must skip it, or a crash
+            # in that window would double-apply the cohort
+            "staged_at": self._staging_iteration(),
+            "weight": None if weight is None else float(weight),
+            "dtype": spec.dtype,
+            "size": spec.size,
+            "sharded": mesh is not None,
+        }
+        if mesh is not None:
+            entry["shard_spec"] = sspec.to_json()
+
+        def write():
+            if mesh is not None:
+                ckpt.save_flat_shards(
+                    path, sspec.shard_slices(row_host), spec, sspec)
+            else:
+                ckpt.save_flat(path, row_host, spec)
+            with self._manifest_lock:
+                side.manifest.append(entry)
+                self._write_manifest()
+
+        if self._spill_pool is not None:
+            fut = self._spill_pool.submit(write)
+            self._spill_futures.append(fut)
+            # readback waits on exactly THIS row's write, not the whole
+            # queue — the fuse's spill loads pipeline against the writer
+            self._row_futures[path] = fut
+        else:
+            write()
+        return path
+
+    def _drain_spill(self) -> None:
+        """Wait for ALL queued spill/publish writes (no-op when
+        synchronous); re-raise the first failure so a lost row cannot be
+        silently fused over."""
+        futures, self._spill_futures = self._spill_futures, []
+        self._row_futures.clear()
+        for f in futures:
+            f.result()
 
     # -- contributor-facing API ----------------------------------------
     def download(self):
-        """Contributor pulls the current base model (Fig. 1, step 1)."""
+        """Contributor pulls the current base model (Fig. 1, step 1).
+        Finalizes any in-flight fuse first, so the published base is always
+        the latest."""
+        self._finalize_inflight()
         return self._base
 
     def upload(self, params, fisher=None, weight: Optional[float] = None) -> int:
@@ -209,28 +407,29 @@ class Repository:
 
         On the flat engine the pytree is folded into a contiguous staging
         row right here and released — the Repository never holds K live
-        pytrees.  With ``spill=True`` the row goes to the npz root instead
-        and only its path stays in memory."""
-        idx = len(self._pending)
+        pytrees.  Rows stage into the FRONT buffer, so uploads proceed while
+        an async fuse runs on the back buffer.  With ``spill=True`` the row
+        goes to the npz root instead (atomic write + manifest append: the
+        row survives a crash) and only its path stays in memory."""
+        side = self._buffers.front
+        idx = len(side.rows)
         if self.use_flat:
             self._ensure_flat_base()
             row = self._spec.flatten(params)
-            if self.root:
-                # the on-disk row stays the portable [N] form — spill files
-                # are mesh-independent and re-shard on load
-                ckpt.save_flat(self._contrib_path(idx), row, self._spec)
             if self.spill:
-                self._pending.append(self._contrib_path(idx))
-            elif self.mesh is not None:
-                self._pending.append(self._stage_row(row))
+                side.rows.append(self._spill_row(row, idx, weight))
             else:
-                self._pending.append(row)
+                if self.root:
+                    # archived contribution stays the portable [N] form
+                    ckpt.save_flat(self._contrib_path(idx), row, self._spec)
+                side.rows.append(
+                    self._stage_row(row) if self.mesh is not None else row)
         else:
-            self._pending.append(params)
+            side.rows.append(params)
             if self.root:
                 ckpt.save(self._contrib_path(idx), params)
-        self._pending_fishers.append(fisher)
-        self._pending_weights.append(weight)
+        side.fishers.append(fisher)
+        side.weights.append(weight)
         return idx
 
     def contribute_async(self, params, *, alpha: Optional[float] = None) -> FusionRecord:
@@ -244,6 +443,7 @@ class Repository:
         On the flat engine this is one streaming kernel pass: the same
         launch yields the merged model and the screening norm; if the screen
         rejects, the merged buffer is simply discarded."""
+        self.flush()  # quiesce: its publish below must not race queued writes
         a = alpha if alpha is not None else 1.0 / (1.0 + self.iteration)
         t0 = time.time()
         if self.use_flat:
@@ -284,31 +484,273 @@ class Repository:
         self._base = new_base
         self._base_flat = new_flat
         self.iteration += 1
+        self._refresh_front_staging()
         if self.root:
             self._persist_base()
+            if self.spill or os.path.exists(self._manifest_path()):
+                with self._manifest_lock:
+                    self._write_manifest()
         return rec
 
     # -- repository maintenance ----------------------------------------
-    def fuse_pending(self) -> FusionRecord:
-        """Screen + fuse all pending contributions into the new base
-        (Fig. 1, step 4) and advance the iteration."""
+    def fuse_pending(
+        self,
+        buffer: Optional[Union[StagedBuffer, jax.Array]] = None,
+        *,
+        wait: bool = True,
+    ) -> Union[FusionRecord, PendingFusion]:
+        """Screen + fuse a cohort into the new base (Fig. 1, step 4).
+
+        With no arguments: swap the front staging buffer to the back and
+        fuse it (finalizing any previously in-flight fuse first).
+        ``wait=False`` dispatches the screen+fuse to the device and returns
+        a ``PendingFusion`` immediately — uploads of the next cohort then
+        overlap the device fuse; ``flush()`` (or the next ``fuse_pending``
+        / ``download``) finalizes and publishes.  On the per-leaf engine
+        ``wait`` is ignored (the oracle path is synchronous).
+
+        ``buffer=`` fuses an explicit staged operand instead — a
+        ``StagedBuffer`` handle (or raw ``[K, N]`` / sharded
+        ``[K, S, shard_len]`` array) prepared by the caller; the front
+        staging buffer is left untouched."""
+        self._finalize_inflight()
+        if buffer is not None:
+            return self._fuse_buffer(buffer, wait=wait)
         if not self._pending:
             raise RuntimeError("no contributions to fuse")
         t0 = time.time()
-        if self.use_flat:
-            rec = self._fuse_pending_flat(t0)
-        else:
-            rec = self._fuse_pending_pytree(t0)
-        self.history.append(rec)
-        self._pending = []
-        self._pending_fishers = []
-        self._pending_weights = []
-        self.iteration += 1
-        if self.root:
-            self._persist_base()
+        if not self.use_flat:
+            with self._manifest_lock:
+                back = self._buffers.swap()
+            self._mark_back_fusing()
+            try:
+                rec = self._fuse_pending_pytree(t0, back)
+            except Exception:
+                self._restore_back()
+                raise
+            self._retire_back()
+            self._after_publish(rec)
+            return rec
+        with self._manifest_lock:  # workers read both sides via manifest_entries
+            back = self._buffers.swap()
+        try:
+            pf = self._dispatch_flat(back, t0)
+        except Exception:
+            self._restore_back()
+            raise
+        self._inflight = pf
+        if wait:
+            return self._finalize_inflight()
+        return pf
+
+    def flush(self) -> Optional[FusionRecord]:
+        """Quiesce the repository: finalize the in-flight fuse, if any,
+        and drain every queued spill/publish write.  Returns the finalized
+        FusionRecord (None when nothing was in flight)."""
+        rec = self._finalize_inflight()
+        self._drain_spill()
         return rec
 
-    def _cohort_weights(self, K: int) -> jnp.ndarray:
+    def _finalize_inflight(self) -> Optional[FusionRecord]:
+        """Finalize the in-flight fuse: block on the screening statistic,
+        run the weight-zeroed re-pass for rejections, publish the fused
+        base, and advance the iteration.  Queued spill writes keep
+        draining on the executor — only ``flush()`` waits for them."""
+        pf, self._inflight = self._inflight, None
+        if pf is None:
+            return None
+        try:
+            rec = self._finalize_flat(pf)
+        except Exception:
+            # cohort not published: return its rows to the front buffer so
+            # they are retried (diluted by new uploads) rather than lost
+            self._restore_back()
+            raise
+        self._retire_back()
+        self._after_publish(rec)
+        return rec
+
+    def _dispatch_flat(self, back: StagingSide, t0: float) -> PendingFusion:
+        """Issue pass 1 (fused + sq_diff in one read of the staged buffer)
+        without blocking: jax dispatch is asynchronous, so the device
+        crunches while the host stages the next cohort.  The buffer is kept
+        alive (no donation) only if a screening re-pass might need it."""
+        self._ensure_flat_base()
+        K = len(back.rows)
+        rows = [self._load_staged_row(p) for p in back.rows]
+        stage = StagedBuffer(self._stack_stage(rows))
+        del rows
+        w = self._cohort_weights(K, back.weights)
+        alpha = self._flat_alpha(K)
+        fused, sq = self._fuse_flat(stage, w, alpha, donate=not self.screen)
+        try:
+            # start moving the [K] screening statistic to the host as soon
+            # as the fuse produces it, so finalize's device_get is a
+            # handshake rather than a transfer
+            sq.copy_to_host_async()
+        except (AttributeError, RuntimeError):
+            pass  # sharded/older arrays may not support it; finalize copies
+        # every back row's spill write (and manifest append) has completed
+        # by now — _load_staged_row waited on the per-row futures — so the
+        # in-flight mark covers the whole cohort
+        self._mark_back_fusing()
+        return PendingFusion(
+            stage=stage if self.screen else None,
+            fused=fused, sq=sq, weights=w, k=K, t0=t0)
+
+    def _finalize_flat(self, pf: PendingFusion) -> FusionRecord:
+        """The host half of the screen+fuse: pull sq_diff (the only device
+        sync), apply the §9 decision rule, re-pass with zeroed weights on
+        rejections, and publish."""
+        fused = pf.fused
+        report: Optional[ScreenReport] = None
+        n_accepted = pf.k
+        if self.screen:
+            norms = norms_from_sq(jax.device_get(pf.sq))
+            report = screen_norms(norms, mad_threshold=self.mad_threshold)
+            n_accepted = len(report.accepted)
+            if not report.accepted:
+                raise RuntimeError(f"all contributions rejected: {report.reasons}")
+            if report.rejected:
+                w2 = np.asarray(jax.device_get(pf.weights), np.float32).copy()
+                w2[report.rejected] = 0.0
+                alpha = self._flat_alpha(n_accepted)
+                fused, _ = self._fuse_flat(
+                    pf.stage, jnp.asarray(w2), alpha, donate=True)
+        fused.block_until_ready()
+        rec = FusionRecord(
+            iteration=self.iteration,
+            n_contributions=pf.k,
+            n_accepted=n_accepted,
+            op=self.fusion_op,
+            diff_norms=report.diff_norms if report else [],
+            wall_time=time.time() - pf.t0,
+        )
+        if self.keep_history:
+            self._snapshots.append(self._base)
+        self._publish_flat(fused)
+        pf.record = rec
+        return rec
+
+    def _fuse_buffer(self, buffer, *, wait: bool) -> Union[FusionRecord, PendingFusion]:
+        """Fuse an explicit staged operand (``fuse_pending(buffer=...)``)."""
+        if not self.use_flat:
+            raise ValueError("fuse_pending(buffer=...) requires the flat engine")
+        self._ensure_flat_base()
+        if not isinstance(buffer, StagedBuffer):
+            buffer = StagedBuffer(jnp.asarray(buffer))
+        if self.mesh is not None:
+            want = (self._sspec.n_shards, self._sspec.shard_len)
+            if buffer.data.shape[1:] != want:
+                raise ValueError(
+                    f"staged buffer shape {buffer.data.shape} does not match "
+                    f"the sharded layout [K, {want[0]}, {want[1]}]")
+        elif buffer.data.shape[1:] != (self._spec.size,):
+            raise ValueError(
+                f"staged buffer shape {buffer.data.shape} does not match "
+                f"the flat layout [K, {self._spec.size}]")
+        t0 = time.time()
+        K = buffer.k
+        w = self._cohort_weights(K, [])
+        alpha = self._flat_alpha(K)
+        # never donate here: the operand belongs to the CALLER (unlike the
+        # freshly stacked buffer in _dispatch_flat) and must stay valid
+        fused, sq = self._fuse_flat(buffer, w, alpha, donate=False)
+        pf = PendingFusion(
+            stage=buffer if self.screen else None,
+            fused=fused, sq=sq, weights=w, k=K, t0=t0)
+        if not wait:
+            self._inflight = pf
+            return pf
+        rec = self._finalize_flat(pf)
+        self._after_publish(rec)
+        return rec
+
+    def _retire_back(self) -> None:
+        """Drop the consumed back buffer.  Its manifest entries are NOT
+        rewritten here: the manifest may only forget a cohort once the new
+        base is durably on disk, so the rewrite is sequenced after the base
+        persist in ``_after_publish`` (on the spill executor when one is
+        configured)."""
+        with self._manifest_lock:  # workers read both sides via manifest_entries
+            self._buffers.retire_back()
+
+    def _mark_back_fusing(self) -> None:
+        """Stamp the back cohort's manifest entries as in-flight and
+        persist the mark.  Recovery may treat an entry as consumed ONLY if
+        it carries this mark AND the recorded iteration moved past its
+        ``staged_at`` — unconsumed front rows can share the same staged_at
+        (e.g. around a ``contribute_async`` publish) and must never be
+        skipped."""
+        back = self._buffers.back
+        if back is None or not back.manifest:
+            return
+        with self._manifest_lock:
+            for e in back.manifest:
+                e["fusing"] = True
+            if self.root and (self.spill
+                              or os.path.exists(self._manifest_path())):
+                self._write_manifest()
+
+    def _restore_back(self) -> None:
+        """Un-swap after a failed fuse: the back cohort returns to the head
+        of the front buffer (in-flight marks dropped), so nothing staged is
+        lost."""
+        with self._manifest_lock:
+            back = self._buffers.back
+            if back is None:
+                return
+            for e in back.manifest:
+                e.pop("fusing", None)
+            front = self._buffers.front
+            back.rows.extend(front.rows)
+            back.fishers.extend(front.fishers)
+            back.weights.extend(front.weights)
+            back.manifest.extend(front.manifest)
+            self._buffers.front = back
+            self._buffers.back = None
+
+    def _refresh_front_staging(self) -> None:
+        """Pending (front) rows survive publishes they did not take part
+        in: re-stamp their manifest entries to the next staging iteration,
+        so recovery never mistakes them for a consumed cohort.  Callers
+        hold no lock; the stamp is a plain dict write raced only by
+        ``_write_manifest`` readers, which tolerate either value."""
+        for e in self._buffers.front.manifest:
+            e["staged_at"] = self._staging_iteration()
+
+    def _after_publish(self, rec: FusionRecord) -> None:
+        self.history.append(rec)
+        self.iteration += 1
+        self._refresh_front_staging()
+        if not self.root:
+            return
+        if self._spill_pool is not None:
+            # drain the publish write on the spill executor too: the base
+            # npz + repository.json leave the fuse critical path.  State is
+            # captured by value (the pytree is immutable), so later host
+            # mutations cannot race the write; the manifest rewrite is
+            # sequenced AFTER the base persist inside the same task.  A
+            # crash before the persist recovers the cohort against the
+            # previous base; a crash between persist and rewrite is caught
+            # by the staged_at marker (the recorded iteration moved past
+            # the entries, so recovery skips them instead of re-applying).
+            it, base, meta = self.iteration, self._base, self._render_meta()
+            def task():
+                self._persist_base(it, base, meta)
+                with self._manifest_lock:
+                    self._write_manifest()
+            self._spill_futures.append(self._spill_pool.submit(task))
+        else:
+            self._persist_base()
+            if self.spill or os.path.exists(self._manifest_path()):
+                # the second arm: a non-spill reopen that fused recovered
+                # rows must still retire them from the manifest, or a later
+                # spill=True reopen would re-apply the cohort
+                with self._manifest_lock:
+                    self._write_manifest()
+
+    def _cohort_weights(self, K: int, staged_weights: Sequence[Any]) -> jnp.ndarray:
         """Per-contributor weights for the flat engine (average/damped)."""
         kw = self.fusion_kwargs
         if self.fusion_op in ("average", "damped"):
@@ -317,8 +759,8 @@ class Repository:
                 if len(w) != K:
                     raise ValueError(f"len(fusion_kwargs['weights'])={len(w)} != K={K}")
                 return jnp.asarray(w, jnp.float32)
-            if self._pending_weights and all(w is not None for w in self._pending_weights):
-                return jnp.asarray(self._pending_weights, jnp.float32)
+            if staged_weights and all(w is not None for w in staged_weights):
+                return jnp.asarray(list(staged_weights), jnp.float32)
         return jnp.ones((K,), jnp.float32)
 
     def _flat_alpha(self, n_effective: int) -> float:
@@ -330,60 +772,13 @@ class Repository:
             return float(self.fusion_kwargs.get("lam", 1.0)) * n_effective
         return 1.0
 
-    def _fuse_pending_flat(self, t0: float) -> FusionRecord:
-        """Single streaming pass: one kernel launch fuses the staged buffer
-        AND emits the §9 screening statistic; rejections trigger one cheap
-        weight-zeroed re-pass over the same staged buffer."""
-        self._ensure_flat_base()
-        K = len(self._pending)
-        rows = [
-            ckpt.load_flat(p)[0] if isinstance(p, str) else p
-            for p in self._pending
-        ]
-        stage = self._stack_stage(rows)
-        del rows
-        w = self._cohort_weights(K)
-        alpha = self._flat_alpha(K)
-        # pass 1: fused + sq_diff in one read of the staged buffer.  Keep the
-        # buffer alive only if a screening re-pass might need it.  (On a mesh
-        # the sq_diff per-shard partials are completed by the fuse's single
-        # all-reduce — the statistic arriving here is already global.)
-        fused, sq = self._fuse_flat(stage, w, alpha, donate=not self.screen)
-        report: Optional[ScreenReport] = None
-        n_accepted = K
-        if self.screen:
-            norms = norms_from_sq(jax.device_get(sq))
-            report = screen_norms(norms, mad_threshold=self.mad_threshold)
-            n_accepted = len(report.accepted)
-            if not report.accepted:
-                raise RuntimeError(f"all contributions rejected: {report.reasons}")
-            if report.rejected:
-                w2 = np.asarray(jax.device_get(w), np.float32).copy()
-                w2[report.rejected] = 0.0
-                alpha = self._flat_alpha(n_accepted)
-                fused, _ = self._fuse_flat(
-                    stage, jnp.asarray(w2), alpha, donate=True)
-        fused.block_until_ready()
-        rec = FusionRecord(
-            iteration=self.iteration,
-            n_contributions=K,
-            n_accepted=n_accepted,
-            op=self.fusion_op,
-            diff_norms=report.diff_norms if report else [],
-            wall_time=time.time() - t0,
-        )
-        if self.keep_history:
-            self._snapshots.append(self._base)
-        self._publish_flat(fused)
-        return rec
-
-    def _fuse_pending_pytree(self, t0: float) -> FusionRecord:
+    def _fuse_pending_pytree(self, t0: float, back: StagingSide) -> FusionRecord:
         """The seed per-leaf engine (REPRO_NO_KERNELS oracle; also serves
         the operators the kernel does not cover)."""
-        models = self._pending
+        models = back.rows
         report: Optional[ScreenReport] = None
-        fishers = self._pending_fishers
-        weights = self._pending_weights
+        fishers = back.fishers
+        weights = back.weights
         if self.screen:
             report = screen_contributions(self._base, models, mad_threshold=self.mad_threshold)
             models = [models[i] for i in report.accepted]
@@ -402,7 +797,7 @@ class Repository:
         new_base = fusion.fuse(self.fusion_op, self._base, models, **kw)
         rec = FusionRecord(
             iteration=self.iteration,
-            n_contributions=len(self._pending),
+            n_contributions=len(back.rows),
             n_accepted=len(models),
             op=self.fusion_op,
             diff_norms=report.diff_norms if report else [],
@@ -415,7 +810,10 @@ class Repository:
         return rec
 
     def rollback(self, to_iteration: int):
-        """Paper §8: "backtracking when a harmful update was done"."""
+        """Paper §8: "backtracking when a harmful update was done".  Any
+        in-flight fuse is finalized first; the staged (front) cohort is
+        dropped with the history."""
+        self.flush()  # quiesce: queued manifest/publish writes must settle
         if not self.keep_history:
             raise RuntimeError("rollback requires keep_history=True")
         if not (0 <= to_iteration < len(self._snapshots)):
@@ -425,22 +823,54 @@ class Repository:
         self._snapshots = self._snapshots[:to_iteration]
         self.history = self.history[:to_iteration]
         self.iteration = to_iteration
-        self._pending = []
-        self._pending_fishers = []
-        self._pending_weights = []
+        # the publish guard must follow the regression or later (smaller-
+        # iteration) publishes would be skipped as stale
+        self._persisted_iteration = min(self._persisted_iteration, to_iteration)
+        self._buffers = BufferPair()
+        if self.spill and self.root:
+            with self._manifest_lock:
+                self._write_manifest()
 
     def snapshot(self, iteration: int):
         return self._snapshots[iteration]
 
     # -- persistence -----------------------------------------------------
-    def _persist_base(self):
-        ckpt.save(os.path.join(self.root, f"base_iter{self.iteration:04d}.npz"), self._base)
-        meta = {
+    def _persist_base(self, iteration: Optional[int] = None,
+                      base=None, meta: Optional[Dict[str, Any]] = None):
+        """Write the current (or a captured) base + repository.json.  The
+        captured form is what the spill executor uses: everything it needs
+        is bound at submit time, so the worker never reads mutating state.
+
+        Serialized under the publish lock with a monotonic guard: with
+        ``spill_workers>=2`` two publish tasks may run concurrently, and a
+        slower, older task must neither interleave its repository.json
+        write with the newer one nor land after it and regress the
+        recorded iteration."""
+        it = self.iteration if iteration is None else iteration
+        base = self._base if base is None else base
+        meta = self._render_meta() if meta is None else meta
+        with self._publish_lock:
+            if it < self._persisted_iteration:
+                return  # a newer publish already landed
+            ckpt.save(os.path.join(self.root, f"base_iter{it:04d}.npz"), base)
+            # atomic like every other publish artifact: a crash mid-write
+            # must not brick Repository.open with truncated repository.json
+            ckpt.save_json_atomic(os.path.join(self.root, "repository.json"),
+                                  meta, default=_json_default)
+            self._persisted_iteration = it
+
+    def _render_meta(self) -> Dict[str, Any]:
+        spec = self._spec if self._spec is not None else FlatSpec.from_tree(self._base)
+        return {
             "iteration": self.iteration,
             "fusion_op": self.fusion_op,
             "fusion_kwargs": self.fusion_kwargs,
             "screen": self.screen,
             "mad_threshold": self.mad_threshold,
+            "spill": self.spill,
+            # the flat layout the recorded fusion_kwargs / staged rows are
+            # valid against; Repository.open refuses a base that disagrees
+            "flat_spec": {"dtype": spec.dtype, "size": spec.size},
             "history": [
                 {
                     "iteration": r.iteration,
@@ -453,18 +883,98 @@ class Repository:
                 for r in self.history
             ],
         }
-        with open(os.path.join(self.root, "repository.json"), "w") as f:
-            json.dump(meta, f, indent=2, default=_json_default)
+
+    # -- crash recovery ---------------------------------------------------
+    def _recover_staged(self, manifest: Dict[str, Any], spec: FlatSpec) -> int:
+        """Re-stage the staged-but-unfused rows a crash left behind
+        (docs/async_repository.md).
+
+        * entries marked in-flight (``fusing``) whose ``staged_at``
+          iteration is already behind the repository's are skipped — their
+          publish landed and only the manifest rewrite was lost to the
+          crash; recovering them would apply the cohort twice.  Entries
+          without the mark are always recovered: a publish that did not
+          consume them (``contribute_async``, an explicit-buffer fuse) may
+          have advanced the iteration past their ``staged_at``;
+        * entries whose row file is missing or unreadable (a partial write
+          never published by ``os.replace``, or a file deleted out from
+          under the manifest) are skipped with a warning;
+        * a row whose recorded FlatSpec disagrees with the base raises —
+          fusing mismatched rows would silently corrupt the model.
+
+        Recovered entries stay manifest-tracked on every engine, so they
+        are only retired by the publish of the fuse that consumes them."""
+        if self.use_flat:
+            self._ensure_flat_base()
+        side = self._buffers.front
+        recovered = 0
+        for e in manifest.get("entries", []):
+            if (e.get("fusing")
+                    and int(e.get("staged_at", self.iteration)) < self.iteration):
+                continue  # consumed by a publish that landed pre-crash
+            path = os.path.join(self.root, e["file"])
+            try:
+                meta = ckpt.flat_row_meta(path)
+            except Exception as err:  # missing / truncated / not-an-npz
+                warnings.warn(
+                    f"spill recovery: skipping unreadable staged row "
+                    f"{e['file']} ({type(err).__name__}: {err})")
+                continue
+            if meta["dtype"] != spec.dtype or int(meta["size"]) != spec.size:
+                raise ValueError(
+                    f"staged row {e['file']} was spilled with "
+                    f"FlatSpec(dtype={meta['dtype']}, N={meta['size']}) but the "
+                    f"repository base is (dtype={spec.dtype}, N={spec.size}) — "
+                    "refusing to recover mismatched rows")
+            if self.use_flat and self.spill:
+                side.rows.append(path)
+            elif self.use_flat:
+                side.rows.append(self._load_staged_row(path))
+            else:
+                # per-leaf engine: rebuild the pytree from the flat row
+                if meta.get("sharded"):
+                    with ckpt.FlatShardReader(path) as r:
+                        row, rspec = jnp.asarray(r.full_row()), r.spec
+                else:
+                    row, rspec = ckpt.load_flat(path)
+                side.rows.append(rspec.unflatten(row))
+            fresh = {k: v for k, v in e.items() if k != "fusing"}
+            fresh["staged_at"] = self._staging_iteration()
+            side.manifest.append(fresh)
+            side.fishers.append(None)
+            side.weights.append(e.get("weight"))
+            recovered += 1
+        if self.root:
+            with self._manifest_lock:
+                self._write_manifest()
+        return recovered
 
     @classmethod
     def open(cls, root: str, **kw) -> "Repository":
         """Re-open an on-disk repository at its latest base model, restoring
         the fusion configuration, screen settings, and history recorded in
-        ``repository.json`` (explicit keyword arguments win)."""
+        ``repository.json`` (explicit keyword arguments win).
+
+        The loaded base is validated against the recorded flat layout
+        (dtype/N) — a swapped or corrupted ``base_iterNNNN.npz`` raises
+        instead of silently applying the recorded fusion_kwargs to the
+        wrong model.  Staged-but-unfused rows recorded in the spill
+        manifest are recovered into the front staging buffer (and their
+        shard placement, under ``mesh=``)."""
         with open(os.path.join(root, "repository.json")) as f:
             meta = json.load(f)
         it = meta["iteration"]
         base = ckpt.load(os.path.join(root, f"base_iter{it:04d}.npz"))
+        spec = FlatSpec.from_tree(base)
+        recorded = meta.get("flat_spec")
+        if recorded and (recorded["dtype"] != spec.dtype
+                         or int(recorded["size"]) != spec.size):
+            raise ValueError(
+                f"repository.json records FlatSpec(dtype={recorded['dtype']}, "
+                f"N={recorded['size']}) but base_iter{it:04d}.npz loads as "
+                f"(dtype={spec.dtype}, N={spec.size}) — the base checkpoint "
+                "does not match the recorded configuration; refusing to apply "
+                "the stored fusion_kwargs/screen settings to it")
         kw.setdefault("fusion_op", meta.get("fusion_op", "average"))
         if meta.get("fusion_kwargs"):
             kw.setdefault("fusion_kwargs", meta["fusion_kwargs"])
@@ -472,11 +982,22 @@ class Repository:
         kw.setdefault("mad_threshold", meta.get("mad_threshold", 5.0))
         # constructed with root=None so __init__ does not re-persist (and
         # clobber) base_iter0000; root/spill are restored afterwards
-        spill = bool(kw.pop("spill", False))
+        # (spill is recorded in repository.json; explicit kwargs win)
+        spill = bool(kw.pop("spill", meta.get("spill", False)))
+        spill_workers = int(kw.pop("spill_workers", 0))
         repo = cls(base, root=None, **kw)
         repo.iteration = it
         repo.root = root
-        repo.spill = spill
+        repo._persisted_iteration = it
+        if spill and not repo.use_flat:
+            warnings.warn(
+                "spill=True requested but the repository reopened on the "
+                "per-leaf engine — staged rows will NOT be spilled or "
+                "crash-recoverable until reopened on the flat engine")
+        repo.spill = spill and repo.use_flat
+        if repo.spill and spill_workers > 0:
+            repo._spill_pool = ThreadPoolExecutor(
+                max_workers=spill_workers, thread_name_prefix="repo-spill")
         repo.history = [
             FusionRecord(
                 iteration=r["iteration"],
@@ -488,4 +1009,7 @@ class Repository:
             )
             for r in meta.get("history", [])
         ]
+        manifest_path = os.path.join(root, MANIFEST)
+        if os.path.exists(manifest_path):
+            repo._recover_staged(ckpt.load_json(manifest_path), spec)
         return repo

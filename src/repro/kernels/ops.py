@@ -23,7 +23,7 @@ from repro.kernels.cold_fuse import cold_fuse as _cold_fuse_kernel
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
 from repro.kernels.rwkv6_scan import rwkv6_scan as _rwkv_kernel
 from repro.launch.sharding import axes_entry, axes_extent, norm_axes
-from repro.utils.flat import FlatSpec
+from repro.utils.flat import FlatSpec, StagedBuffer
 
 RWKV_LOGW_FLOOR = -4.0  # kernel contract (see rwkv6_scan docstring)
 
@@ -45,17 +45,26 @@ def _interpret() -> bool:
 # ---------------------------------------------------------------------------
 
 
+def _staged(contribs):
+    """Fuse operands accept either a raw array or an explicit
+    ``StagedBuffer`` handle (the async double-buffered Repository hands the
+    back buffer around as a handle — docs/async_repository.md)."""
+    return contribs.data if isinstance(contribs, StagedBuffer) else contribs
+
+
 def fuse_flat(base, contribs, weights, alpha: float = 1.0,
               *, donate: bool = False) -> Tuple[jax.Array, jax.Array]:
     """Fused repository update over flattened parameter vectors.
-    Returns (fused [N], sq_diff [K]).  ``donate=True`` hands the staged
-    ``contribs`` buffer to the backend for reuse (kernel path only).
+    Returns (fused [N], sq_diff [K]).  ``contribs`` is the staged ``[K, N]``
+    operand — a raw array or a ``StagedBuffer`` handle.  ``donate=True``
+    hands the staged buffer to the backend for reuse (kernel path only).
 
     Unlike attention/rwkv, the Mosaic kernel only runs on real TPUs: the
     interpret-mode emulation is a correctness harness, several times slower
     than plain XLA, so on other backends the (jitted) flat jnp oracle serves
     the same single-pass contract (one read of the staged [K, N] buffer
     yields both the fused model and the screening statistics)."""
+    contribs = _staged(contribs)
     if kernels_enabled() and not _interpret():
         return _cold_fuse_kernel(
             base, contribs, weights, alpha, interpret=False, donate=donate)
@@ -144,9 +153,12 @@ def fuse_flat_sharded(
     """Distributed fuse_flat over a block-cyclic staging layout.
 
     Returns (fused [S, shard_len] sharded like ``base``, sq_diff [K]
-    replicated).  Padding introduced by the layout is zero in both base and
-    contributions, so it cancels in the diff and never biases ``sq_diff``.
+    replicated).  ``contribs`` is the staged operand — a raw array or a
+    ``StagedBuffer`` handle.  Padding introduced by the layout is zero in
+    both base and contributions, so it cancels in the diff and never biases
+    ``sq_diff``.
     """
+    contribs = _staged(contribs)
     ax = norm_axes(axes)
     use_kernel = kernels_enabled() and not _interpret()
     fn = _sharded_fuse_fn(mesh, ax, use_kernel)
@@ -201,7 +213,9 @@ def cohort_fuse_sharded(
     path): both lay the flat buffer out block-cyclically and complete a
     per-shard partial with a single all-reduce; they differ only in which
     dim the psum runs over (sq_diff over the shard axes there, the
-    contributor mean here)."""
+    contributor mean here).  ``stage`` accepts a raw array or a
+    ``StagedBuffer`` handle."""
+    stage = _staged(stage)
     fn = _cohort_fuse_fn(
         mesh, norm_axes(contrib_axes), norm_axes(shard_axes), float(alpha))
     return fn(stage)

@@ -27,6 +27,7 @@ import re
 from typing import Optional, Sequence, Tuple
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
@@ -347,3 +348,24 @@ def flat_stage_sharding(mesh: Mesh, axes) -> NamedSharding:
     rows, each laid out like ``flat_row_sharding`` — no device ever holds
     more than ``K x shard_len`` elements of the cohort."""
     return NamedSharding(mesh, P(None, axes_entry(axes), None))
+
+
+def stage_row_from_shards(mesh: Mesh, axes, n_shards: int, shard_len: int,
+                          read_shard) -> jax.Array:
+    """Build one staged ``[S, shard_len]`` row directly from a per-shard
+    host reader — the sharded-spill reload path (docs/async_repository.md).
+
+    ``read_shard(i)`` returns shard ``i``'s ``[shard_len]`` host slice;
+    ``jax.make_array_from_callback`` asks for exactly the shard ranges each
+    addressable device owns, so the host only ever holds the slices of the
+    shards being placed — never the full ``[N]`` row."""
+    sharding = flat_row_sharding(mesh, axes)
+
+    def cb(index):
+        rng = index[0]
+        lo = rng.start or 0
+        hi = n_shards if rng.stop is None else rng.stop
+        return np.stack([np.asarray(read_shard(i)) for i in range(lo, hi)])
+
+    return jax.make_array_from_callback(
+        (n_shards, shard_len), sharding, cb)

@@ -21,6 +21,14 @@ flat ``[N]`` buffer (and the stacked ``[K, N]`` staging buffer) onto a
 ``[S, shard_len]`` grid whose leading dim lands on a mesh axis, so the
 Repository's staging and fuse can be distributed without any device ever
 holding the full buffer (see docs/sharding.md).
+
+``StagedBuffer`` and ``BufferPair`` are the staging-side primitives of the
+async double-buffered Repository (docs/async_repository.md): a
+``StagedBuffer`` is the explicit handle the fuse entry points accept (one
+stacked cohort operand, single-device ``[K, N]`` or sharded
+``[K, S, shard_len]``), and a ``BufferPair`` is the front/back pair of
+staging sides — uploads append to the front while the back is being fused
+on device.
 """
 from __future__ import annotations
 
@@ -296,3 +304,130 @@ class ShardedFlatSpec:
         grid = arr.reshape(lead + (self.n_shards, self.n_super, self.block))
         flat = jnp.swapaxes(grid, -3, -2).reshape(lead + (self.padded_size,))
         return flat[..., : self.size]
+
+    # -- host-side per-shard spill layout -------------------------------
+    def shard_slices(self, row) -> List[np.ndarray]:
+        """``[N]`` host row -> its S per-shard ``[shard_len]`` slices, in
+        numpy (no device round trip) — the spill-per-shard write layout.
+        Each slice is exactly what ``shard(row)[s]`` would hold."""
+        row = np.asarray(row)
+        if row.shape != (self.size,):
+            raise ValueError(f"row shape {row.shape} != ({self.size},)")
+        pad = self.padded_size - self.size
+        if pad:
+            row = np.concatenate([row, np.zeros((pad,), row.dtype)])
+        grid = row.reshape(self.n_super, self.n_shards, self.block)
+        return [np.ascontiguousarray(grid[:, s, :].reshape(self.shard_len))
+                for s in range(self.n_shards)]
+
+    def unshard_slices(self, slices: Sequence[np.ndarray]) -> np.ndarray:
+        """Per-shard ``[shard_len]`` slices -> the ``[N]`` host row (the
+        portability fallback when a spilled layout does not match the mesh
+        the repository was reopened under)."""
+        if len(slices) != self.n_shards:
+            raise ValueError(f"{len(slices)} slices != n_shards {self.n_shards}")
+        grid = np.stack([np.asarray(s).reshape(self.n_super, self.block)
+                         for s in slices], axis=1)
+        return grid.reshape(self.padded_size)[: self.size]
+
+    # -- serialization (spill manifest) ---------------------------------
+    def to_json(self) -> Dict[str, Any]:
+        return {"size": self.size, "n_shards": self.n_shards, "block": self.block}
+
+    @classmethod
+    def from_json(cls, meta: Dict[str, Any]) -> "ShardedFlatSpec":
+        return cls(int(meta["size"]), int(meta["n_shards"]), int(meta["block"]))
+
+
+# ---------------------------------------------------------------------------
+# StagedBuffer / BufferPair — the async double-buffered staging primitives
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class StagedBuffer:
+    """Explicit handle to one stacked cohort operand.
+
+    The fuse entry points (``ops.fuse_flat``, ``ops.fuse_flat_sharded``,
+    ``ops.cohort_fuse_sharded``, ``Repository.fuse_pending``) accept either
+    a raw array or this handle; the handle names the layout so callers and
+    the Repository can hand a staged cohort around without re-deriving what
+    it is:
+
+    * ``data`` is ``[K, N]`` (single device) or ``[K, S, shard_len]``
+      (block-cyclic over a mesh, ``sharded`` True);
+    * ``k`` is the cohort size (leading dim).
+    """
+
+    data: jax.Array
+
+    @property
+    def k(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def sharded(self) -> bool:
+        return self.data.ndim == 3
+
+    @classmethod
+    def from_rows(cls, rows: Sequence[jax.Array]) -> "StagedBuffer":
+        """Stack K staged ``[N]`` (or ``[S, shard_len]``) rows."""
+        if not rows:
+            raise ValueError("cannot stage an empty cohort")
+        return cls(jnp.stack(list(rows)))
+
+
+class StagingSide:
+    """One side of the double buffer: the parallel per-contribution lists
+    the Repository staging keeps (row/path, fisher, weight, and — with
+    spill — the manifest entry describing the on-disk row)."""
+
+    __slots__ = ("rows", "fishers", "weights", "manifest")
+
+    def __init__(self):
+        self.rows: List[Any] = []
+        self.fishers: List[Any] = []
+        self.weights: List[Any] = []
+        self.manifest: List[Dict[str, Any]] = []
+
+    def __len__(self) -> int:
+        return len(self.rows)
+
+
+class BufferPair:
+    """Front/back staging pair (docs/async_repository.md).
+
+    ``upload`` appends to the **front** side; ``swap()`` moves the front
+    cohort to the **back** (the fuse operand of the in-flight dispatch) and
+    opens a fresh front, so uploads continue while the back is being fused
+    on device.  ``retire_back()`` drops the back side once its fuse has
+    published.  The pair never holds more than one in-flight cohort: a
+    second ``swap()`` before ``retire_back()`` is a caller bug and raises.
+    """
+
+    def __init__(self):
+        self.front = StagingSide()
+        self.back: Optional[StagingSide] = None
+
+    def swap(self) -> StagingSide:
+        if self.back is not None:
+            raise RuntimeError("back buffer still in flight — finalize the "
+                               "pending fuse before swapping again")
+        self.back = self.front
+        self.front = StagingSide()
+        return self.back
+
+    def retire_back(self) -> None:
+        self.back = None
+
+    def manifest_entries(self) -> List[Dict[str, Any]]:
+        """All staged-but-unfused manifest entries, back (in-flight, not yet
+        published) first — exactly the rows a crash right now would need to
+        recover.  Reads a local capture of ``back``: spill-executor workers
+        call this under the Repository's manifest lock while the main
+        thread swaps/retires under the same lock, but the capture keeps a
+        concurrent retire from turning the None-check into an attribute
+        error even if a future call site forgets the lock."""
+        back = self.back
+        entries = list(back.manifest) if back is not None else []
+        return entries + list(self.front.manifest)

@@ -1,0 +1,64 @@
+"""scripts/check_docs.py rule 4: documented call signatures are verified
+against the live code via inspect.signature — stale docs fail the check."""
+import importlib.util
+import os
+import sys
+
+import pytest
+
+_SCRIPTS = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "scripts")
+
+
+@pytest.fixture()
+def checker():
+    spec = importlib.util.spec_from_file_location(
+        "check_docs", os.path.join(_SCRIPTS, "check_docs.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    mod.problems.clear()
+    return mod
+
+
+def _run(mod, text):
+    mod.problems.clear()
+    mod.check_signatures(os.path.join(mod.ROOT, "docs", "x.md"), text)
+    return list(mod.problems)
+
+
+def test_valid_signature_passes(checker):
+    text = ("`repro.core.repository.Repository.fuse_pending(buffer=None, "
+            "wait=True)` and `repro.kernels.ops.fuse_flat(base, contribs, "
+            "weights, alpha, donate=False)`")
+    assert _run(checker, text) == []
+
+
+def test_ellipsis_and_star_markers_are_elided(checker):
+    assert _run(checker,
+                "`repro.core.repository.Repository.upload(params, ...)`") == []
+
+
+def test_stale_parameter_fails(checker):
+    probs = _run(checker,
+                 "`repro.core.repository.Repository.fuse_pending(cohort=3)`")
+    assert len(probs) == 1 and "no parameter 'cohort'" in probs[0]
+
+
+def test_unresolvable_path_fails(checker):
+    probs = _run(checker, "`repro.core.repository.Repository.no_such_fn(x)`")
+    assert len(probs) == 1 and "does not resolve" in probs[0]
+
+
+def test_class_constructor_checked(checker):
+    assert _run(checker,
+                "`repro.core.repository.Repository(base_params, spill=True, "
+                "spill_workers=1, mesh=None)`") == []
+    probs = _run(checker, "`repro.core.repository.Repository(bogus_kw=1)`")
+    assert len(probs) == 1
+
+
+def test_documented_params_parser(checker):
+    f = checker._documented_params
+    assert f("a, b=1, *, c=..., ...") == ["a", "b", "c"]
+    assert f("") == []
+    assert f("x={'k': (1, 2)}, y=[3, 4]") == ["x", "y"]

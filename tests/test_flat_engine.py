@@ -457,6 +457,84 @@ def test_checkpoint_write_is_atomic(tmp_path, monkeypatch):
     assert leftovers == []
 
 
+def test_buffer_pair_swap_and_restore():
+    from repro.utils.flat import BufferPair
+
+    bp = BufferPair()
+    bp.front.rows.extend(["a", "b"])
+    back = bp.swap()
+    assert back.rows == ["a", "b"] and bp.front.rows == []
+    with pytest.raises(RuntimeError, match="in flight"):
+        bp.swap()
+    bp.retire_back()
+    assert bp.back is None
+    assert bp.swap().rows == []
+
+
+def test_staged_buffer_handle():
+    from repro.utils.flat import StagedBuffer
+
+    buf = StagedBuffer.from_rows([jnp.zeros((5,)), jnp.ones((5,))])
+    assert buf.k == 2 and not buf.sharded
+    sharded = StagedBuffer(jnp.zeros((3, 4, 8)))
+    assert sharded.k == 3 and sharded.sharded
+    with pytest.raises(ValueError, match="empty cohort"):
+        StagedBuffer.from_rows([])
+    # ops entry points unwrap the handle transparently
+    base = jnp.zeros((5,))
+    fused, sq = ops.fuse_flat(base, buf, jnp.ones((2,), jnp.float32), 1.0)
+    np.testing.assert_allclose(np.asarray(fused), 0.5)
+
+
+def test_shard_slices_roundtrip():
+    from repro.utils.flat import ShardedFlatSpec
+
+    rng = np.random.default_rng(0)
+    for n, s in [(5, 2), (561, 4), (9000, 8)]:
+        row = rng.standard_normal(n).astype(np.float32)
+        sp = ShardedFlatSpec.for_size(n, s)
+        slices = sp.shard_slices(row)
+        assert len(slices) == s and all(x.shape == (sp.shard_len,) for x in slices)
+        # slice s equals shard(row)[s] and the slices reassemble exactly
+        grid = np.asarray(sp.shard(row))
+        for i, sl in enumerate(slices):
+            np.testing.assert_array_equal(sl, grid[i])
+        np.testing.assert_array_equal(sp.unshard_slices(slices), row)
+
+
+def test_save_flat_shards_roundtrip(tmp_path):
+    from repro.utils.flat import FlatSpec, ShardedFlatSpec
+
+    tree = _odd_tree(KEY)
+    buf, spec = flatten_tree(tree)
+    sp = ShardedFlatSpec.for_size(spec.size, 4)
+    path = str(tmp_path / "row.npz")
+    ckpt.save_flat_shards(path, sp.shard_slices(np.asarray(buf)), spec, sp)
+    assert ckpt.is_flat_sharded(path) and not ckpt.is_flat(path)
+    meta = ckpt.flat_row_meta(path)
+    assert meta["sharded"] and meta["size"] == spec.size
+    with ckpt.FlatShardReader(path) as r:
+        assert r.sspec == sp and r.spec.size == spec.size
+        np.testing.assert_array_equal(r.shard(1), sp.shard_slices(np.asarray(buf))[1])
+        np.testing.assert_allclose(r.full_row(), np.asarray(buf))
+
+
+def test_save_json_atomic_crash_keeps_previous(tmp_path, monkeypatch):
+    path = os.path.join(tmp_path, "m.json")
+    ckpt.save_json_atomic(path, {"v": 1})
+    real_replace = os.replace
+
+    def exploding(src, dst):
+        raise OSError("simulated crash before publish")
+
+    monkeypatch.setattr(os, "replace", exploding)
+    with pytest.raises(OSError):
+        ckpt.save_json_atomic(path, {"v": 2})
+    monkeypatch.setattr(os, "replace", real_replace)
+    assert ckpt.load_json(path) == {"v": 1}
+    assert [f for f in os.listdir(tmp_path) if "tmp" in f] == []
+
+
 def test_checkpoint_save_appends_npz_suffix(tmp_path):
     """np.savez semantics: a suffix-less target still produces <name>.npz."""
     ckpt.save(os.path.join(tmp_path, "model"), {"w": jnp.ones((2,))})

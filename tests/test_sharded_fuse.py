@@ -252,7 +252,10 @@ def test_repository_mesh_stages_rows_sharded():
 
 
 def test_repository_mesh_spill_roundtrip(tmp_path):
-    """Spill files stay portable [N] rows; they re-shard on load."""
+    """With mesh= the spill files hold per-shard slices (the sharded spill
+    layout); the fuse over spilled rows matches the in-memory flat engine."""
+    from repro.checkpoint import io as ckpt
+
     mesh, _ = _mesh()
     root = str(tmp_path / "repo")
     base = _odd_tree(KEY)
@@ -263,10 +266,60 @@ def test_repository_mesh_spill_roundtrip(tmp_path):
         rm.upload(u)
         rp.upload(u)
     assert all(isinstance(p, str) and os.path.exists(p) for p in rm._pending)
+    assert all(ckpt.is_flat_sharded(p) for p in rm._pending)
     rm.fuse_pending()
     rp.fuse_pending()
     for a, b in zip(jax.tree.leaves(rm.download()), jax.tree.leaves(rp.download())):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+def test_repository_mesh_sharded_spill_recovery_no_full_row(tmp_path, monkeypatch):
+    """Crash recovery of sharded spill re-stages each row shard by shard:
+    the reload path must never reassemble a full [N] row on the host."""
+    from repro.checkpoint import io as ckpt
+    from repro.utils import flat as F
+
+    mesh, _ = _mesh()
+    root = str(tmp_path / "repo")
+    base = _odd_tree(KEY)
+    ups = _contribs(base, 3)
+    rm = Repository(base, mesh=mesh, root=root, spill=True)
+    for u in ups:
+        rm.upload(u)
+    # "crash": drop the in-memory repository; reopen under the same mesh
+    # with every full-row path forbidden
+    def boom(*a, **k):
+        raise AssertionError("full [N] row materialized on host")
+    monkeypatch.setattr(F.ShardedFlatSpec, "unshard_slices", boom)
+    monkeypatch.setattr(ckpt.FlatShardReader, "full_row", boom)
+    monkeypatch.setattr(ckpt, "load_flat", boom)
+    again = Repository.open(root, mesh=mesh, spill=True)
+    assert len(again._pending) == 3
+    rec = again.fuse_pending()
+    monkeypatch.undo()
+    assert rec.n_accepted == 3
+    rp = Repository(base, use_flat=True)
+    for u in ups:
+        rp.upload(u)
+    rp.fuse_pending()
+    for a, b in zip(jax.tree.leaves(again.download()), jax.tree.leaves(rp.download())):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+def test_repository_mesh_sharded_spill_reopens_meshless(tmp_path):
+    """Portability fallback: a sharded spill reopened WITHOUT a mesh
+    reassembles rows on the host and still fuses correctly."""
+    mesh, _ = _mesh()
+    root = str(tmp_path / "repo")
+    base = _odd_tree(KEY)
+    ups = _contribs(base, 2)
+    rm = Repository(base, mesh=mesh, root=root, spill=True)
+    for u in ups:
+        rm.upload(u)
+    again = Repository.open(root, use_flat=True, spill=False)
+    assert len(again._pending) == 2
+    rec = again.fuse_pending()
+    assert rec.n_accepted == 2
 
 
 def test_repository_mesh_async_and_rollback():
