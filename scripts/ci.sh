@@ -33,10 +33,19 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     python -m pytest tests/test_repository.py tests/test_sharded_fuse.py \
     -q -k "crash or recover"
 
+# service-loop stage: the contributor service loop end-to-end — the demo
+# driver (fusion daemon + 2 contributor subprocesses x 3 fusion rounds,
+# daemon on a forced 8-fake-device mesh) plus the kill-at-checkpoint
+# fault-injection suite (slow marker: exactly-once fusion across every
+# parametrized crash window, docs/service_loop.md)
+python examples/cold_service_demo.py --contributors 2 --rounds 3 --mesh 8
+python -m pytest tests/test_cold_service.py -q -m slow
+
 # kernel + end-to-end fuse micro-benches (smoke scale); refreshes
-# BENCH_kernels.json (including the fuse_e2e/mesh8_sharded and
-# fuse_e2e/async_overlap rows) so the perf trajectory stays current
-REPRO_BENCH_SCALE=quick python -m benchmarks.run --only kernels,fuse_e2e
+# BENCH_kernels.json (including the fuse_e2e/mesh8_sharded,
+# fuse_e2e/async_overlap, and service_loop/throughput rows) so the perf
+# trajectory stays current
+REPRO_BENCH_SCALE=quick python -m benchmarks.run --only kernels,fuse_e2e,service_loop
 
 # examples cannot silently rot: both must run end-to-end at dry-run scale
 python examples/cold_fusion_multitask.py --dry-run

@@ -28,7 +28,7 @@ from __future__ import annotations
 import json
 import os
 import threading
-from typing import Any, Dict, Sequence, Tuple
+from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -42,6 +42,7 @@ _BF16 = "__bf16__"  # npz has no bfloat16: stored as uint16 bit pattern
 _FLAT_BUF = "__flat_buffer__"
 _FLAT_SPEC = "__flat_spec__"
 _FLAT_SSPEC = "__flat_shard_spec__"
+_FLAT_EXTRA = "__flat_extra__"  # free-form JSON rider (queue submissions)
 _SHARD_FMT = "__flat_shard_{:04d}__"
 
 
@@ -107,16 +108,29 @@ def load(path: str, *, as_jax: bool = True):
 # -- flat-buffer format (Repository staging / spill) ------------------------
 
 
-def save_flat(path: str, buf, spec: FlatSpec) -> None:
-    """Persist a flat parameter buffer + its layout spec in one npz."""
+def _extra_entry(extra: Dict[str, Any]) -> np.ndarray:
+    return np.frombuffer(json.dumps(extra).encode(), dtype=np.uint8)
+
+
+def save_flat(path: str, buf, spec: FlatSpec, *,
+              extra: Optional[Dict[str, Any]] = None) -> None:
+    """Persist a flat parameter buffer + its layout spec in one npz.
+
+    ``extra`` rides along as a free-form JSON entry (surfaced by
+    ``flat_row_meta``) — the contribution queue uses it for submission
+    metadata (contributor, weight, base iteration, checksum) without
+    changing the row format."""
     arr = np.asarray(buf)
     if arr.dtype == jnp.bfloat16:
         arr = arr.view(np.uint16)
-    _atomic_savez(path, {
+    arrays = {
         _FLAT_BUF: arr,
         _FLAT_SPEC: np.frombuffer(
             json.dumps(spec.to_json()).encode(), dtype=np.uint8),
-    })
+    }
+    if extra is not None:
+        arrays[_FLAT_EXTRA] = _extra_entry(extra)
+    _atomic_savez(path, arrays)
 
 
 def load_flat(path: str, *, as_jax: bool = True) -> Tuple[Any, FlatSpec]:
@@ -174,10 +188,12 @@ def _spec_entry(spec: FlatSpec) -> np.ndarray:
 
 
 def save_flat_shards(path: str, slices: Sequence[np.ndarray],
-                     spec: FlatSpec, sspec: ShardedFlatSpec) -> None:
+                     spec: FlatSpec, sspec: ShardedFlatSpec, *,
+                     extra: Optional[Dict[str, Any]] = None) -> None:
     """Persist one flat row as its S block-cyclic per-shard slices
     (``ShardedFlatSpec.shard_slices``), one npz entry per shard, plus both
-    layout specs.  Written atomically like every checkpoint."""
+    layout specs.  Written atomically like every checkpoint.  ``extra`` is
+    the same free-form JSON rider ``save_flat`` accepts."""
     if len(slices) != sspec.n_shards:
         raise ValueError(f"{len(slices)} slices != n_shards {sspec.n_shards}")
     arrays: Dict[str, np.ndarray] = {
@@ -185,6 +201,8 @@ def save_flat_shards(path: str, slices: Sequence[np.ndarray],
         _FLAT_SSPEC: np.frombuffer(
             json.dumps(sspec.to_json()).encode(), dtype=np.uint8),
     }
+    if extra is not None:
+        arrays[_FLAT_EXTRA] = _extra_entry(extra)
     for i, s in enumerate(slices):
         arr = np.asarray(s)
         if arr.dtype == jnp.bfloat16:
@@ -254,4 +272,6 @@ def flat_row_meta(path: str) -> Dict[str, Any]:
         meta["sharded"] = _FLAT_SSPEC in data.files
         if meta["sharded"]:
             meta["shard_spec"] = json.loads(bytes(data[_FLAT_SSPEC]).decode())
+        if _FLAT_EXTRA in data.files:
+            meta["extra"] = json.loads(bytes(data[_FLAT_EXTRA]).decode())
     return meta

@@ -57,6 +57,7 @@ from __future__ import annotations
 import functools
 import json
 import os
+import re
 import threading
 import time
 import warnings
@@ -74,6 +75,7 @@ from repro.core.validation import (ScreenReport, norms_from_sq,
                                    screen_contributions, screen_norms)
 from repro.kernels import ops
 from repro.launch import sharding as SH
+from repro.utils import faults
 from repro.utils.flat import (BufferPair, FlatSpec, ShardedFlatSpec,
                               StagedBuffer, StagingSide)
 
@@ -82,6 +84,10 @@ from repro.utils.flat import (BufferPair, FlatSpec, ShardedFlatSpec,
 FLAT_OPS = ("average", "damped", "task_arithmetic")
 
 MANIFEST = "staging_manifest.json"
+
+# on-disk artifact naming in the npz root (compact() walks these)
+_BASE_RE = re.compile(r"^base_iter(\d{4,})\.npz$")
+_ROW_RE = re.compile(r"^iter\d{4,}_contrib\d{3,}\.npz$")
 
 
 @dataclass
@@ -243,6 +249,25 @@ class Repository:
     @_pending_weights.setter
     def _pending_weights(self, v: List[Any]) -> None:
         self._buffers.front.weights = list(v)
+
+    # -- public staging introspection (service loop) --------------------
+    @property
+    def n_staged(self) -> int:
+        """Rows staged in the front buffer (not yet part of any fuse)."""
+        return len(self._buffers.front.rows)
+
+    @property
+    def inflight(self) -> bool:
+        """True while a dispatched fuse awaits finalize/publish."""
+        return self._inflight is not None
+
+    def staged_spill_files(self) -> set:
+        """Root-relative file names of every manifest-tracked staged row —
+        front AND in-flight back cohort.  This is exactly the set a crash
+        right now would recover, which is what lets the service loop decide
+        'consumed' by set difference (docs/service_loop.md)."""
+        with self._manifest_lock:
+            return {e["file"] for e in self._buffers.manifest_entries()}
 
     # -- flat staging ---------------------------------------------------
     def _ensure_flat_base(self):
@@ -430,6 +455,61 @@ class Repository:
                 ckpt.save(self._contrib_path(idx), params)
         side.fishers.append(fisher)
         side.weights.append(weight)
+        return idx
+
+    def ingest_spilled(self, path: str, *, weight: Optional[float] = None,
+                       meta: Optional[Dict[str, Any]] = None) -> int:
+        """Queue-ingest entry point (docs/service_loop.md): register an
+        already-on-disk flat row — e.g. a contribution-queue submission —
+        as a staged contribution **without copying it**.  The file itself
+        becomes the spill row: its (root-relative) path is appended to the
+        staging manifest atomically, so from this call on the row enjoys
+        the same exactly-once crash guarantees as a spilled ``upload``
+        (recovered by ``open``, retired only by the publish that consumed
+        it).  The row's recorded FlatSpec is validated against the base;
+        torn or mismatched files raise without touching the manifest.
+
+        Requires ``spill=True`` — without the manifest there is nothing to
+        make the hand-off durable.  ``meta=`` accepts a pre-read
+        ``flat_row_meta`` result (the service's admission peek) so the row
+        header is not parsed twice.  Returns the contribution ticket id."""
+        if not self.spill:
+            raise ValueError("ingest_spilled requires spill=True — the "
+                             "staging manifest is what makes queue ingest "
+                             "crash-safe")
+        self._ensure_flat_base()
+        path = os.path.abspath(path)
+        rel = os.path.relpath(path, os.path.abspath(self.root))
+        if rel.startswith(".."):
+            raise ValueError(f"ingested rows must live under root= "
+                             f"({path} is outside {self.root})")
+        if meta is None:
+            meta = ckpt.flat_row_meta(path)  # raises on torn / non-flat files
+        if meta["dtype"] != self._spec.dtype or int(meta["size"]) != self._spec.size:
+            raise ValueError(
+                f"row {os.path.basename(path)} has FlatSpec(dtype="
+                f"{meta['dtype']}, N={meta['size']}) but the repository base "
+                f"is (dtype={self._spec.dtype}, N={self._spec.size}) — "
+                "refusing to ingest a mismatched row")
+        side = self._buffers.front
+        idx = len(side.rows)
+        entry = {
+            "file": rel.replace(os.sep, "/"),
+            "idx": idx,
+            "staged_at": self._staging_iteration(),
+            "weight": None if weight is None else float(weight),
+            "dtype": self._spec.dtype,
+            "size": self._spec.size,
+            "sharded": bool(meta["sharded"]),
+        }
+        if meta.get("shard_spec"):
+            entry["shard_spec"] = meta["shard_spec"]
+        side.rows.append(path)
+        side.fishers.append(None)
+        side.weights.append(weight)
+        with self._manifest_lock:
+            side.manifest.append(entry)
+            self._write_manifest()
         return idx
 
     def contribute_async(self, params, *, alpha: Optional[float] = None) -> FusionRecord:
@@ -738,11 +818,13 @@ class Repository:
             it, base, meta = self.iteration, self._base, self._render_meta()
             def task():
                 self._persist_base(it, base, meta)
+                faults.crash_point("repo.post_publish_pre_manifest")
                 with self._manifest_lock:
                     self._write_manifest()
             self._spill_futures.append(self._spill_pool.submit(task))
         else:
             self._persist_base()
+            faults.crash_point("repo.post_publish_pre_manifest")
             if self.spill or os.path.exists(self._manifest_path()):
                 # the second arm: a non-spill reopen that fused recovered
                 # rows must still retire them from the manifest, or a later
@@ -833,6 +915,54 @@ class Repository:
 
     def snapshot(self, iteration: int):
         return self._snapshots[iteration]
+
+    def compact(self, *, keep_bases: int = 2) -> Dict[str, int]:
+        """Spill compaction / GC (ROADMAP item): reclaim the npz root.
+
+        Deletes
+
+        * superseded ``base_iterNNNN.npz`` files beyond the newest
+          ``keep_bases`` (the persisted-current base is always kept — it is
+          what ``open`` loads), and
+        * archived contribution rows (``iterNNNN_contribMMM.npz``) not
+          referenced by the staging manifest — fused cohorts' archives and
+          rows orphaned by a pre-publish crash.
+
+        Only *unreferenced* files are ever deleted, and deletion order is
+        irrelevant to recovery, so a crash at ANY point mid-compact leaves
+        ``open`` a fully recoverable repository: the current base, the
+        manifest, and every manifest-referenced row survive by
+        construction.  Queue submissions (``queue/``) belong to the service
+        loop's own GC and are never touched.  Quiesces first (in-flight
+        fuse finalized, spill writes drained).  Returns deletion counts."""
+        if not self.root:
+            raise ValueError("compact requires an on-disk root")
+        if keep_bases < 1:
+            raise ValueError(f"keep_bases must be >= 1, got {keep_bases}")
+        self.flush()
+        with self._manifest_lock:
+            referenced = {os.path.normpath(e["file"])
+                          for e in self._buffers.manifest_entries()}
+        bases: List[tuple] = []
+        rows: List[str] = []
+        for name in os.listdir(self.root):
+            m = _BASE_RE.match(name)
+            if m:
+                bases.append((int(m.group(1)), name))
+            elif _ROW_RE.match(name) and os.path.normpath(name) not in referenced:
+                rows.append(name)
+        keep = {it for it, _ in sorted(bases)[-keep_bases:]}
+        keep.add(self._persisted_iteration)  # open() loads exactly this one
+        n_bases = 0
+        for it, name in bases:
+            if it not in keep:
+                os.remove(os.path.join(self.root, name))
+                n_bases += 1
+        n_rows = 0
+        for name in rows:
+            os.remove(os.path.join(self.root, name))
+            n_rows += 1
+        return {"bases_removed": n_bases, "rows_removed": n_rows}
 
     # -- persistence -----------------------------------------------------
     def _persist_base(self, iteration: Optional[int] = None,

@@ -1,0 +1,118 @@
+"""Launch the queue-driven fusion daemon over an on-disk repository.
+
+The operator-facing entry point for the contributor service loop
+(docs/service_loop.md): opens (or initializes) a spill-enabled Repository
+at ``--root``, wraps it in a ``ColdService``, and polls the contribution
+queue until stopped — by SIGINT/SIGTERM (clean quiesce: in-flight fuse
+finalized, final status published), by ``--max-iterations``, or by
+``--idle-timeout`` seconds of empty queue.
+
+  # serve an existing repository (spill restored from repository.json)
+  PYTHONPATH=src python -m repro.launch.serve_repository --root repo/
+
+  # initialize from a base checkpoint, fuse cohorts of >=2, stop after 3
+  PYTHONPATH=src python -m repro.launch.serve_repository --root repo/ \\
+      --init-npz base.npz --min-cohort 2 --max-iterations 3
+
+``--mesh N`` opens the repository on an N-device mesh (the sharded fuse
+path); the device count must already be available — under CPU testing,
+export ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` first.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import signal
+import sys
+
+from repro.checkpoint import io as ckpt
+from repro.core.repository import Repository
+from repro.serve.cold_service import AdmissionPolicy, ColdService
+
+
+def build_service(args) -> ColdService:
+    mesh = None
+    if args.mesh:
+        import jax
+        if jax.device_count() < args.mesh:
+            raise SystemExit(
+                f"--mesh {args.mesh} needs {args.mesh} devices, have "
+                f"{jax.device_count()} (set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={args.mesh})")
+        mesh = jax.make_mesh((args.mesh,), ("model",))
+    kw = dict(spill=True, spill_workers=args.spill_workers)
+    if mesh is not None:
+        kw["mesh"] = mesh
+    if os.path.exists(os.path.join(args.root, "repository.json")):
+        repo = Repository.open(args.root, **kw)
+    else:
+        if not args.init_npz:
+            raise SystemExit(f"{args.root} holds no repository.json — pass "
+                             "--init-npz to initialize a new repository")
+        base = ckpt.load(args.init_npz)
+        repo = Repository(base, root=args.root, screen=not args.no_screen,
+                          fusion_op=args.fusion_op, **kw)
+    policy = AdmissionPolicy(
+        min_cohort=args.min_cohort,
+        max_cohort=args.max_cohort,
+        max_wait_s=args.max_wait,
+        max_staleness=args.max_staleness,
+        verify_checksums=args.verify_checksums,
+        compact_keep_bases=args.compact_keep,
+    )
+    return ColdService(repo, policy=policy)
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        description="queue-driven ColD Fusion daemon (docs/service_loop.md)")
+    p.add_argument("--root", required=True, help="repository npz root")
+    p.add_argument("--init-npz", default=None,
+                   help="base checkpoint to initialize a NEW repository from")
+    p.add_argument("--fusion-op", default="average")
+    p.add_argument("--no-screen", action="store_true",
+                   help="disable the §9 MAD screen (new repositories only)")
+    p.add_argument("--mesh", type=int, default=0, metavar="N",
+                   help="open on an N-device mesh (sharded fuse)")
+    p.add_argument("--spill-workers", type=int, default=0)
+    p.add_argument("--min-cohort", type=int, default=1)
+    p.add_argument("--max-cohort", type=int, default=64)
+    p.add_argument("--max-wait", type=float, default=0.0,
+                   help="fuse an undersized cohort after this many seconds")
+    p.add_argument("--max-staleness", type=int, default=None,
+                   help="reject submissions finetuned from a base more than "
+                        "this many iterations old")
+    p.add_argument("--verify-checksums", action="store_true")
+    p.add_argument("--compact-keep", type=int, default=None, metavar="M",
+                   help="compact after each publish, keeping M bases")
+    p.add_argument("--poll", type=float, default=0.02, metavar="S",
+                   help="idle poll interval (seconds)")
+    p.add_argument("--max-iterations", type=int, default=None,
+                   help="stop once this base iteration is published")
+    p.add_argument("--idle-timeout", type=float, default=None,
+                   help="stop after this many seconds without progress "
+                        "(no admission, no publish, empty queue)")
+    args = p.parse_args(argv)
+
+    svc = build_service(args)
+
+    def _stop(signum, frame):
+        svc.request_stop()
+
+    signal.signal(signal.SIGTERM, _stop)
+    signal.signal(signal.SIGINT, _stop)
+
+    print(f"[cold-service] serving {args.root} from iteration "
+          f"{svc.repo.iteration} (min_cohort={svc.policy.min_cohort}, "
+          f"mesh={args.mesh or 'none'})", flush=True)
+    st = svc.serve_forever(poll_interval=args.poll,
+                           max_iterations=args.max_iterations,
+                           idle_timeout=args.idle_timeout)
+    print(f"[cold-service] stopped at iteration {st['iteration']}: "
+          f"{st['fuses']} fuses, {st['fused_contributions']} contributions "
+          f"fused, {st['rejected_total']} rejected", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

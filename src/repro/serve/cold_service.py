@@ -1,0 +1,573 @@
+"""The contributor service loop: a queue-driven fusion daemon.
+
+ColD Fusion's core claim (paper Fig. 1, §2.3) is a *synergistic loop*:
+many independent contributors continually recycle finetuned models into a
+shared base, with only limited communication — no gradients, no lockstep.
+This module turns the async double-buffered ``Repository`` into that
+always-on service:
+
+* **ContributorClient** — submits finetuned models as atomically-written
+  flat rows (whole ``[N]`` or per-shard slices) into a durable on-disk
+  **contribution queue** (``<root>/queue/``), and polls the published base
+  iteration through a status file.  Contributors never touch the
+  Repository object; the queue directory is the only shared surface.
+* **ColdService** — a polling daemon that owns the Repository: it batches
+  queue arrivals into cohorts under an **admission policy** (size /
+  timeout / staleness screening at the queue boundary), drives
+  ``fuse_pending(wait=False)`` so device fuses overlap queue drain, and
+  publishes a status endpoint (iteration, queue depth, fuse latency).
+
+Exactly-once fusion across crashes
+----------------------------------
+
+The hand-off rides the PR 3 spill/manifest machinery instead of inventing
+a second durability story.  Admission calls
+``Repository.ingest_spilled(path)``: the queue npz *becomes* the spill row
+(no copy) and is recorded in the crash-recoverable staging manifest.  The
+orderings that make every window safe:
+
+1. a submission exists only once its npz lands via atomic
+   ``os.replace`` — a contributor killed mid-enqueue leaves at most an
+   ignorable ``.tmp-*`` file, and a retry of the same ``(name, seq)``
+   replaces the same file idempotently;
+2. **ingest before admit-mark**: the row enters the staging manifest
+   (durable) before the queue manifest records it as admitted.  A crash
+   between the two is healed on restart: the file is found in
+   ``Repository.staged_spill_files()`` and simply re-marked, never
+   re-ingested;
+3. from staged to published, the Repository's own ``staged_at`` /
+   ``fusing`` markers guarantee a killed daemon re-fuses a dispatched
+   cohort iff its publish did not land (docs/async_repository.md);
+4. **delete file before dropping its queue entry**: a consumed submission
+   (admitted, yet absent from the staging manifest) is GC'd file-first, so
+   a crash mid-GC leaves an orphan *entry* (harmless, dropped next pass)
+   rather than an orphan *file* (which would look like a fresh submission
+   and double-fuse).
+
+Every ``faults.crash_point`` below names one of these windows; the
+kill-at-checkpoint harness in ``tests/_faults.py`` arms them one at a time
+and asserts the restarted daemon converges to the uninterrupted run's
+base.  See docs/service_loop.md for the full crash matrix.
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.checkpoint import io as ckpt
+from repro.core.repository import Repository
+from repro.utils import faults
+from repro.utils.flat import FlatSpec, ShardedFlatSpec, row_checksum
+
+QUEUE_DIR = "queue"
+QUEUE_MANIFEST = "queue_manifest.json"
+STATUS_FILE = "service_status.json"
+
+
+def _queue_dir(root: str) -> str:
+    return os.path.join(root, QUEUE_DIR)
+
+
+# ---------------------------------------------------------------------------
+# contributor side
+# ---------------------------------------------------------------------------
+
+
+class ContributorClient:
+    """A contributor's handle on the service: submit rows, poll the base.
+
+    ``name`` must be unique among concurrently-running contributors — the
+    submission file is ``<name>-<seq>.npz``, and that determinism is what
+    makes retries idempotent (re-submitting the same ``seq`` atomically
+    replaces the same file; it can never enqueue twice).  The default name
+    embeds the pid."""
+
+    def __init__(self, root: str, name: Optional[str] = None):
+        self.root = root
+        self.name = name if name is not None else f"c{os.getpid()}"
+        self._seq = 0
+        self._spec: Optional[FlatSpec] = None
+
+    # -- submit ---------------------------------------------------------
+    def submit(self, params=None, *, row=None, spec: Optional[FlatSpec] = None,
+               sspec: Optional[ShardedFlatSpec] = None,
+               weight: Optional[float] = None,
+               base_iteration: Optional[int] = None,
+               seq: Optional[int] = None,
+               checksum: bool = False) -> str:
+        """Enqueue one contribution; returns the submission id once (and
+        only once) it is durably in the queue.
+
+        Pass a ``params`` pytree (flattened here), or a pre-flattened
+        ``row`` with its ``spec``.  With ``sspec`` the row is written as
+        per-shard block-cyclic slices (``ShardedFlatSpec.shard_slices``) —
+        the layout a mesh repository stages without host reassembly.
+        ``base_iteration`` is the iteration of the base this contribution
+        was finetuned from; the service's admission policy screens
+        staleness on it.  ``seq`` replays a specific submission (retry);
+        by default it auto-increments.
+
+        ``checksum=True`` additionally stamps a CRC of the portable row
+        for end-to-end verification under ``verify_checksums`` admission —
+        covering the shard/unshard rearrangement, not just the file.
+        Torn-file detection needs no checksum: the atomic write hides
+        partial files, and the npz zip entry's own CRC is verified on
+        read."""
+        if row is None:
+            if params is None:
+                raise ValueError("submit needs params= or row=")
+            spec = spec or self._spec or FlatSpec.from_tree(params)
+            row = spec.flatten(params)
+        elif spec is None:
+            raise ValueError("row= requires spec=")
+        self._spec = spec
+        if seq is None:
+            seq = self._seq
+        self._seq = max(self._seq, seq) + 1
+        sub_id = f"{self.name}-{seq:06d}"
+        path = os.path.join(_queue_dir(self.root), sub_id + ".npz")
+        os.makedirs(_queue_dir(self.root), exist_ok=True)
+        host_row = np.asarray(row)
+        extra = {
+            "id": sub_id,
+            "contributor": self.name,
+            "weight": None if weight is None else float(weight),
+            "base_iteration": base_iteration,
+            "submitted_at": time.time(),
+        }
+        if checksum:
+            extra["checksum"] = row_checksum(host_row)
+        # the armed window: nothing durable has happened yet — a death here
+        # (or anywhere inside the atomic write) enqueues nothing, and the
+        # caller never receives the id
+        faults.crash_point("client.mid_submit")
+        if sspec is not None:
+            ckpt.save_flat_shards(path, sspec.shard_slices(host_row), spec,
+                                  sspec, extra=extra)
+        else:
+            ckpt.save_flat(path, host_row, spec, extra=extra)
+        return sub_id
+
+    # -- poll -----------------------------------------------------------
+    def status(self) -> Optional[Dict[str, Any]]:
+        """The service's last published status, or None before the first
+        cycle.  Never torn: the file is written atomically."""
+        try:
+            return ckpt.load_json(os.path.join(self.root, STATUS_FILE))
+        except FileNotFoundError:
+            return None
+
+    def iteration(self) -> int:
+        """The latest published base iteration (0 before any fuse)."""
+        st = self.status()
+        if st is not None:
+            return int(st["iteration"])
+        try:
+            meta = ckpt.load_json(os.path.join(self.root, "repository.json"))
+            return int(meta["iteration"])
+        except FileNotFoundError:
+            return 0
+
+    def wait_for_iteration(self, target: int, *, timeout: float = 60.0,
+                           interval: float = 0.02) -> Dict[str, Any]:
+        """Bounded poll until the published iteration reaches ``target``.
+        Returns the status observed; raises TimeoutError at the deadline
+        (never an unbounded sleep)."""
+        deadline = time.monotonic() + timeout
+        while True:
+            st = self.status()
+            if st is not None and int(st["iteration"]) >= target:
+                return st
+            if time.monotonic() >= deadline:
+                raise TimeoutError(
+                    f"iteration {target} not published within {timeout}s "
+                    f"(last status: {st})")
+            time.sleep(interval)
+
+    def download_base(self):
+        """Pull the latest published base pytree (Fig. 1, step 1).  The
+        base npz is durable before repository.json names it, so the load
+        can never race a publish into a missing file."""
+        meta = ckpt.load_json(os.path.join(self.root, "repository.json"))
+        it = int(meta["iteration"])
+        return ckpt.load(os.path.join(self.root, f"base_iter{it:04d}.npz"))
+
+
+# ---------------------------------------------------------------------------
+# service side
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class AdmissionPolicy:
+    """Cohort formation + screening at the queue boundary (the "Collaborative
+    and Efficient Fine-tuning" framing: cheap per-row admission decisions
+    here, the §9 statistical screen inside the fuse).
+
+    * ``min_cohort`` — dispatch a fuse only once this many rows are staged
+      (1 = fuse every arrival immediately);
+    * ``max_wait_s`` — ...unless the oldest staged row has waited this long
+      (0 = size-only batching);
+    * ``max_cohort`` — admission stops staging past this many rows per
+      cohort; the excess stays queued for the next round;
+    * ``max_staleness`` — reject a submission whose recorded
+      ``base_iteration`` lags the current base by more than this many
+      iterations (None = accept any vintage);
+    * ``verify_checksums`` — re-read each row at admission and verify the
+      contributor's CRC (costs a full row read; off by default);
+    * ``compact_keep_bases`` — run ``Repository.compact`` after each
+      publish, keeping this many bases (None = never compact).
+    """
+
+    min_cohort: int = 1
+    max_wait_s: float = 0.0
+    max_cohort: int = 64
+    max_staleness: Optional[int] = None
+    verify_checksums: bool = False
+    compact_keep_bases: Optional[int] = None
+
+
+class ColdService:
+    """The polling fusion daemon: wraps a spill-enabled Repository behind
+    the durable contribution queue.  Single-owner: exactly one service per
+    repository root (contributors scale horizontally instead)."""
+
+    def __init__(self, repo: Repository, *,
+                 policy: Optional[AdmissionPolicy] = None):
+        if not repo.root:
+            raise ValueError("ColdService requires an on-disk repository")
+        if not repo.spill:
+            raise ValueError(
+                "ColdService requires Repository(spill=True) — queue ingest "
+                "rides the crash-recoverable staging manifest")
+        self.repo = repo
+        self.policy = policy or AdmissionPolicy()
+        self.queue_dir = _queue_dir(repo.root)
+        os.makedirs(self.queue_dir, exist_ok=True)
+        self._qman_path = os.path.join(self.queue_dir, QUEUE_MANIFEST)
+        self._status_path = os.path.join(repo.root, STATUS_FILE)
+        self._entries: Dict[str, Dict[str, Any]] = {}
+        self._rejects: List[Dict[str, str]] = []
+        self._fused_ids = 0          # queue submissions retired as fused
+        self._rejected = 0
+        self._cohort_since: Optional[float] = None
+        self._failed_cohort_size: Optional[int] = None
+        self._last_error: Optional[str] = None
+        self._stop = False
+        self._load_queue_manifest()
+        self._recover()
+        if self.repo.n_staged:
+            # rows recovered from the staging manifest start the cohort
+            # clock too — max_wait_s must cover an undersized recovered
+            # cohort, not just fresh arrivals
+            self._cohort_since = time.time()
+
+    # -- queue manifest -------------------------------------------------
+    def _load_queue_manifest(self) -> None:
+        try:
+            data = ckpt.load_json(self._qman_path)
+        except FileNotFoundError:
+            return
+        self._entries = {e["id"]: e for e in data.get("entries", [])}
+        self._fused_ids = int(data.get("fused_total", 0))
+        self._rejected = int(data.get("rejected_total", 0))
+
+    def _write_queue_manifest(self) -> None:
+        ckpt.save_json_atomic(self._qman_path, {
+            "version": 1,
+            "fused_total": self._fused_ids,
+            "rejected_total": self._rejected,
+            "entries": list(self._entries.values()),
+        })
+
+    def _recover(self) -> None:
+        """Reconcile the queue manifest against the reopened repository.
+        An *admitted* entry was, by the ingest-before-admit-mark ordering,
+        in the staging manifest when it was marked — so if it is absent
+        now, its cohort's publish landed (or recovery skipped it as
+        consumed): GC it.  Entries still staged will fuse normally."""
+        staged = self.repo.staged_spill_files()
+        changed = False
+        for sub_id, e in list(self._entries.items()):
+            if f"{QUEUE_DIR}/{e['file']}" in staged:
+                continue
+            path = os.path.join(self.queue_dir, e["file"])
+            if os.path.exists(path):
+                os.remove(path)          # file first; see ordering (4)
+            del self._entries[sub_id]
+            self._fused_ids += 1
+            changed = True
+        if changed:
+            self._write_queue_manifest()
+
+    # -- admission ------------------------------------------------------
+    def _scan_new(self) -> List[str]:
+        """Queue files not yet tracked, oldest submission order.  In-flight
+        atomic writes (``*.tmp-*``) are invisible by construction."""
+        known = {e["file"] for e in self._entries.values()}
+        out = [fn for fn in os.listdir(self.queue_dir)
+               if fn.endswith(".npz") and ".tmp-" not in fn and fn not in known]
+        return sorted(out)
+
+    def _reject(self, fn: str, reason: str) -> None:
+        self._rejected += 1
+        self._rejects = (self._rejects + [{"file": fn, "reason": reason}])[-8:]
+        path = os.path.join(self.queue_dir, fn)
+        if os.path.exists(path):
+            os.remove(path)
+
+    def _checksum_ok(self, path: str, meta: Dict[str, Any], want: str) -> bool:
+        if meta["sharded"]:
+            with ckpt.FlatShardReader(path) as r:
+                row = r.full_row()
+        else:
+            row, _ = ckpt.load_flat(path, as_jax=False)
+        return row_checksum(row) == want
+
+    def _admit(self) -> Dict[str, int]:
+        """Stage new queue arrivals into the repository, up to the cohort
+        budget.  Unreadable / mismatched / stale rows are rejected here at
+        the queue boundary — they never reach the fuse.  Returns
+        ``{"admitted": n, "queue_depth": files left unadmitted}``.
+
+        Already-staged files (ingested by a pre-crash admit whose
+        queue-manifest write was lost) are re-marked UNCONDITIONALLY —
+        outside the budget, before anything else.  A budget-starved
+        re-mark would let the file fuse and leave the staging manifest
+        while still looking brand-new to a later scan, which would
+        re-ingest (double-fuse) it."""
+        new = self._scan_new()
+        if not new:
+            return {"admitted": 0, "queue_depth": 0}
+        budget = self.policy.max_cohort - self.repo.n_staged
+        staged = self.repo.staged_spill_files()
+        admitted = leftover = 0
+        for fn in new:
+            path = os.path.join(self.queue_dir, fn)
+            sub_id = fn[:-len(".npz")]
+            if f"{QUEUE_DIR}/{fn}" in staged:
+                extra = {}  # re-mark only; bookkeeping fields best-effort
+            else:
+                if budget <= 0:
+                    leftover += 1
+                    continue
+                try:
+                    meta = ckpt.flat_row_meta(path)
+                except Exception as err:  # torn/garbage enqueue: quarantine
+                    self._reject(fn, f"unreadable ({type(err).__name__}: {err})")
+                    continue
+                extra = meta.get("extra") or {}
+                sub_id = extra.get("id", sub_id)
+                stale = self._staleness(extra)
+                if stale is not None:
+                    self._reject(fn, stale)
+                    continue
+                if (self.policy.verify_checksums and extra.get("checksum")
+                        and not self._checksum_ok(path, meta, extra["checksum"])):
+                    self._reject(fn, "checksum mismatch")
+                    continue
+                try:
+                    self.repo.ingest_spilled(path, weight=extra.get("weight"),
+                                             meta=meta)
+                except ValueError as err:  # FlatSpec mismatch etc.
+                    self._reject(fn, str(err))
+                    continue
+                budget -= 1
+                # the row is durably staged; the admit-mark below is the
+                # recoverable half of the hand-off (ordering (2))
+                faults.crash_point("service.post_ingest")
+            self._entries[sub_id] = {
+                "id": sub_id, "file": fn, "state": "admitted",
+                "weight": extra.get("weight"),
+                "contributor": extra.get("contributor"),
+                "admitted_at": time.time(),
+                "staged_iteration": self.repo.iteration,
+            }
+            admitted += 1
+        if admitted:
+            self._write_queue_manifest()
+            self._failed_cohort_size = None  # new blood: retry a stuck cohort
+            if self._cohort_since is None:
+                self._cohort_since = time.time()
+        return {"admitted": admitted, "queue_depth": leftover}
+
+    def _staleness(self, extra: Dict[str, Any]) -> Optional[str]:
+        lim = self.policy.max_staleness
+        base_it = extra.get("base_iteration")
+        if lim is None or base_it is None:
+            return None
+        lag = self.repo.iteration - int(base_it)
+        if lag > lim:
+            return (f"stale: finetuned from iteration {base_it}, "
+                    f"current {self.repo.iteration} (max_staleness={lim})")
+        return None
+
+    # -- fuse policy ----------------------------------------------------
+    def _should_fuse(self) -> bool:
+        n = self.repo.n_staged
+        if n == 0:
+            return False
+        if self._failed_cohort_size == n:
+            return False  # same cohort just failed; wait for arrivals
+        if n >= self.policy.min_cohort:
+            return True
+        return (self.policy.max_wait_s > 0
+                and self._cohort_since is not None
+                and time.time() - self._cohort_since >= self.policy.max_wait_s)
+
+    def _gc_consumed(self) -> None:
+        """Drop queue entries whose rows left the staging manifest — i.e.
+        whose cohort's publish is durable.  File deleted before the entry
+        (ordering (4))."""
+        staged = self.repo.staged_spill_files()
+        changed = False
+        for sub_id, e in list(self._entries.items()):
+            if f"{QUEUE_DIR}/{e['file']}" in staged:
+                continue
+            path = os.path.join(self.queue_dir, e["file"])
+            if os.path.exists(path):
+                os.remove(path)
+            faults.crash_point("service.mid_gc")
+            del self._entries[sub_id]
+            self._fused_ids += 1
+            changed = True
+        if changed:
+            self._write_queue_manifest()
+
+    def _note_error(self, err: Exception) -> None:
+        self._last_error = f"{type(err).__name__}: {err}"
+        self._failed_cohort_size = self.repo.n_staged
+
+    # -- the poll cycle -------------------------------------------------
+    def run_once(self) -> Dict[str, Any]:
+        """One cycle of the service loop: admit arrivals, dispatch (or
+        finalize) per the cohort policy, GC consumed submissions, publish
+        status.  Returns the status dict it published."""
+        adm = self._admit()
+        it_before = self.repo.iteration
+        if self._should_fuse():
+            try:
+                # finalizes any in-flight fuse, then dispatches the staged
+                # cohort with wait=False: the device crunches while the
+                # next cycles keep draining the queue
+                self.repo.fuse_pending(wait=False)
+                self._cohort_since = None
+                self._last_error = None
+                faults.crash_point("service.post_dispatch")
+            except RuntimeError as err:  # e.g. all contributions rejected
+                self._note_error(err)
+        elif self.repo.inflight:
+            # queue drained: publish the in-flight fuse instead of sitting
+            # on it until the next arrival
+            try:
+                self.repo.flush()
+                self._last_error = None
+            except RuntimeError as err:
+                self._note_error(err)
+        if self.repo.iteration != it_before:
+            faults.crash_point("service.post_publish")
+            self._gc_consumed()
+            if (self.policy.compact_keep_bases is not None
+                    and not self.repo.inflight):
+                # compact only while quiescent: its flush() would otherwise
+                # synchronously finalize the fuse dispatched above and kill
+                # the wait=False overlap.  Deferred compaction runs on the
+                # drain cycle that publishes without redispatching.
+                self.repo.compact(keep_bases=self.policy.compact_keep_bases)
+        st = self.status(admitted=adm["admitted"],
+                         queue_depth=adm["queue_depth"])
+        ckpt.save_json_atomic(self._status_path, st)
+        return st
+
+    def serve_forever(self, *, poll_interval: float = 0.02,
+                      max_iterations: Optional[int] = None,
+                      idle_timeout: Optional[float] = None) -> Dict[str, Any]:
+        """Run poll cycles until stopped: by ``request_stop()`` (signal
+        handlers), by the published iteration reaching ``max_iterations``
+        (once quiescent), or by ``idle_timeout`` seconds without progress
+        — no admission and no publish, queue empty.  An undersized cohort
+        held below ``min_cohort`` counts as idle time (its rows are
+        durable in the staging manifest and survive the exit).  Returns
+        the final status."""
+        last_progress = time.monotonic()
+        last_it = self.repo.iteration
+        while not self._stop:
+            st = self.run_once()
+            progress = st["admitted_this_cycle"] or st["iteration"] != last_it
+            last_it = st["iteration"]
+            if progress:
+                last_progress = time.monotonic()
+            idle = (st["queue_depth"] == 0 and st["staged"] == 0
+                    and not st["inflight"])
+            if (max_iterations is not None and idle
+                    and self.repo.iteration >= max_iterations):
+                break
+            if (idle_timeout is not None and st["queue_depth"] == 0
+                    and not st["inflight"]
+                    and time.monotonic() - last_progress >= idle_timeout):
+                break
+            if not progress:
+                # nothing moved this cycle (empty queue, undersized or
+                # screen-stuck cohort): sleep instead of busy-spinning the
+                # scan/status write. An in-flight fuse finalizes next cycle.
+                time.sleep(poll_interval)
+        return self.close()
+
+    def request_stop(self) -> None:
+        self._stop = True
+
+    def close(self) -> Dict[str, Any]:
+        """Quiesce: finalize any in-flight fuse, GC, publish a final
+        status with ``running=False``.  Staged-but-unfused rows stay in
+        the (durable) manifest for the next service instance."""
+        self._stop = True
+        try:
+            self.repo.flush()
+        except RuntimeError as err:
+            self._note_error(err)
+        self._gc_consumed()
+        st = self.status()
+        st["running"] = False
+        ckpt.save_json_atomic(self._status_path, st)
+        return st
+
+    # -- status endpoint ------------------------------------------------
+    def status(self, *, admitted: int = 0,
+               queue_depth: Optional[int] = None) -> Dict[str, Any]:
+        """The fields contributors (and operators) poll; persisted
+        atomically to ``<root>/service_status.json`` every cycle.  See
+        docs/service_loop.md for the field reference.  ``queue_depth=``
+        reuses the admit pass's scan (one directory listing per cycle, not
+        two); standalone calls re-scan."""
+        hist = self.repo.history
+        last = hist[-1] if hist else None
+        return {
+            "iteration": self.repo.iteration,
+            "queue_depth": (len(self._scan_new()) if queue_depth is None
+                            else queue_depth),
+            "staged": self.repo.n_staged,
+            "inflight": self.repo.inflight,
+            "admitted": len(self._entries),
+            "admitted_this_cycle": admitted,
+            "fuses": len(hist),
+            "fused_contributions": sum(r.n_contributions for r in hist),
+            "fused_queue_submissions": self._fused_ids,
+            "rejected_total": self._rejected,
+            "recent_rejects": list(self._rejects),
+            "fuse_latency_s": last.wall_time if last else None,
+            "last_fuse": None if last is None else {
+                "iteration": last.iteration,
+                "n_contributions": last.n_contributions,
+                "n_accepted": last.n_accepted,
+                "op": last.op,
+                "wall_time": last.wall_time,
+            },
+            "last_error": self._last_error,
+            "pid": os.getpid(),
+            "running": not self._stop,
+            "updated_at": time.time(),
+        }

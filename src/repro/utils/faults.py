@@ -1,0 +1,32 @@
+"""Fault-injection points for the kill-at-checkpoint tests.
+
+A *crash point* is a named seam in a durability-critical sequence (queue
+admit, fuse dispatch, base publish, manifest rewrite).  In production the
+hooks are inert one-comparison no-ops; a test arms exactly one point by
+exporting ``REPRO_CRASH_POINT=<name>`` in a child process, and the child
+dies there with ``os._exit`` — no cleanup, no atexit, no flushing — which
+is as close to ``kill -9`` as a same-process hook can get.
+
+The armed name is read once at import: children receive the env var before
+the interpreter starts, and a hot-path hook must not pay a getenv per call.
+
+``tests/_faults.py`` holds the subprocess harness that drives these.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+ENV = "REPRO_CRASH_POINT"
+EXIT_CODE = 17  # distinguishes an armed crash from ordinary failures
+
+_ARMED = os.environ.get(ENV)
+
+
+def crash_point(name: str) -> None:
+    """Die abruptly iff this point is the armed one (no-op otherwise)."""
+    if _ARMED is not None and _ARMED == name:
+        # stderr is unbuffered-ish and survives os._exit better than stdout;
+        # the marker lets the harness assert the crash fired WHERE expected
+        print(f"CRASH_POINT {name}", file=sys.stderr, flush=True)
+        os._exit(EXIT_CODE)

@@ -33,6 +33,7 @@ on device.
 from __future__ import annotations
 
 import functools
+import zlib
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -196,6 +197,23 @@ def flatten_tree(tree) -> Tuple[jax.Array, FlatSpec]:
     """Convenience: build the spec and flatten in one call."""
     spec = FlatSpec.from_tree(tree)
     return spec.flatten(tree), spec
+
+
+def row_checksum(buf) -> str:
+    """CRC32 (hex) over a flat row's raw bytes.
+
+    The contribution queue stamps this into each submission so the service
+    can verify, end to end, that the row that fuses is bit-identical to
+    the row the contributor wrote — across the atomic npz round trip and,
+    for per-shard submissions, across the shard/unshard rearrangement
+    (checksummed in portable ``[N]`` form on both sides).  bf16 rows are
+    viewed as their uint16 bit pattern, matching the npz storage."""
+    arr = np.asarray(buf)
+    if arr.dtype == jnp.bfloat16:
+        arr = arr.view(np.uint16)
+    # crc32 consumes the buffer protocol directly — no tobytes copy of a
+    # multi-MB row on the submit path
+    return f"{zlib.crc32(np.ascontiguousarray(arr)) & 0xFFFFFFFF:08x}"
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,72 @@
+"""Reusable fault-injection helpers for kill-at-checkpoint tests.
+
+Generalizes the PR 3 kill-and-reopen pattern (tests/test_repository.py):
+a child process runs a scenario script, armed to die with ``os._exit`` at
+one named crash point (``repro.utils.faults.crash_point`` seams inside
+the service/repository), and the test asserts the restarted process
+converges to the uninterrupted run's state.
+
+Also home of ``wait_until`` — the bounded polling helper the service
+tests use instead of bare ``time.sleep`` (flake-hardening: every wait has
+a deadline and a description, and polls a predicate rather than guessing
+a duration).
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+from typing import Callable, Optional, Sequence
+
+from repro.utils import faults
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_child(script: str, args: Sequence[str] = (), *,
+              crash_at: Optional[str] = None,
+              env: Optional[dict] = None,
+              timeout: float = 600.0) -> subprocess.CompletedProcess:
+    """Run ``script`` (a ``python -c`` text, expected to put src/ on its
+    own path) as a child process from the repo root.
+
+    With ``crash_at`` the child is armed to die at that crash point; the
+    call asserts it actually did (exit code ``faults.EXIT_CODE`` and the
+    ``CRASH_POINT <name>`` marker on stderr) — a scenario that never
+    reaches its armed point fails loudly instead of silently passing.
+    Without ``crash_at`` the child must exit 0."""
+    child_env = dict(os.environ)
+    child_env.pop("XLA_FLAGS", None)
+    child_env.pop(faults.ENV, None)
+    child_env.update(env or {})
+    if crash_at is not None:
+        child_env[faults.ENV] = crash_at
+    res = subprocess.run(
+        [sys.executable, "-c", script, *args],
+        capture_output=True, text=True, env=child_env, timeout=timeout,
+        cwd=REPO_ROOT,
+    )
+    detail = f"rc={res.returncode}\n--- stdout ---\n{res.stdout}\n--- stderr ---\n{res.stderr}"
+    if crash_at is not None:
+        assert res.returncode == faults.EXIT_CODE, (
+            f"child did not die at crash point {crash_at!r}: {detail}")
+        assert f"CRASH_POINT {crash_at}" in res.stderr, (
+            f"crash marker missing for {crash_at!r}: {detail}")
+    else:
+        assert res.returncode == 0, f"child failed: {detail}"
+    return res
+
+
+def wait_until(pred: Callable[[], object], *, timeout: float = 30.0,
+               interval: float = 0.01, desc: str = "condition"):
+    """Poll ``pred`` until truthy; return its value.  Raises TimeoutError
+    with ``desc`` at the deadline — never an unbounded (or blind) sleep."""
+    deadline = time.monotonic() + timeout
+    while True:
+        val = pred()
+        if val:
+            return val
+        if time.monotonic() >= deadline:
+            raise TimeoutError(f"timed out after {timeout}s waiting for {desc}")
+        time.sleep(interval)

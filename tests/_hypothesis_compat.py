@@ -65,6 +65,23 @@ except ImportError:
                 v = min(max(v, self.lo), self.hi)
             return v
 
+    class _Booleans(_Strategy):
+        def example(self, rng, index):
+            if index in (0, 1):
+                return bool(index)
+            return bool(rng.integers(0, 2))
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, elements):
+            self.elements = list(elements)
+            if not self.elements:
+                raise ValueError("sampled_from needs a non-empty sequence")
+
+        def example(self, rng, index):
+            if index < 2:  # corners: first and last element
+                return self.elements[-index]
+            return self.elements[int(rng.integers(0, len(self.elements)))]
+
     class _Lists(_Strategy):
         def __init__(self, elements, min_size=0, max_size=None):
             self.elements = elements
@@ -104,6 +121,14 @@ except ImportError:
         @staticmethod
         def floats(min_value=None, max_value=None, **kw):
             return _Floats(min_value, max_value, **kw)
+
+        @staticmethod
+        def booleans():
+            return _Booleans()
+
+        @staticmethod
+        def sampled_from(elements):
+            return _SampledFrom(elements)
 
         @staticmethod
         def lists(elements, min_size=0, max_size=None, **_kw):

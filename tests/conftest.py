@@ -2,6 +2,7 @@
 real CPU device; distributed tests spawn subprocesses that set the fake
 device count themselves."""
 import dataclasses
+import random
 
 import jax
 import numpy as np
@@ -16,6 +17,17 @@ def pytest_configure(config):
         "markers",
         "slow: multi-second subprocess tests (forced fake-device jax init); "
         "deselect with -m 'not slow' when they already ran in the same CI pass")
+
+
+@pytest.fixture(autouse=True)
+def _seed_global_rngs():
+    """Flake hardening (PR 4 audit): every jax draw in the suite threads an
+    explicit PRNGKey and numpy goes through the seeded ``rng`` fixture, but
+    the *global* numpy/python RNGs (reachable from library internals and
+    future tests) were unpinned.  Seed them per test so any draw is
+    identical run-to-run and failures reproduce."""
+    random.seed(0)
+    np.random.seed(0)
 
 
 @pytest.fixture(scope="session")

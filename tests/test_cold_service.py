@@ -1,0 +1,602 @@
+"""Contributor service loop: queue submit/admission/fuse behaviour, spill
+compaction, property tests over submit/poll/fuse interleavings, and the
+kill-at-checkpoint fault-injection suite (exactly-once fusion across every
+parametrized crash window — see docs/service_loop.md's crash matrix)."""
+import os
+import shutil
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _faults import run_child, wait_until
+from _hypothesis_compat import given, settings, st
+from repro.checkpoint import io as ckpt
+from repro.core.repository import Repository
+from repro.serve.cold_service import (QUEUE_DIR, QUEUE_MANIFEST, STATUS_FILE,
+                                      AdmissionPolicy, ColdService,
+                                      ContributorClient)
+from repro.utils.flat import FlatSpec, ShardedFlatSpec, row_checksum
+
+
+def _m(v, n=64):
+    return {"w": jnp.full((n,), float(v)), "b": jnp.full((5,), float(v))}
+
+
+def _make(root, **kw):
+    kw.setdefault("screen", False)
+    repo = Repository(_m(0), root=root, spill=True, **kw)
+    return repo
+
+
+def _drain(svc, max_cycles=100):
+    """Run service cycles until quiescent (bounded — never an open loop)."""
+    for _ in range(max_cycles):
+        st = svc.run_once()
+        if (st["queue_depth"] == 0 and st["staged"] == 0
+                and not st["inflight"]):
+            return st
+    raise AssertionError(f"service did not drain in {max_cycles} cycles: {st}")
+
+
+# ---------------------------------------------------------------------------
+# queue submit -> admit -> fuse -> GC
+# ---------------------------------------------------------------------------
+
+
+def test_submit_admit_fuse_roundtrip(tmp_path):
+    """Queue-driven ingest publishes the same base as direct upload, and a
+    consumed submission leaves neither a queue file nor a manifest entry."""
+    root = str(tmp_path / "repo")
+    svc = ColdService(_make(root), policy=AdmissionPolicy(min_cohort=3))
+    client = ContributorClient(root, name="c0")
+    for v, w in ((1.0, 2.0), (3.0, 1.0), (5.0, 1.0)):
+        client.submit(_m(v), weight=w)
+    st = _drain(svc)
+    assert st["iteration"] == 1 and st["fused_contributions"] == 3
+    # weighted mean (2·1 + 3 + 5) / 4
+    np.testing.assert_allclose(np.asarray(svc.repo.download()["w"]), 2.5)
+    direct = Repository(_m(0), screen=False)
+    for v, w in ((1.0, 2.0), (3.0, 1.0), (5.0, 1.0)):
+        direct.upload(_m(v), weight=w)
+    direct.fuse_pending()
+    np.testing.assert_allclose(np.asarray(svc.repo.download()["w"]),
+                               np.asarray(direct.download()["w"]))
+    qdir = os.path.join(root, QUEUE_DIR)
+    assert [f for f in os.listdir(qdir) if f.endswith(".npz")] == []
+    assert ckpt.load_json(os.path.join(qdir, QUEUE_MANIFEST))["entries"] == []
+
+
+def test_min_cohort_batches_arrivals(tmp_path):
+    root = str(tmp_path / "repo")
+    svc = ColdService(_make(root), policy=AdmissionPolicy(min_cohort=3))
+    client = ContributorClient(root, name="c0")
+    client.submit(_m(1.0))
+    client.submit(_m(2.0))
+    st = svc.run_once()
+    assert st["iteration"] == 0 and st["staged"] == 2  # undersized: held
+    client.submit(_m(3.0))
+    st = _drain(svc)
+    assert st["iteration"] == 1
+    assert svc.repo.history[0].n_contributions == 3  # one cohort, not three
+
+
+def test_max_wait_fuses_undersized_cohort(tmp_path):
+    root = str(tmp_path / "repo")
+    svc = ColdService(_make(root),
+                      policy=AdmissionPolicy(min_cohort=5, max_wait_s=0.05))
+    ContributorClient(root, name="c0").submit(_m(4.0))
+    svc.run_once()
+    assert svc.repo.iteration == 0  # not yet: below min_cohort, too young
+    wait_until(lambda: svc.run_once()["iteration"] >= 1,
+               timeout=10.0, desc="timeout-triggered fuse")
+    np.testing.assert_allclose(np.asarray(svc.repo.download()["w"]), 4.0)
+
+
+def test_dispatch_overlaps_queue_drain(tmp_path):
+    """wait=False dispatch: while a cohort fuses on device, the next
+    arrivals are admitted into the fresh front buffer."""
+    root = str(tmp_path / "repo")
+    svc = ColdService(_make(root), policy=AdmissionPolicy(min_cohort=2))
+    client = ContributorClient(root, name="c0")
+    client.submit(_m(1.0))
+    client.submit(_m(3.0))
+    st = svc.run_once()
+    assert st["inflight"]  # dispatched, not yet published
+    client.submit(_m(10.0))
+    client.submit(_m(20.0))
+    st = svc.run_once()  # finalizes cohort 1, dispatches cohort 2
+    assert st["iteration"] >= 1
+    st = _drain(svc)
+    assert st["iteration"] == 2
+    assert [r.n_contributions for r in svc.repo.history] == [2, 2]
+    np.testing.assert_allclose(np.asarray(svc.repo.download()["w"]), 15.0)
+
+
+def test_idempotent_retry_same_seq(tmp_path):
+    """A contributor retrying a submission (same name+seq) atomically
+    replaces the same queue file — it can never fuse twice."""
+    root = str(tmp_path / "repo")
+    svc = ColdService(_make(root), policy=AdmissionPolicy(min_cohort=2))
+    client = ContributorClient(root, name="c0")
+    a = client.submit(_m(2.0), seq=0)
+    b = client.submit(_m(2.0), seq=0)  # retry
+    assert a == b
+    client.submit(_m(6.0))
+    st = _drain(svc)
+    assert st["iteration"] == 1 and st["fused_contributions"] == 2
+    np.testing.assert_allclose(np.asarray(svc.repo.download()["w"]), 4.0)
+
+
+def test_garbage_and_inflight_tmp_files_ignored(tmp_path):
+    """A torn enqueue can only exist as a .tmp-* file (invisible) or as
+    garbage bytes under the final name (quarantined at admission) —
+    neither reaches the fuse, and the daemon survives both."""
+    root = str(tmp_path / "repo")
+    svc = ColdService(_make(root), policy=AdmissionPolicy(min_cohort=1))
+    qdir = os.path.join(root, QUEUE_DIR)
+    with open(os.path.join(qdir, "torn-000000.npz"), "wb") as f:
+        f.write(b"PK\x03\x04 truncated garbage")
+    with open(os.path.join(qdir, "c9-000001.npz.tmp-123"), "wb") as f:
+        f.write(b"half an npz")
+    ContributorClient(root, name="c0").submit(_m(7.0))
+    st = _drain(svc)
+    assert st["iteration"] == 1 and st["fused_contributions"] == 1
+    assert st["rejected_total"] == 1
+    assert "unreadable" in st["recent_rejects"][0]["reason"]
+    np.testing.assert_allclose(np.asarray(svc.repo.download()["w"]), 7.0)
+
+
+def test_remark_of_staged_row_is_not_budget_starved(tmp_path):
+    """Regression (review): a row ingested pre-crash but never marked in
+    the queue manifest must be re-marked even when max_cohort leaves no
+    admission budget — a starved re-mark would let it fuse unmarked and
+    later be re-ingested (double-fused)."""
+    root = str(tmp_path / "repo")
+    repo = _make(root)
+    client = ContributorClient(root, name="c0")
+    client.submit(_m(9.0))  # z: will be staged but never queue-marked
+    z_path = os.path.join(root, QUEUE_DIR, "c0-000000.npz")
+    repo.ingest_spilled(z_path)  # simulates crash at service.post_ingest
+    svc = ColdService(repo, policy=AdmissionPolicy(min_cohort=1, max_cohort=1))
+    client.submit(_m(1.0))
+    client.submit(_m(2.0))
+    st = _drain(svc)
+    fused = sum(r.n_contributions for r in svc.repo.history)
+    assert fused == 3, f"z double-fused or dropped: {svc.repo.history}"
+    assert st["iteration"] == 3  # max_cohort=1: three single-row cohorts
+    qdir = os.path.join(root, QUEUE_DIR)
+    assert [f for f in os.listdir(qdir) if f.endswith(".npz")] == []
+
+
+def test_max_wait_covers_recovered_rows(tmp_path):
+    """Regression (review): rows recovered from the staging manifest at
+    service start must start the cohort clock — an undersized recovered
+    cohort fuses by max_wait_s without needing a fresh arrival."""
+    root = str(tmp_path / "repo")
+    _make(root).upload(_m(3.0))  # staged + spilled, then "crash"
+    reopened = Repository.open(root, spill=True, screen=False)
+    assert reopened.n_staged == 1
+    svc = ColdService(reopened,
+                      policy=AdmissionPolicy(min_cohort=5, max_wait_s=0.05))
+    wait_until(lambda: svc.run_once()["iteration"] >= 1,
+               timeout=10.0, desc="recovered-cohort timeout fuse")
+    np.testing.assert_allclose(np.asarray(svc.repo.download()["w"]), 3.0)
+
+
+def test_serve_forever_exits_on_stalled_undersized_cohort(tmp_path):
+    """Regression (review): idle_timeout means 'no progress', so a daemon
+    holding an undersized cohort below min_cohort exits (rows stay durable
+    in the manifest) instead of busy-spinning forever."""
+    import threading
+    root = str(tmp_path / "repo")
+    svc = ColdService(_make(root), policy=AdmissionPolicy(min_cohort=4))
+    client = ContributorClient(root, name="c0")
+    client.submit(_m(1.0))
+    client.submit(_m(2.0))
+    out = {}
+    t = threading.Thread(target=lambda: out.update(
+        svc.serve_forever(poll_interval=0.01, idle_timeout=0.3)))
+    t.start()
+    t.join(timeout=30.0)
+    assert not t.is_alive(), "serve_forever hung on a stalled cohort"
+    assert out["iteration"] == 0 and out["staged"] == 2
+    # the stalled rows survive for the next service instance
+    again = Repository.open(root, spill=True)
+    assert again.n_staged == 2
+
+
+def test_admission_rejects_stale_submission(tmp_path):
+    root = str(tmp_path / "repo")
+    svc = ColdService(_make(root),
+                      policy=AdmissionPolicy(min_cohort=1, max_staleness=1))
+    client = ContributorClient(root, name="c0")
+    client.submit(_m(1.0), base_iteration=0)
+    _drain(svc)
+    client.submit(_m(2.0), base_iteration=1)
+    _drain(svc)
+    assert svc.repo.iteration == 2
+    client.submit(_m(9.0), base_iteration=0)  # finetuned from a stale base
+    st = _drain(svc)
+    assert st["iteration"] == 2  # never fused
+    assert st["rejected_total"] == 1
+    assert "stale" in st["recent_rejects"][0]["reason"]
+
+
+def test_admission_rejects_mismatched_spec(tmp_path):
+    """A row from a different architecture is refused at the queue
+    boundary; the daemon keeps serving."""
+    root = str(tmp_path / "repo")
+    svc = ColdService(_make(root), policy=AdmissionPolicy(min_cohort=1))
+    wrong = {"other": jnp.zeros((13,))}
+    ContributorClient(root, name="bad").submit(wrong)
+    ContributorClient(root, name="good").submit(_m(3.0))
+    st = _drain(svc)
+    assert st["iteration"] == 1 and st["rejected_total"] == 1
+    np.testing.assert_allclose(np.asarray(svc.repo.download()["w"]), 3.0)
+
+
+def test_checksum_verification(tmp_path):
+    """verify_checksums re-reads the row at admission and rejects a file
+    whose content no longer matches the contributor's CRC."""
+    root = str(tmp_path / "repo")
+    svc = ColdService(_make(root), policy=AdmissionPolicy(
+        min_cohort=1, verify_checksums=True))
+    client = ContributorClient(root, name="c0")
+    client.submit(_m(2.0), checksum=True)
+    st = _drain(svc)
+    assert st["iteration"] == 1 and st["rejected_total"] == 0
+    # now corrupt a submission in place: right spec, wrong bytes vs CRC
+    spec = FlatSpec.from_tree(_m(0))
+    row = np.asarray(spec.flatten(_m(5.0)))
+    path = os.path.join(root, QUEUE_DIR, "c0-000001.npz")
+    ckpt.save_flat(path, row, spec,
+                   extra={"id": "c0-000001", "checksum": row_checksum(row + 1)})
+    st = _drain(svc)
+    assert st["iteration"] == 1 and st["rejected_total"] == 1
+    assert "checksum" in st["recent_rejects"][-1]["reason"]
+
+
+def test_sharded_slice_submission(tmp_path):
+    """Per-shard submissions (ShardedFlatSpec.shard_slices) fuse to the
+    same base as whole-row submissions, even on a meshless repository
+    (portable fallback)."""
+    root = str(tmp_path / "repo")
+    svc = ColdService(_make(root), policy=AdmissionPolicy(min_cohort=2))
+    client = ContributorClient(root, name="c0")
+    spec = FlatSpec.from_tree(_m(0))
+    sspec = ShardedFlatSpec.from_spec(spec, 4)
+    client.submit(_m(2.0))
+    client.submit(row=spec.flatten(_m(6.0)), spec=spec, sspec=sspec)
+    st = _drain(svc)
+    assert st["iteration"] == 1 and st["fused_contributions"] == 2
+    np.testing.assert_allclose(np.asarray(svc.repo.download()["w"]), 4.0)
+    np.testing.assert_allclose(np.asarray(svc.repo.download()["b"]), 4.0)
+
+
+def test_screen_outlier_diluted_not_fatal(tmp_path):
+    """§9 at service level: a lone outlier cohort all-rejects (publish
+    abandoned, daemon survives), later arrivals dilute it, and the re-pass
+    fuses with the outlier weight-zeroed."""
+    root = str(tmp_path / "repo")
+    repo = Repository(_m(0), root=root, spill=True, screen=True)
+    svc = ColdService(repo, policy=AdmissionPolicy(min_cohort=1))
+    client = ContributorClient(root, name="c0")
+    client.submit({"w": jnp.full((64,), jnp.inf), "b": jnp.full((5,), 1.0)})
+    st = svc.run_once()  # dispatch
+    st = svc.run_once()  # finalize -> all rejected -> cohort restored
+    assert st["iteration"] == 0 and st["last_error"] is not None
+    assert "rejected" in st["last_error"]
+    for v in (1.0, 1.2, 0.8, 1.1):
+        client.submit(_m(v))
+    st = _drain(svc)
+    assert st["iteration"] == 1
+    rec = svc.repo.history[0]
+    assert rec.n_contributions == 5 and rec.n_accepted == 4
+    assert np.isfinite(np.asarray(svc.repo.download()["w"])).all()
+
+
+def test_status_endpoint_fields(tmp_path):
+    root = str(tmp_path / "repo")
+    svc = ColdService(_make(root), policy=AdmissionPolicy(min_cohort=2))
+    client = ContributorClient(root, name="c0")
+    client.submit(_m(1.0))
+    st = svc.run_once()
+    for key in ("iteration", "queue_depth", "staged", "inflight", "fuses",
+                "fused_contributions", "rejected_total", "fuse_latency_s",
+                "last_fuse", "pid", "running", "updated_at"):
+        assert key in st, key
+    assert st["staged"] == 1 and st["running"] and st["last_fuse"] is None
+    # the client reads the same thing, atomically published
+    assert client.status()["staged"] == 1
+    assert os.path.exists(os.path.join(root, STATUS_FILE))
+    client.submit(_m(3.0))
+    st = _drain(svc)
+    assert st["last_fuse"]["n_accepted"] == 2
+    assert st["fuse_latency_s"] > 0
+    final = svc.close()
+    assert final["running"] is False
+    assert client.iteration() == 1
+
+
+def test_wait_for_iteration_bounded(tmp_path):
+    root = str(tmp_path / "repo")
+    svc = ColdService(_make(root))
+    svc.run_once()
+    client = ContributorClient(root, name="c0")
+    with pytest.raises(TimeoutError):
+        client.wait_for_iteration(1, timeout=0.1, interval=0.01)
+    client.submit(_m(2.0))
+    _drain(svc)
+    st = client.wait_for_iteration(1, timeout=5.0)
+    assert st["iteration"] == 1
+    np.testing.assert_allclose(np.asarray(client.download_base()["w"]), 2.0)
+
+
+def test_service_requires_spill(tmp_path):
+    root = str(tmp_path / "repo")
+    repo = Repository(_m(0), root=root, screen=False)  # spill=False
+    with pytest.raises(ValueError, match="spill=True"):
+        ColdService(repo)
+    with pytest.raises(ValueError, match="on-disk"):
+        ColdService(Repository(_m(0), screen=False))
+
+
+def test_ingest_spilled_direct_api(tmp_path):
+    """The queue-ingest entry point registers an on-disk row by reference:
+    no copy, manifest-tracked, recovered like any spilled upload."""
+    root = str(tmp_path / "repo")
+    repo = _make(root)
+    spec = FlatSpec.from_tree(_m(0))
+    path = os.path.join(root, QUEUE_DIR, "x-000000.npz")
+    ckpt.save_flat(path, spec.flatten(_m(8.0)), spec)
+    repo.ingest_spilled(path, weight=2.0)
+    assert repo.n_staged == 1
+    assert "queue/x-000000.npz" in repo.staged_spill_files()
+    # crash here would recover it: reopen instead of fusing
+    again = Repository.open(root, spill=True)
+    assert again.n_staged == 1 and again._pending_weights == [2.0]
+    again.fuse_pending()
+    np.testing.assert_allclose(np.asarray(again.download()["w"]), 8.0)
+    with pytest.raises(ValueError, match="outside"):
+        repo.ingest_spilled(os.path.join(str(tmp_path), "elsewhere.npz"))
+
+
+# ---------------------------------------------------------------------------
+# property tests: queue/cohort invariants under arbitrary interleavings
+# ---------------------------------------------------------------------------
+
+
+# NOTE: @settings below @given so the shim's given() sees the settings
+# (decorators apply bottom-up; real hypothesis accepts either order)
+@given(st.lists(st.sampled_from(["submit", "cycle", "burst"]),
+                min_size=1, max_size=8))
+@settings(max_examples=8, deadline=None)
+def test_interleavings_preserve_monotonicity_and_drop_nothing(ops):
+    """Any interleaving of submit / poll-cycle / burst keeps the published
+    iteration monotone and fuses every submission exactly once."""
+    root = tempfile.mkdtemp(prefix="cold_prop_")
+    try:
+        svc = ColdService(_make(root), policy=AdmissionPolicy(min_cohort=2))
+        client = ContributorClient(root, name="p")
+        submitted, last_it = 0, 0
+        for op in ops:
+            if op == "submit":
+                client.submit(_m(float(submitted)))
+                submitted += 1
+            elif op == "burst":
+                client.submit(_m(float(submitted)))
+                client.submit(_m(float(submitted + 1)))
+                submitted += 2
+            st = svc.run_once()
+            assert st["iteration"] >= last_it, "iteration went backwards"
+            last_it = st["iteration"]
+        svc.policy.min_cohort = 1  # drain stragglers below the cohort bar
+        st = _drain(svc)
+        assert st["iteration"] >= last_it
+        fused = sum(r.n_contributions for r in svc.repo.history)
+        assert fused == submitted, f"dropped/duplicated: {fused} != {submitted}"
+        assert st["iteration"] == len(svc.repo.history)
+        qdir = os.path.join(root, QUEUE_DIR)
+        assert [f for f in os.listdir(qdir) if f.endswith(".npz")] == []
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
+# spill compaction / GC
+# ---------------------------------------------------------------------------
+
+
+def _fuse_rounds(repo, n):
+    for it in range(n):
+        repo.upload(_m(float(it + 1)))
+        repo.fuse_pending()
+
+
+def test_compact_keeps_current_base_and_staged_rows(tmp_path):
+    root = str(tmp_path / "repo")
+    repo = _make(root)
+    _fuse_rounds(repo, 4)  # bases 0..4 on disk, 4 archived rows
+    repo.upload(_m(9.0))   # staged, manifest-referenced
+    out = repo.compact(keep_bases=2)
+    assert out == {"bases_removed": 3, "rows_removed": 4}
+    bases = sorted(f for f in os.listdir(root) if f.startswith("base_iter"))
+    assert bases == ["base_iter0003.npz", "base_iter0004.npz"]
+    again = Repository.open(root, spill=True)
+    assert again.iteration == 4 and again.n_staged == 1
+    again.fuse_pending()
+    np.testing.assert_allclose(np.asarray(again.download()["w"]), 9.0)
+
+
+@pytest.mark.parametrize("survive_removes", [0, 1, 3])
+def test_compact_crash_midway_never_breaks_recovery(tmp_path, monkeypatch,
+                                                    survive_removes):
+    """Kill compact after N deletions, for several N: recovery must never
+    reference a deleted file — open() + fuse still work."""
+    root = str(tmp_path / "repo")
+    repo = _make(root)
+    _fuse_rounds(repo, 3)
+    repo.upload(_m(7.0))
+    real_remove, calls = os.remove, []
+
+    def flaky_remove(path):
+        if len(calls) >= survive_removes:
+            raise RuntimeError("injected crash mid-compact")
+        calls.append(path)
+        real_remove(path)
+
+    monkeypatch.setattr(os, "remove", flaky_remove)
+    with pytest.raises(RuntimeError, match="mid-compact"):
+        repo.compact(keep_bases=1)
+    monkeypatch.setattr(os, "remove", real_remove)
+    again = Repository.open(root, spill=True)
+    assert again.iteration == 3 and again.n_staged == 1
+    again.fuse_pending()
+    np.testing.assert_allclose(np.asarray(again.download()["w"]), 7.0)
+    # a clean re-run finishes the job
+    again.compact(keep_bases=1)
+    assert sorted(f for f in os.listdir(root) if f.startswith("base_iter")) \
+        == ["base_iter0004.npz"]
+
+
+def test_compact_validations(tmp_path):
+    with pytest.raises(ValueError, match="on-disk"):
+        Repository(_m(0)).compact()
+    repo = _make(str(tmp_path / "repo"))
+    with pytest.raises(ValueError, match="keep_bases"):
+        repo.compact(keep_bases=0)
+
+
+def test_service_compacts_after_publish(tmp_path):
+    root = str(tmp_path / "repo")
+    svc = ColdService(_make(root), policy=AdmissionPolicy(
+        min_cohort=1, compact_keep_bases=1))
+    client = ContributorClient(root, name="c0")
+    client.submit(_m(1.0))
+    _drain(svc)
+    client.submit(_m(2.0))
+    _drain(svc)
+    assert svc.repo.iteration == 2
+    bases = [f for f in os.listdir(root) if f.startswith("base_iter")]
+    assert bases == ["base_iter0002.npz"]
+
+
+# ---------------------------------------------------------------------------
+# fault injection: exactly-once fusion across kill-at-checkpoint crashes
+# ---------------------------------------------------------------------------
+
+_SCENARIO = '''
+import os, sys
+sys.path.insert(0, "src")
+import numpy as np
+import jax.numpy as jnp
+from repro.core.repository import Repository
+from repro.serve.cold_service import AdmissionPolicy, ColdService, ContributorClient
+
+root, phase = sys.argv[1], sys.argv[2]
+
+def m(v):
+    return {"w": jnp.full((96,), float(v)), "b": jnp.full((7,), float(v))}
+
+if phase == "prep":
+    Repository(m(0.0), root=root, spill=True, screen=False)
+    client = ContributorClient(root, name="c")
+    for v, w in ((1.0, 2.0), (3.0, 1.0), (5.0, 1.0)):
+        client.submit(m(v), weight=w, base_iteration=0)
+    print("PREP_OK", flush=True)
+    sys.exit(0)
+
+if phase == "client_crash":
+    # killed mid-submit: nothing durable may appear under the final name
+    client = ContributorClient(root, name="late")
+    client.submit(m(9.0), weight=1.0, seq=0)
+    raise AssertionError("unreachable: client.mid_submit must fire")
+
+if phase == "client_retry":
+    client = ContributorClient(root, name="late")
+    print("RETRY", client.submit(m(9.0), weight=1.0, seq=0), flush=True)
+    sys.exit(0)
+
+# phase == "serve": poll to quiescence (or die at the armed crash point)
+repo = Repository.open(root, spill=True)
+svc = ColdService(repo, policy=AdmissionPolicy(min_cohort=3))
+for _ in range(200):
+    st = svc.run_once()
+    if (st["iteration"] >= 1 and not st["inflight"] and st["staged"] == 0
+            and st["queue_depth"] == 0):
+        break
+else:
+    print("NO_CONVERGENCE", st, flush=True)
+    sys.exit(3)
+st = svc.close()
+w = np.asarray(repo.download()["w"])
+n_q = len([f for f in os.listdir(svc.queue_dir) if f.endswith(".npz")])
+print(f"DONE it={st['iteration']} fused={st['fused_contributions']} "
+      f"w={w[0]:.6f} qfiles={n_q}", flush=True)
+'''
+
+# the crash windows of docs/service_loop.md's matrix, in lifecycle order:
+# after a row enters the staging manifest but before the queue manifest
+# marks it; after the fuse dispatch but before any publish; after the base
+# publish but before the staging-manifest rewrite; after the full publish
+# but before queue GC; and mid-GC between file delete and entry drop.
+CRASH_POINTS = [
+    "service.post_ingest",
+    "service.post_dispatch",
+    "repo.post_publish_pre_manifest",
+    "service.post_publish",
+    "service.mid_gc",
+]
+
+
+def _done_line(res):
+    line = [l for l in res.stdout.splitlines() if l.startswith("DONE")][0]
+    return dict(kv.split("=") for kv in line.split()[1:])
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("point", CRASH_POINTS)
+def test_exactly_once_fusion_across_crash_points(tmp_path, point):
+    """kill -9 the daemon at any crash window, restart it: every submitted
+    contribution fuses exactly once and the published base equals the
+    uninterrupted run's (weighted mean 2.5)."""
+    root = str(tmp_path / "repo")
+    run_child(_SCENARIO, [root, "prep"])
+    run_child(_SCENARIO, [root, "serve"], crash_at=point)
+    res = run_child(_SCENARIO, [root, "serve"])  # restart, run to completion
+    done = _done_line(res)
+    assert done["it"] == "1", done       # ONE publish total — never two
+    assert done["fused"] == "3", done    # every submission, exactly once
+    assert abs(float(done["w"]) - 2.5) < 1e-5, done
+    assert done["qfiles"] == "0", done   # queue fully GC'd
+
+
+@pytest.mark.slow
+def test_uninterrupted_reference_run(tmp_path):
+    """The oracle the crash tests compare against: prep + serve with no
+    crash lands on the same DONE line."""
+    root = str(tmp_path / "repo")
+    run_child(_SCENARIO, [root, "prep"])
+    done = _done_line(run_child(_SCENARIO, [root, "serve"]))
+    assert done == {"it": "1", "fused": "3", "w": "2.500000", "qfiles": "0"}
+
+
+@pytest.mark.slow
+def test_client_killed_mid_submit_then_retry(tmp_path):
+    """A contributor killed mid-enqueue leaves nothing under the final
+    name; the retry (same name+seq) enqueues exactly one row."""
+    root = str(tmp_path / "repo")
+    run_child(_SCENARIO, [root, "prep"])
+    run_child(_SCENARIO, [root, "client_crash"], crash_at="client.mid_submit")
+    qdir = os.path.join(root, QUEUE_DIR)
+    files = [f for f in os.listdir(qdir) if f.endswith(".npz")]
+    assert not any(f.startswith("late-") for f in files), files
+    run_child(_SCENARIO, [root, "client_retry"])
+    files = [f for f in os.listdir(qdir) if f.startswith("late-")]
+    assert files == ["late-000000.npz"]
+    # 3 prepped + 1 retried row fuse in one cohort: (2·1+3+5+9)/5
+    res = run_child(_SCENARIO, [root, "serve"])
+    done = _done_line(res)
+    assert done["fused"] == "4" and abs(float(done["w"]) - 3.8) < 1e-5, done

@@ -1,6 +1,15 @@
 """Repository behaviour: screening, fusion, versioning, disk persistence,
 the async double-buffered staging path, and crash recovery of spilled
-staged-but-unfused rows (kill-and-reopen subprocess tests)."""
+staged-but-unfused rows (kill-and-reopen subprocess tests).
+
+Flake audit (PR 4): no test here (or in test_sharded_fuse.py) waits on a
+``PendingFusion`` with sleeps or wall-clock timing — async fuses are
+synchronized deterministically through ``flush()`` / the next
+``fuse_pending`` / ``download()``, which block until the publish.  Keep it
+that way: anything that genuinely needs to poll (e.g. the service loop)
+must use ``tests/_faults.wait_until`` (bounded, described) rather than
+``time.sleep``; global RNGs are pinned per-test by the autouse
+``_seed_global_rngs`` fixture in conftest.py."""
 import json
 import os
 import subprocess
