@@ -15,6 +15,15 @@ bookkeeping.  This bench measures that overhead end to end:
 The ``service_loop/throughput`` row records the queue path's us/cohort
 with the direct-path baseline and the ratio in the derived column; the
 acceptance bar is the ratio staying within 1.3x.
+
+The ``service_loop/novelty_screen`` row measures the content-based
+novelty admission screen (docs/service_loop.md) on top of that: the same
+queue path with ``novelty_threshold`` armed — every admission pays one
+row-sketch read plus the window comparison and the atomic
+``cohort_sketch.json`` persist.  All K contributions are distinct, so
+the row isolates the screen's *overhead* (the cost of admitting, not
+rejecting); the bar is screened admission staying within 1.3x of the
+unscreened queue path.
 """
 import tempfile
 import time
@@ -42,7 +51,7 @@ def _direct_once(base, contribs):
         return (t_ingest - t0) * 1e6, (time.time() - t0) * 1e6
 
 
-def _queue_once(base, contribs):
+def _queue_once(base, contribs, **policy_kw):
     """(ingest_us, total_us): submit x K + admit cycles until the whole
     cohort is staged, then service cycles to publish + queue GC."""
     with tempfile.TemporaryDirectory(prefix="svc_queue_") as root:
@@ -52,7 +61,8 @@ def _queue_once(base, contribs):
         # min_cohort > K: admission completes without triggering the
         # dispatch, so the ingest split point matches the direct path's
         # (K rows staged + durable, fuse not yet started)
-        svc = ColdService(repo, policy=AdmissionPolicy(min_cohort=K + 1))
+        svc = ColdService(repo, policy=AdmissionPolicy(min_cohort=K + 1,
+                                                       **policy_kw))
         client = ContributorClient(root, name="bench")
         for c in contribs:
             client.submit(c)
@@ -67,6 +77,9 @@ def _queue_once(base, contribs):
                     and st["staged"] == 0:
                 break
         svc.close()
+        # a run that screened out a distinct contribution (or never fused)
+        # must fail loudly, not get timed as if it had done the work
+        assert st["iteration"] >= 1 and st["rejected_total"] == 0, st
         jax.block_until_ready(jax.tree.leaves(repo.download()))
         return (t_ingest - t0) * 1e6, (time.time() - t0) * 1e6
 
@@ -75,13 +88,27 @@ def run(rows: C.Rows, reps: int = 3):
     base = _model(jax.random.PRNGKey(0))
     contribs = _contributions(base, K)
     n_params = sum(x.size for x in jax.tree.leaves(base))
+    # 0.01 sits an order of magnitude above replay-level sketch distances
+    # (~1e-6) and safely below genuinely-distinct content: independent
+    # random finetunes of this model land ~0.03+ relative distance (the
+    # isotropic norm growth every finetune shares dominates the base-
+    # relative scale and compresses distinct-pair distances — see
+    # docs/service_loop.md on threshold calibration)
+    novelty = dict(novelty_threshold=0.01, sketch_window=2 * K)
     _direct_once(base, contribs)  # warm the jit caches
     _queue_once(base, contribs)
+    _queue_once(base, contribs, **novelty)
     d = [_direct_once(base, contribs) for _ in range(reps)]
     q = [_queue_once(base, contribs) for _ in range(reps)]
+    n = [_queue_once(base, contribs, **novelty) for _ in range(reps)]
     di, dt = min(x[0] for x in d), min(x[1] for x in d)
     qi, qt = min(x[0] for x in q), min(x[1] for x in q)
+    ni, nt = min(x[0] for x in n), min(x[1] for x in n)
     rows.add("service_loop/throughput", qi,
              f"contribs_per_s={K / (qi / 1e6):.1f};direct_us={di:.1f};"
              f"vs_direct={qi / di:.2f}x;e2e_vs_direct={qt / dt:.2f}x;"
+             f"K={K};params={n_params}")
+    rows.add("service_loop/novelty_screen", ni,
+             f"contribs_per_s={K / (ni / 1e6):.1f};unscreened_us={qi:.1f};"
+             f"vs_unscreened={ni / qi:.2f}x;e2e_vs_unscreened={nt / qt:.2f}x;"
              f"K={K};params={n_params}")

@@ -12,10 +12,19 @@ expectation and reports queue throughput.
 
   PYTHONPATH=src python examples/cold_service_demo.py
   PYTHONPATH=src python examples/cold_service_demo.py --mesh 8   # sharded daemon
+  PYTHONPATH=src python examples/cold_service_demo.py --duplicates 1  # novelty screen
 
 With ``--mesh N`` the daemon opens the repository on an N-device mesh
 (the driver forces the fake host-device count for that child); the
 contributors are unchanged — the queue format is engine-agnostic.
+
+``--duplicates D`` additionally launches D *shadow* contributors, each
+replaying contributor 0's exact submission every round under its own
+name, and arms the daemon's content-based novelty screen
+(``--novelty-threshold``).  The driver then verifies the planted
+near-duplicates were all rejected at the queue boundary — the published
+base and fused-contribution count match the duplicate-free closed form —
+while every distinct contribution was admitted.
 """
 import argparse
 import os
@@ -42,16 +51,29 @@ def contributor_main(args) -> int:
 
     from repro.serve.cold_service import ContributorClient
 
-    client = ContributorClient(args.root, name=f"c{args.index}")
+    # a shadow contributor replays contributor --shadow-of's round-r
+    # finetune under its own name: content the novelty screen must reject,
+    # submission ids it must not.  The replay is rebuilt from the run's
+    # closed form rather than download_base() — the real base may already
+    # have advanced past round r by the time a slow shadow downloads, and a
+    # replay against the wrong base would be genuinely novel content.
+    shadow = args.shadow_of is not None
+    index = args.shadow_of if shadow else args.index
+    name = f"dup{args.index}" if shadow else f"c{args.index}"
+    client = ContributorClient(args.root, name=name)
     for r in range(args.rounds):
         st = client.wait_for_iteration(r, timeout=args.timeout)
-        base = client.download_base()
-        delta = (args.index + 1) * 0.1 * (r + 1)
-        finetuned = jax.tree.map(lambda x: x + delta, base)
-        sub = client.submit(finetuned, weight=1.0,
-                            base_iteration=int(st["iteration"]))
-        print(f"[c{args.index}] round {r}: submitted {sub} "
-              f"(delta=+{delta:.2f})", flush=True)
+        delta = (index + 1) * 0.1 * (r + 1)
+        if shadow:
+            val = _expected_w(args.contributors, r) + delta
+            finetuned = {"w": np.full((W,), val, np.float32),
+                         "b": np.full((B,), val, np.float32)}
+        else:
+            base = client.download_base()
+            finetuned = jax.tree.map(lambda x: x + delta, base)
+        sub = client.submit(finetuned, weight=1.0, base_iteration=r)
+        print(f"[{name}] round {r}: submitted {sub} "
+              f"(delta=+{delta:.2f}{' REPLAY' if shadow else ''})", flush=True)
     return 0
 
 
@@ -82,18 +104,28 @@ def driver_main(args) -> int:
     ]
     if args.mesh:
         daemon_cmd += ["--mesh", str(args.mesh)]
+    if args.duplicates:
+        # planted replays ride the queue alongside the real contributors;
+        # the novelty screen must keep them out of every cohort
+        daemon_cmd += ["--novelty-threshold", "0.1",
+                       "--sketch-window",
+                       str(4 * (args.contributors + args.duplicates))]
+
+    def _spawn(i, shadow_of=None):
+        cmd = [sys.executable, os.path.abspath(__file__),
+               "--role", "contributor", "--root", root, "--index", str(i),
+               "--contributors", str(args.contributors),
+               "--rounds", str(args.rounds), "--timeout", str(args.timeout)]
+        if shadow_of is not None:
+            cmd += ["--shadow-of", str(shadow_of)]
+        return subprocess.Popen(cmd, env=env)
 
     t0 = time.time()
     daemon = subprocess.Popen(daemon_cmd, env=daemon_env)
-    workers = [
-        subprocess.Popen(
-            [sys.executable, os.path.abspath(__file__), "--role", "contributor",
-             "--root", root, "--index", str(i), "--rounds", str(args.rounds),
-             "--timeout", str(args.timeout)],
-            env=env)
-        for i in range(args.contributors)
-    ]
-    procs = [("daemon", daemon)] + [(f"c{i}", w) for i, w in enumerate(workers)]
+    workers = [(f"c{i}", _spawn(i)) for i in range(args.contributors)]
+    workers += [(f"dup{i}", _spawn(i, shadow_of=i % args.contributors))
+                for i in range(args.duplicates)]
+    procs = [("daemon", daemon)] + workers
     failed = False
     for name, proc in procs:
         try:
@@ -113,14 +145,22 @@ def driver_main(args) -> int:
     got = ckpt.load(os.path.join(
         root, f"base_iter{st['iteration']:04d}.npz"), as_jax=False)
     n_contrib = args.contributors * args.rounds
+    n_dup = args.duplicates * args.rounds
     ok = (st["iteration"] == args.rounds
           and st["fused_contributions"] == n_contrib
           and np.allclose(np.asarray(got["w"]), want_w, atol=1e-5)
           and np.allclose(np.asarray(got["b"]), want_w, atol=1e-5))
+    if args.duplicates:
+        # every planted replay was screened out at the queue boundary
+        # (exactly one of each identical-content pair fused, so the base
+        # check above already proves none slipped through)
+        ok = ok and st["novelty_rejected_total"] == n_dup
     print(f"[demo] {args.contributors} contributors x {args.rounds} rounds "
-          f"-> iteration {st['iteration']}, {st['fused_contributions']} "
-          f"contributions fused in {elapsed:.1f}s "
-          f"({n_contrib / elapsed:.1f} contrib/s end-to-end)", flush=True)
+          f"(+{args.duplicates} replayers) -> iteration {st['iteration']}, "
+          f"{st['fused_contributions']} contributions fused, "
+          f"{st['novelty_rejected_total']} near-duplicates rejected in "
+          f"{elapsed:.1f}s ({n_contrib / elapsed:.1f} contrib/s end-to-end)",
+          flush=True)
     print(f"[demo] final base w={float(np.asarray(got['w'])[0]):.4f} "
           f"(expected {want_w:.4f}) -> {'OK' if ok else 'MISMATCH'}", flush=True)
     return 0 if ok else 1
@@ -134,8 +174,13 @@ def main() -> int:
     p.add_argument("--rounds", type=int, default=3)
     p.add_argument("--mesh", type=int, default=0,
                    help="run the daemon on an N-device (fake) mesh")
+    p.add_argument("--duplicates", type=int, default=0,
+                   help="launch this many replaying shadow contributors and "
+                        "arm the daemon's novelty screen against them")
     p.add_argument("--timeout", type=float, default=180.0)
     p.add_argument("--index", type=int, default=0, help="(contributor role)")
+    p.add_argument("--shadow-of", type=int, default=None,
+                   help="(contributor role) replay this index's submissions")
     args = p.parse_args()
     if args.role == "contributor":
         return contributor_main(args)

@@ -18,11 +18,15 @@ python -m pytest -q
 # links, fenced python blocks import-check against src/
 python scripts/check_docs.py
 
-# multi-device smoke: the sharded-fuse tests on a real (fake-)8-device mesh
-# — under plain pytest above they ran on the single CPU device.  The slow
-# subprocess test forces its own 8 devices and already ran above: skip it.
+# multi-device smoke: the sharded-fuse + novelty-sketch tests on a real
+# (fake-)8-device mesh — under plain pytest above they ran on the single
+# CPU device.  The sketch tests pin the sharded one-psum sketch (the
+# novelty screen's distributed path) against the single-device oracle.
+# The slow subprocess test forces its own 8 devices and already ran
+# above: skip it.
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
-    python -m pytest tests/test_sharded_fuse.py -q -m "not slow"
+    python -m pytest tests/test_sharded_fuse.py tests/test_sketch.py \
+    -q -m "not slow"
 
 # crash-recovery under the forced 8-fake-device config: kill-and-reopen
 # spill recovery (per-shard placement, manifest validation) with the mesh
@@ -34,11 +38,15 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     -q -k "crash or recover"
 
 # service-loop stage: the contributor service loop end-to-end — the demo
-# driver (fusion daemon + 2 contributor subprocesses x 3 fusion rounds,
-# daemon on a forced 8-fake-device mesh) plus the kill-at-checkpoint
-# fault-injection suite (slow marker: exactly-once fusion across every
-# parametrized crash window, docs/service_loop.md)
-python examples/cold_service_demo.py --contributors 2 --rounds 3 --mesh 8
+# driver (fusion daemon + 2 contributor subprocesses x 3 fusion rounds +
+# 1 replaying shadow contributor, daemon on a forced 8-fake-device mesh
+# with the novelty screen armed: planted near-duplicates must be rejected
+# at the queue boundary while every distinct contribution fuses) plus the
+# kill-at-checkpoint fault-injection suite (slow marker: exactly-once
+# fusion across every parametrized crash window incl. the sketch-persist
+# window, docs/service_loop.md)
+python examples/cold_service_demo.py --contributors 2 --rounds 3 --mesh 8 \
+    --duplicates 1
 python -m pytest tests/test_cold_service.py -q -m slow
 
 # kernel + end-to-end fuse micro-benches (smoke scale); refreshes

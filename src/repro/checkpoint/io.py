@@ -156,10 +156,12 @@ def is_flat(path: str) -> bool:
 # -- atomic JSON (Repository spill manifest) --------------------------------
 
 
-def save_json_atomic(path: str, obj: Any, *, default=None) -> None:
+def save_json_atomic(path: str, obj: Any, *, default=None,
+                     indent: Optional[int] = 2) -> None:
     """Write JSON with the same tmp + ``os.replace`` discipline as the npz
     writer: a crash mid-write can never leave a truncated manifest (or
-    repository.json)."""
+    repository.json).  ``indent=None`` writes compact single-line JSON —
+    for machine-only state rewritten on hot paths (the cohort sketch)."""
     path = os.path.abspath(path)
     os.makedirs(os.path.dirname(path), exist_ok=True)
     # pid AND thread id: spill-executor threads of one process must not
@@ -167,7 +169,7 @@ def save_json_atomic(path: str, obj: Any, *, default=None) -> None:
     tmp = f"{path}.tmp-{os.getpid()}-{threading.get_ident()}"
     try:
         with open(tmp, "w") as f:
-            json.dump(obj, f, indent=2, default=default)
+            json.dump(obj, f, indent=indent, default=default)
         os.replace(tmp, path)
     except BaseException:
         if os.path.exists(tmp):

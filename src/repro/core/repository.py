@@ -76,14 +76,16 @@ from repro.core.validation import (ScreenReport, norms_from_sq,
 from repro.kernels import ops
 from repro.launch import sharding as SH
 from repro.utils import faults
-from repro.utils.flat import (BufferPair, FlatSpec, ShardedFlatSpec,
-                              StagedBuffer, StagingSide)
+from repro.utils.flat import (SKETCH_BUCKETS, BufferPair, CohortSketch,
+                              FlatSpec, ShardedFlatSpec, StagedBuffer,
+                              StagingSide)
 
 # operators the streaming flat engine covers; everything else (fisher, ties)
 # falls back to the per-leaf pytree engine
 FLAT_OPS = ("average", "damped", "task_arithmetic")
 
 MANIFEST = "staging_manifest.json"
+SKETCH_FILE = "cohort_sketch.json"
 
 # on-disk artifact naming in the npz root (compact() walks these)
 _BASE_RE = re.compile(r"^base_iter(\d{4,})\.npz$")
@@ -219,6 +221,9 @@ class Repository:
         self._manifest_lock = threading.Lock()
         self._publish_lock = threading.Lock()
         self._persisted_iteration = -1
+        # novelty admission state (docs/service_loop.md): None until the
+        # service (or a caller) enables it via enable_cohort_sketch
+        self.cohort_sketch: Optional[CohortSketch] = None
         if root:
             os.makedirs(root, exist_ok=True)
             self._persist_base()
@@ -512,6 +517,96 @@ class Repository:
             self._write_manifest()
         return idx
 
+    # -- novelty admission sketch (docs/service_loop.md) -----------------
+    def _sketch_path(self) -> str:
+        return os.path.join(self.root, SKETCH_FILE)
+
+    def enable_cohort_sketch(self, *, window: int = 32,
+                             n_buckets: int = SKETCH_BUCKETS) -> CohortSketch:
+        """Create (or adopt) the persisted ``CohortSketch`` the novelty
+        admission screen queries.  An on-disk ``cohort_sketch.json``
+        (recovered by ``open``) is reused when its layout matches —
+        ``window`` always follows the caller (the admission policy wins
+        over whatever a previous service instance ran with) — otherwise a
+        fresh sketch is built.  The current base's sketch is computed and
+        the state persisted atomically before returning, so the screen's
+        history is durable from the first admission on."""
+        if not self.use_flat:
+            raise ValueError("cohort sketch requires the flat engine — the "
+                             "row sketch is a statistic over flat [N] rows")
+        self._ensure_flat_base()
+        sk = self.cohort_sketch
+        if sk is not None and (sk.size != self._spec.size
+                               or sk.n_buckets != n_buckets):
+            warnings.warn(
+                f"cohort sketch (size={sk.size}, n_buckets={sk.n_buckets}) "
+                f"does not match the requested layout (size="
+                f"{self._spec.size}, n_buckets={n_buckets}) — rebuilding; "
+                "the screen history restarts empty")
+            sk = None
+        if sk is None:
+            sk = CohortSketch(self._spec.size, n_buckets, window)
+        else:
+            sk.window = int(window)
+            del sk.entries[: -sk.window]
+        self.cohort_sketch = sk
+        self._refresh_base_sketch()
+        return sk
+
+    def save_cohort_sketch(self) -> None:
+        """Persist the cohort sketch with the manifest's atomic-write
+        discipline (no-op for an in-memory repository or before
+        ``enable_cohort_sketch``)."""
+        if self.cohort_sketch is not None and self.root:
+            # compact form: this file is rewritten once per admission, and
+            # it is machine state (nobody diffs a sketch by eye)
+            ckpt.save_json_atomic(self._sketch_path(),
+                                  self.cohort_sketch.to_json(), indent=None)
+
+    def _sketch_of_staged(self, arr) -> np.ndarray:
+        """Sketch a staged row — ``[N]`` single-device or ``[S, shard_len]``
+        block-cyclic (per-shard partials, one psum) — to host float32."""
+        nb = (self.cohort_sketch.n_buckets if self.cohort_sketch is not None
+              else SKETCH_BUCKETS)
+        if getattr(arr, "ndim", 1) == 2:
+            out = ops.row_sketch_sharded(
+                arr, mesh=self.mesh, axes=self.mesh_axes,
+                block=self._sspec.block, n_buckets=nb)
+        else:
+            out = ops.row_sketch(arr, nb)
+        return np.asarray(jax.device_get(out))
+
+    def _refresh_base_sketch(self) -> None:
+        """Recompute the base's sketch (the screen's distance
+        normalizer) and persist — called at every publish so a restarted
+        daemon screens against the same scale.  The sketch file is
+        advisory state: a crash that loses this write only leaves the
+        previous base's sketch as the normalizer, never double-fuses.
+        No-op on the per-leaf engine (a repository reopened there keeps
+        its recovered sketch history untouched for the next flat run)."""
+        if self.cohort_sketch is None or not self.use_flat:
+            return
+        self._ensure_flat_base()  # rebuilt lazily after publish/rollback
+        self.cohort_sketch.set_base(self._sketch_of_staged(self._base_flat))
+        self.save_cohort_sketch()
+
+    def sketch_row_file(self, path: str, *, meta: Optional[Dict[str, Any]] = None
+                        ) -> np.ndarray:
+        """Content sketch of an on-disk flat row (a queue submission), in
+        one read: sharded files matching the mesh layout are sketched
+        per shard with a single psum (the full ``[N]`` row never
+        materializes on host); everything else reads the portable row.
+        Raises on torn/unreadable files — callers quarantine like any
+        other unreadable submission.  ``meta=`` reuses a pre-read
+        ``flat_row_meta`` peek (skips re-opening the npz header)."""
+        self._ensure_flat_base()
+        sharded = (ckpt.is_flat_sharded(path) if meta is None
+                   else bool(meta["sharded"]))
+        if not sharded:
+            row, _ = ckpt.load_flat(path)
+            return self._sketch_of_staged(row)
+        return self._sketch_of_staged(self._load_staged_row(path))
+
     def contribute_async(self, params, *, alpha: Optional[float] = None) -> FusionRecord:
         """Asynchronous contribution (paper §8: "it would be beneficial if
         the repository was updated asynchronously"): immediately merge ONE
@@ -570,6 +665,7 @@ class Repository:
             if self.spill or os.path.exists(self._manifest_path()):
                 with self._manifest_lock:
                     self._write_manifest()
+        self._refresh_base_sketch()  # async publishes move the base too
         return rec
 
     # -- repository maintenance ----------------------------------------
@@ -831,6 +927,11 @@ class Repository:
                 # spill=True reopen would re-apply the cohort
                 with self._manifest_lock:
                     self._write_manifest()
+        # the novelty screen's normalizer tracks the published base
+        # (docs/service_loop.md); runs after the durability-critical writes
+        # because the sketch is advisory — a crash here costs at most one
+        # stale-scale admission decision, never a double fuse
+        self._refresh_base_sketch()
 
     def _cohort_weights(self, K: int, staged_weights: Sequence[Any]) -> jnp.ndarray:
         """Per-contributor weights for the flat engine (average/damped)."""
@@ -912,6 +1013,7 @@ class Repository:
         if self.spill and self.root:
             with self._manifest_lock:
                 self._write_manifest()
+        self._refresh_base_sketch()  # the screen's normalizer moved too
 
     def snapshot(self, iteration: int):
         return self._snapshots[iteration]
@@ -1142,4 +1244,22 @@ class Repository:
         manifest_path = os.path.join(root, MANIFEST)
         if os.path.exists(manifest_path):
             repo._recover_staged(ckpt.load_json(manifest_path), spec)
+        sketch_path = os.path.join(root, SKETCH_FILE)
+        if os.path.exists(sketch_path):
+            # restore the novelty screen's history so a restarted daemon
+            # screens against the same recent cohorts (the file is atomic,
+            # but tolerate a hand-damaged one: the screen restarts empty)
+            try:
+                sk = CohortSketch.from_json(ckpt.load_json(sketch_path))
+            except Exception as err:
+                warnings.warn(f"cohort sketch unreadable "
+                              f"({type(err).__name__}: {err}) — the novelty "
+                              "screen history restarts empty")
+            else:
+                if sk.size == spec.size:
+                    repo.cohort_sketch = sk
+                else:
+                    warnings.warn(
+                        f"cohort sketch was built for N={sk.size} rows but "
+                        f"the base is N={spec.size} — ignoring it")
         return repo

@@ -150,3 +150,74 @@ def cold_fuse(
             _cold_fuse_donated, base, contribs, weights, alpha,
             block=block, interpret=interpret)
     return _cold_fuse(base, contribs, weights, alpha, block=block, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# row_sketch — per-row block statistics for the novelty admission screen
+# ---------------------------------------------------------------------------
+#
+# The service loop's content-based admission screen (docs/service_loop.md)
+# needs, per submitted [N] row, a tiny fingerprint: bucketed tile sums
+# (projections) and tile sq-norms — see kernels/ref.py:row_sketch for the
+# exact contract.  Like cold_fuse this is HBM-bandwidth-bound streaming over
+# the whole row, so the kernel reads each block exactly once and accumulates
+# the [2, n_buckets] output across the sequential grid (same output block
+# every step — the idiomatic Pallas reduction cold_fuse's sq_diff uses).
+# Bucket membership is tile_index % n_buckets, realized as a dense one-hot
+# contraction (TPU has no efficient scatter; the one-hot is [tiles, buckets]
+# and trivially MXU/VPU-friendly).
+
+
+def _make_sketch_kernel(n_buckets: int, tiles_per_block: int):
+    def kernel(row_ref, out_ref):
+        pid = pl.program_id(0)
+
+        @pl.when(pid == 0)
+        def _init():
+            out_ref[...] = jnp.zeros_like(out_ref)
+
+        x = row_ref[...].astype(jnp.float32).reshape(tiles_per_block, _LANE)
+        ts = jnp.sum(x, axis=1)                  # [tiles]
+        tq = jnp.sum(x * x, axis=1)
+        # global tile index of this block's tiles; 2-D iota (TPU requires it)
+        ti = (jax.lax.broadcasted_iota(jnp.int32, (tiles_per_block, n_buckets), 0)
+              + pid * tiles_per_block)
+        bi = jax.lax.broadcasted_iota(jnp.int32, (tiles_per_block, n_buckets), 1)
+        onehot = (ti % n_buckets == bi).astype(jnp.float32)
+        out_ref[...] += jnp.stack([ts @ onehot, tq @ onehot])
+
+    return kernel
+
+
+def _row_sketch_impl(row, n_buckets, block, interpret):
+    (n,) = row.shape
+    block = min(block, max(_LANE, ((n + _LANE - 1) // _LANE) * _LANE))
+    pad = (-n) % block
+    if pad:
+        row = jnp.concatenate([row, jnp.zeros((pad,), row.dtype)])
+    n_blocks = row.shape[0] // block
+    return pl.pallas_call(
+        _make_sketch_kernel(n_buckets, block // _LANE),
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((block,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((2, n_buckets), lambda i: (0, 0)),  # accumulated
+        out_shape=jax.ShapeDtypeStruct((2, n_buckets), jnp.float32),
+        interpret=interpret,
+    )(row)
+
+
+_row_sketch = _jit_fuse(_row_sketch_impl,
+                        static_argnames=("n_buckets", "block", "interpret"))
+
+
+def row_sketch(
+    row: jax.Array,  # [N]
+    n_buckets: int = 32,
+    *,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = True,
+) -> jax.Array:
+    """Returns the ``[2, n_buckets]`` content sketch of one flat row in a
+    single streaming read (tile-bucketed sums + sq sums; padding contributes
+    0 to both).  Oracle: ``repro.kernels.ref.row_sketch``."""
+    return _row_sketch(row, n_buckets=n_buckets, block=block, interpret=interpret)

@@ -20,10 +20,11 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.kernels import ref
 from repro.kernels.cold_fuse import call_donated as _call_donated
 from repro.kernels.cold_fuse import cold_fuse as _cold_fuse_kernel
+from repro.kernels.cold_fuse import row_sketch as _row_sketch_kernel
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
 from repro.kernels.rwkv6_scan import rwkv6_scan as _rwkv_kernel
 from repro.launch.sharding import axes_entry, axes_extent, norm_axes
-from repro.utils.flat import FlatSpec, StagedBuffer
+from repro.utils.flat import SKETCH_BUCKETS, FlatSpec, StagedBuffer
 
 RWKV_LOGW_FLOOR = -4.0  # kernel contract (see rwkv6_scan docstring)
 
@@ -219,6 +220,65 @@ def cohort_fuse_sharded(
     fn = _cohort_fuse_fn(
         mesh, norm_axes(contrib_axes), norm_axes(shard_axes), float(alpha))
     return fn(stage)
+
+
+# ---------------------------------------------------------------------------
+# row_sketch — the novelty admission screen's per-row fingerprint
+# (docs/service_loop.md).  Single-device: one streaming read of the [N] row
+# (Pallas kernel on TPU, jitted jnp oracle elsewhere).  Sharded: per-shard
+# partials under shard_map completed by exactly ONE psum — the same
+# one-all-reduce comm contract as the sharded fuse (docs/sharding.md).
+# ---------------------------------------------------------------------------
+
+
+def row_sketch(row: jax.Array, n_buckets: int = SKETCH_BUCKETS) -> jax.Array:
+    """Content sketch of one flat ``[N]`` row: ``[2, n_buckets]`` f32 of
+    tile-bucketed sums and sq sums, in a single read of the row.  The host
+    logic that screens with it lives in ``repro.utils.flat.CohortSketch``."""
+    if kernels_enabled() and not _interpret():
+        return _row_sketch_kernel(row, n_buckets, interpret=False)
+    return _ref_sketch(row, n_buckets)
+
+
+_ref_sketch = jax.jit(ref.row_sketch, static_argnums=(1,))
+
+
+@functools.lru_cache(maxsize=32)
+def _sharded_sketch_fn(mesh: Mesh, axes: Tuple[str, ...], n_shards: int,
+                       block: int, n_buckets: int):
+    """Build (once per mesh/layout) the jitted shard_map sketch over a
+    block-cyclic ``[S, shard_len]`` row.  Exactly one collective: the psum
+    completing the per-shard partials."""
+    row_spec = P(axes_entry(axes), None)
+
+    def local(row):  # [1, shard_len] local stub of the shard dim
+        idx = jnp.int32(0)
+        for a in axes:  # linear shard index, first axis most significant
+            idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+        part = ref.row_sketch_shard(row[0], idx, n_shards, block, n_buckets)
+        return jax.lax.psum(part, axes)
+
+    fn = shard_map(local, mesh=mesh, in_specs=(row_spec,), out_specs=P(),
+                   check_rep=False)
+    return jax.jit(fn)
+
+
+def row_sketch_sharded(
+    row: jax.Array,  # [S, shard_len] — sharded over `axes`
+    *,
+    mesh: Mesh,
+    axes: Axes,
+    block: int,
+    n_buckets: int = SKETCH_BUCKETS,
+) -> jax.Array:
+    """Distributed ``row_sketch`` over a ``ShardedFlatSpec`` placement:
+    each shard sketches its own slice (bucket ids derived from the
+    block-cyclic layout, so membership matches the portable row) and one
+    ``psum`` completes the ``[2, n_buckets]`` result, replicated.  ``block``
+    is the layout's ``ShardedFlatSpec.block``."""
+    ax = norm_axes(axes)
+    fn = _sharded_sketch_fn(mesh, ax, int(row.shape[0]), int(block), n_buckets)
+    return fn(row)
 
 
 def attention(q, k, v, *, causal=True, window: Optional[int] = None, q_offset: int = 0,

@@ -6,6 +6,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.utils.flat import LANE as _LANE
+
 
 # ---------------------------------------------------------------------------
 # cold_fuse: K-way weighted parameter average + per-contribution diff norms
@@ -37,6 +39,72 @@ def cold_fuse(
     fused = (bf + alpha * (avg - bf)).astype(base.dtype)
     sq = jnp.sum(jnp.square(cf - bf[None, :]), axis=1)
     return fused, sq
+
+
+# ---------------------------------------------------------------------------
+# row_sketch: per-row block statistics for the novelty admission screen
+# ---------------------------------------------------------------------------
+
+
+def _tile_stats(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """[T*LANE] -> per-tile (sums [T], sq sums [T]) in one read."""
+    tiles = x.reshape(-1, _LANE)
+    return jnp.sum(tiles, axis=1), jnp.sum(tiles * tiles, axis=1)
+
+
+def _bucketize(ts: jax.Array, tq: jax.Array, g: jax.Array,
+               n_buckets: int) -> jax.Array:
+    """Accumulate per-tile stats into their buckets (tile with global index
+    ``g`` lands in bucket ``g % n_buckets``).  Dense one-hot matmul instead
+    of a scatter: ``n_buckets`` is small and the same contraction lowers on
+    every backend (including the Pallas TPU kernel, where scatters do not)."""
+    onehot = (g[:, None] % n_buckets
+              == jnp.arange(n_buckets)[None, :]).astype(jnp.float32)
+    return jnp.stack([ts @ onehot, tq @ onehot])
+
+
+def row_sketch(row: jax.Array, n_buckets: int = 32) -> jax.Array:
+    """Content sketch of one flat ``[N]`` row in a single read.
+
+    The row is cut into LANE-element tiles; tile ``t`` feeds bucket
+    ``t % n_buckets`` of two statistics:
+
+        sketch[0, j] = Σ_{tiles t ≡ j} Σ_i row[t·LANE + i]      (projection)
+        sketch[1, j] = Σ_{tiles t ≡ j} Σ_i row[t·LANE + i]²     (sq norm)
+
+    Returns ``[2, n_buckets]`` float32.  Both statistics give lower bounds
+    on the distance between two rows (Cauchy–Schwarz over the projections,
+    the reverse triangle inequality over the blockwise norms), which is
+    what ``repro.utils.flat.CohortSketch`` screens with.  Zero padding
+    contributes nothing, so the sketch is invariant to the block-cyclic
+    layout: ``row_sketch_shard`` partials psum to exactly this value.
+    """
+    x = jnp.asarray(row).astype(jnp.float32)
+    pad = (-x.shape[-1]) % _LANE
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,), jnp.float32)])
+    ts, tq = _tile_stats(x)
+    return _bucketize(ts, tq, jnp.arange(ts.shape[0]), n_buckets)
+
+
+def row_sketch_shard(slab: jax.Array, shard_index, n_shards: int,
+                     block: int, n_buckets: int = 32) -> jax.Array:
+    """One shard's sketch *partial* from its block-cyclic ``[shard_len]``
+    slice (``ShardedFlatSpec``: layout block ``j`` lives on shard
+    ``j % n_shards`` at slot ``j // n_shards``).
+
+    The slice's tile at (slot ``u``, within-block tile ``v``) is global
+    tile ``(u·n_shards + shard_index)·(block/LANE) + v``, so bucket
+    membership matches the portable row and summing (psum-ing) the S
+    partials reproduces ``row_sketch`` of the full ``[N]`` row exactly.
+    ``shard_index`` may be traced (``jax.lax.axis_index`` under shard_map).
+    """
+    x = jnp.asarray(slab).astype(jnp.float32)
+    tpb = block // _LANE
+    ts, tq = _tile_stats(x)
+    t = jnp.arange(ts.shape[0])
+    g = ((t // tpb) * n_shards + shard_index) * tpb + t % tpb
+    return _bucketize(ts, tq, g, n_buckets)
 
 
 # ---------------------------------------------------------------------------

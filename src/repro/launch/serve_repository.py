@@ -58,6 +58,8 @@ def build_service(args) -> ColdService:
         max_wait_s=args.max_wait,
         max_staleness=args.max_staleness,
         verify_checksums=args.verify_checksums,
+        novelty_threshold=args.novelty_threshold,
+        sketch_window=args.sketch_window,
         compact_keep_bases=args.compact_keep,
     )
     return ColdService(repo, policy=policy)
@@ -83,6 +85,13 @@ def main(argv=None) -> int:
                    help="reject submissions finetuned from a base more than "
                         "this many iterations old")
     p.add_argument("--verify-checksums", action="store_true")
+    p.add_argument("--novelty-threshold", type=float, default=None,
+                   metavar="D",
+                   help="reject submissions whose content sketch sits "
+                        "within this relative distance of a recent "
+                        "admission (the cohort novelty screen; default off)")
+    p.add_argument("--sketch-window", type=int, default=32,
+                   help="recent admissions the novelty screen remembers")
     p.add_argument("--compact-keep", type=int, default=None, metavar="M",
                    help="compact after each publish, keeping M bases")
     p.add_argument("--poll", type=float, default=0.02, metavar="S",
@@ -110,7 +119,8 @@ def main(argv=None) -> int:
                            idle_timeout=args.idle_timeout)
     print(f"[cold-service] stopped at iteration {st['iteration']}: "
           f"{st['fuses']} fuses, {st['fused_contributions']} contributions "
-          f"fused, {st['rejected_total']} rejected", flush=True)
+          f"fused, {st['rejected_total']} rejected "
+          f"({st['novelty_rejected_total']} near-duplicates)", flush=True)
     return 0
 
 

@@ -51,17 +51,19 @@ base.  See docs/service_loop.md for the full crash matrix.
 """
 from __future__ import annotations
 
+import math
 import os
 import time
 from dataclasses import dataclass
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.checkpoint import io as ckpt
 from repro.core.repository import Repository
 from repro.utils import faults
-from repro.utils.flat import FlatSpec, ShardedFlatSpec, row_checksum
+from repro.utils.flat import (FlatSpec, ShardedFlatSpec, row_checksum,
+                              row_sketch_host)
 
 QUEUE_DIR = "queue"
 QUEUE_MANIFEST = "queue_manifest.json"
@@ -98,7 +100,8 @@ class ContributorClient:
                weight: Optional[float] = None,
                base_iteration: Optional[int] = None,
                seq: Optional[int] = None,
-               checksum: bool = False) -> str:
+               checksum: bool = False,
+               sketch: Optional[bool] = None) -> str:
         """Enqueue one contribution; returns the submission id once (and
         only once) it is durably in the queue.
 
@@ -116,7 +119,18 @@ class ContributorClient:
         covering the shard/unshard rearrangement, not just the file.
         Torn-file detection needs no checksum: the atomic write hides
         partial files, and the npz zip entry's own CRC is verified on
-        read."""
+        read.
+
+        The rider can also carry the row's content **sketch**
+        (``repro.kernels.ops.row_sketch`` of the portable row) so the
+        service's novelty screen needs no extra row read at admission.
+        ``sketch=None`` (default) stamps it iff the service's published
+        status says the screen is armed (or no status exists yet);
+        True/False force it.  It sits in the same trust class as
+        ``weight``/``base_iteration`` (a rider that mis-states it only
+        distorts the advisory screen for its own row — no different from
+        perturbing the row itself); under ``verify_checksums`` the service
+        recomputes it from the file."""
         if row is None:
             if params is None:
                 raise ValueError("submit needs params= or row=")
@@ -139,6 +153,13 @@ class ContributorClient:
             "base_iteration": base_iteration,
             "submitted_at": time.time(),
         }
+        if sketch is None:
+            st = self.status()
+            sketch = st is None or bool(st.get("novelty_screen"))
+        if sketch:
+            # the row is already in hand: sketching it here is one cheap
+            # host pass over memory, vs a full row re-read at admission
+            extra["sketch"] = row_sketch_host(host_row).tolist()
         if checksum:
             extra["checksum"] = row_checksum(host_row)
         # the armed window: nothing durable has happened yet — a death here
@@ -219,6 +240,15 @@ class AdmissionPolicy:
       iterations (None = accept any vintage);
     * ``verify_checksums`` — re-read each row at admission and verify the
       contributor's CRC (costs a full row read; off by default);
+    * ``novelty_threshold`` — content-based novelty screen (ROADMAP
+      "Similarity/novelty admission"): reject a submission whose row
+      sketch sits within this relative distance of any of the last
+      ``sketch_window`` admitted rows (``repro.utils.flat.CohortSketch``;
+      costs one row read per admission).  0 still rejects exact replays;
+      None (default) disables the screen;
+    * ``sketch_window`` — how many recent admissions the novelty screen
+      remembers (persisted in ``cohort_sketch.json``, so a restarted
+      daemon screens against the same history);
     * ``compact_keep_bases`` — run ``Repository.compact`` after each
       publish, keeping this many bases (None = never compact).
     """
@@ -228,6 +258,8 @@ class AdmissionPolicy:
     max_cohort: int = 64
     max_staleness: Optional[int] = None
     verify_checksums: bool = False
+    novelty_threshold: Optional[float] = None
+    sketch_window: int = 32
     compact_keep_bases: Optional[int] = None
 
 
@@ -254,12 +286,20 @@ class ColdService:
         self._rejects: List[Dict[str, str]] = []
         self._fused_ids = 0          # queue submissions retired as fused
         self._rejected = 0
+        self._novelty_rejected = 0   # subset of _rejected: near-duplicates
         self._cohort_since: Optional[float] = None
         self._failed_cohort_size: Optional[int] = None
         self._last_error: Optional[str] = None
         self._stop = False
         self._load_queue_manifest()
         self._recover()
+        if self.policy.novelty_threshold is not None:
+            # adopt (or create) the persisted sketch window before the
+            # first admission, so the screen sees pre-crash history
+            repo.enable_cohort_sketch(window=self.policy.sketch_window)
+        # publish an initial status so contributors can see the policy
+        # (e.g. whether to stamp rider sketches) before the first cycle
+        ckpt.save_json_atomic(self._status_path, self.status())
         if self.repo.n_staged:
             # rows recovered from the staging manifest start the cohort
             # clock too — max_wait_s must cover an undersized recovered
@@ -275,12 +315,14 @@ class ColdService:
         self._entries = {e["id"]: e for e in data.get("entries", [])}
         self._fused_ids = int(data.get("fused_total", 0))
         self._rejected = int(data.get("rejected_total", 0))
+        self._novelty_rejected = int(data.get("novelty_rejected_total", 0))
 
     def _write_queue_manifest(self) -> None:
         ckpt.save_json_atomic(self._qman_path, {
             "version": 1,
             "fused_total": self._fused_ids,
             "rejected_total": self._rejected,
+            "novelty_rejected_total": self._novelty_rejected,
             "entries": list(self._entries.values()),
         })
 
@@ -313,25 +355,60 @@ class ColdService:
                if fn.endswith(".npz") and ".tmp-" not in fn and fn not in known]
         return sorted(out)
 
-    def _reject(self, fn: str, reason: str) -> None:
+    def _reject(self, fn: str, reason: str, *, novelty: bool = False) -> None:
         self._rejected += 1
+        if novelty:
+            self._novelty_rejected += 1
         self._rejects = (self._rejects + [{"file": fn, "reason": reason}])[-8:]
         path = os.path.join(self.queue_dir, fn)
         if os.path.exists(path):
             os.remove(path)
 
-    def _checksum_ok(self, path: str, meta: Dict[str, Any], want: str) -> bool:
+    @staticmethod
+    def _rider_error(extra: Dict[str, Any]) -> Optional[str]:
+        """Screen queue-supplied rider metadata before anything consumes
+        it: a garbage ``base_iteration``/``weight``/``id`` must be a
+        per-file rejection reason, never an exception that aborts the admit
+        pass (and stalls every other submission behind it)."""
+        sub_id = extra.get("id")
+        if sub_id is not None and not isinstance(sub_id, str):
+            return f"malformed rider: id={sub_id!r} is not a string"
+        base_it = extra.get("base_iteration")
+        if base_it is not None:
+            try:
+                int(base_it)
+            except (TypeError, ValueError):
+                return (f"malformed rider: base_iteration={base_it!r} "
+                        "is not an integer")
+        weight = extra.get("weight")
+        if weight is not None:
+            try:
+                w = float(weight)
+            except (TypeError, ValueError):
+                return f"malformed rider: weight={weight!r} is not a number"
+            if not math.isfinite(w):
+                # a NaN/inf weight would poison the weight normalization
+                # w/Σw and publish a non-finite base — permanently
+                return f"malformed rider: weight={weight!r} is not finite"
+        return None
+
+    def _checksum_ok(self, path: str, meta: Dict[str, Any],
+                     want: str) -> Tuple[bool, np.ndarray]:
+        """Returns (crc matches, the portable [N] row it read) — callers
+        that need the row again (the novelty screen's rider-distrust
+        recompute) reuse it instead of paying a second full read."""
         if meta["sharded"]:
             with ckpt.FlatShardReader(path) as r:
                 row = r.full_row()
         else:
             row, _ = ckpt.load_flat(path, as_jax=False)
-        return row_checksum(row) == want
+        return row_checksum(row) == want, row
 
     def _admit(self) -> Dict[str, int]:
         """Stage new queue arrivals into the repository, up to the cohort
-        budget.  Unreadable / mismatched / stale rows are rejected here at
-        the queue boundary — they never reach the fuse.  Returns
+        budget.  Unreadable / malformed / mismatched / stale /
+        near-duplicate rows are rejected here at the queue boundary — they
+        never reach the fuse.  Returns
         ``{"admitted": n, "queue_depth": files left unadmitted}``.
 
         Already-staged files (ingested by a pre-crash admit whose
@@ -339,18 +416,32 @@ class ColdService:
         outside the budget, before anything else.  A budget-starved
         re-mark would let the file fuse and leave the staging manifest
         while still looking brand-new to a later scan, which would
-        re-ingest (double-fuse) it."""
+        re-ingest (double-fuse) it.  Re-marks are keyed by *file*: a rider
+        ``id`` that differs from the filename stem must reuse the entry
+        already tracking the file, never mint a second one."""
         new = self._scan_new()
         if not new:
             return {"admitted": 0, "queue_depth": 0}
         budget = self.policy.max_cohort - self.repo.n_staged
         staged = self.repo.staged_spill_files()
+        threshold = self.policy.novelty_threshold
         admitted = leftover = 0
+        rejected0 = self._rejected
         for fn in new:
             path = os.path.join(self.queue_dir, fn)
             sub_id = fn[:-len(".npz")]
             if f"{QUEUE_DIR}/{fn}" in staged:
-                extra = {}  # re-mark only; bookkeeping fields best-effort
+                # re-mark only; bookkeeping fields best-effort, taken from
+                # the entry already tracking this file if there is one
+                prev = next((s for s, e in self._entries.items()
+                             if e["file"] == fn), None)
+                if prev is not None:
+                    sub_id = prev
+                    extra = {k: self._entries[prev].get(k)
+                             for k in ("weight", "contributor")}
+                else:
+                    extra = {}
+                weight = extra.get("weight")
             else:
                 if budget <= 0:
                     leftover += 1
@@ -361,46 +452,136 @@ class ColdService:
                     self._reject(fn, f"unreadable ({type(err).__name__}: {err})")
                     continue
                 extra = meta.get("extra") or {}
-                sub_id = extra.get("id", sub_id)
+                rider_err = self._rider_error(extra)
+                if rider_err is not None:
+                    self._reject(fn, rider_err)
+                    continue
+                sub_id = extra.get("id") or sub_id
                 stale = self._staleness(extra)
                 if stale is not None:
                     self._reject(fn, stale)
                     continue
-                if (self.policy.verify_checksums and extra.get("checksum")
-                        and not self._checksum_ok(path, meta, extra["checksum"])):
-                    self._reject(fn, "checksum mismatch")
-                    continue
+                row = None
+                if self.policy.verify_checksums and extra.get("checksum"):
+                    try:
+                        ok, row = self._checksum_ok(path, meta,
+                                                    extra["checksum"])
+                    except Exception as err:
+                        # torn or vanished between the meta peek and the
+                        # full-row read: same quarantine as unreadable
+                        # metadata, never an aborted admit pass
+                        self._reject(fn, f"unreadable ({type(err).__name__}: "
+                                         f"{err})")
+                        continue
+                    if not ok:
+                        self._reject(fn, "checksum mismatch")
+                        continue
+                if threshold is not None:
+                    dup = self._novelty_check(fn, path, meta, sub_id,
+                                              threshold, row=row)
+                    if dup:
+                        continue
+                w = extra.get("weight")
+                weight = None if w is None else float(w)
                 try:
-                    self.repo.ingest_spilled(path, weight=extra.get("weight"),
-                                             meta=meta)
+                    self.repo.ingest_spilled(path, weight=weight, meta=meta)
                 except ValueError as err:  # FlatSpec mismatch etc.
+                    if threshold is not None:
+                        # the pre-ingest sketch of a row that never staged
+                        # must not pollute the novelty window
+                        self.repo.cohort_sketch.discard(sub_id)
+                        self.repo.save_cohort_sketch()
                     self._reject(fn, str(err))
                     continue
                 budget -= 1
                 # the row is durably staged; the admit-mark below is the
                 # recoverable half of the hand-off (ordering (2))
                 faults.crash_point("service.post_ingest")
+            # dedupe by file: this (re)admission supersedes any entry that
+            # tracks the same file under a different id
+            for other in [s for s, e in self._entries.items()
+                          if e["file"] == fn and s != sub_id]:
+                del self._entries[other]
             self._entries[sub_id] = {
                 "id": sub_id, "file": fn, "state": "admitted",
-                "weight": extra.get("weight"),
+                "weight": weight,
                 "contributor": extra.get("contributor"),
                 "admitted_at": time.time(),
                 "staged_iteration": self.repo.iteration,
             }
             admitted += 1
-        if admitted:
+        if admitted or self._rejected != rejected0:
+            # rejections persist their counters too: a restarted daemon's
+            # totals must agree with what the status endpoint reported
             self._write_queue_manifest()
+        if admitted:
             self._failed_cohort_size = None  # new blood: retry a stuck cohort
             if self._cohort_since is None:
                 self._cohort_since = time.time()
         return {"admitted": admitted, "queue_depth": leftover}
+
+    def _novelty_check(self, fn: str, path: str, meta: Dict[str, Any],
+                       sub_id: str, threshold: float,
+                       row: Optional[np.ndarray] = None) -> bool:
+        """The content-based novelty screen (docs/service_loop.md): obtain
+        the row's sketch, reject the file if it sits within ``threshold``
+        of any windowed recent admission, otherwise make the sketch
+        durable *before* the row stages.  Returns True when the file was
+        rejected (caller skips it).
+
+        The rider's pre-computed sketch is used when present (no row read
+        at all); rows without one — or any rider sketch when
+        ``verify_checksums`` distrusts riders — are sketched from ``row``
+        (the checksum pass already read it) or from the file in one read
+        (``Repository.sketch_row_file``)."""
+        sk = self.repo.cohort_sketch
+        sketch = None
+        rider = (meta.get("extra") or {}).get("sketch")
+        if rider is not None and not self.policy.verify_checksums:
+            try:
+                arr = np.asarray(rider, np.float64)
+                if arr.shape == (2, sk.n_buckets) and np.isfinite(arr).all():
+                    sketch = arr
+            except (TypeError, ValueError):
+                sketch = None  # malformed rider sketch: compute from file
+        if sketch is None and row is not None:
+            sketch = row_sketch_host(row, sk.n_buckets)
+        if sketch is None:
+            try:
+                sketch = self.repo.sketch_row_file(path, meta=meta)
+            except Exception as err:  # torn/vanished since the meta peek
+                self._reject(fn, f"unreadable ({type(err).__name__}: {err})")
+                return True
+        # the self-match exemption is keyed by id AND file: only the same
+        # queue file's own pre-crash entry is skipped — a replay forging a
+        # previously admitted rider id under a new file is still screened
+        hit = sk.match(sketch, threshold, skip_id=sub_id, skip_file=fn)
+        if hit is not None:
+            self._reject(
+                fn, f"near-duplicate of {hit[0]} (sketch distance "
+                    f"{hit[1]:.4f} <= novelty_threshold {threshold:g})",
+                novelty=True)
+            return True
+        sk.add(sub_id, sketch, file=fn)
+        self.repo.save_cohort_sketch()
+        # the sketch history is durable before the row stages: a crash in
+        # this window re-screens the row against its own entry on restart,
+        # which the id+file skip turns into a no-op, not a self-rejection
+        faults.crash_point("service.post_sketch")
+        return False
 
     def _staleness(self, extra: Dict[str, Any]) -> Optional[str]:
         lim = self.policy.max_staleness
         base_it = extra.get("base_iteration")
         if lim is None or base_it is None:
             return None
-        lag = self.repo.iteration - int(base_it)
+        try:
+            base_it = int(base_it)
+        except (TypeError, ValueError):  # _rider_error screens this first;
+            # stay a per-file reason even if a caller skips that screen
+            return (f"malformed rider: base_iteration={base_it!r} "
+                    "is not an integer")
+        lag = self.repo.iteration - base_it
         if lag > lim:
             return (f"stale: finetuned from iteration {base_it}, "
                     f"current {self.repo.iteration} (max_staleness={lim})")
@@ -557,6 +738,10 @@ class ColdService:
             "fused_contributions": sum(r.n_contributions for r in hist),
             "fused_queue_submissions": self._fused_ids,
             "rejected_total": self._rejected,
+            "novelty_rejected_total": self._novelty_rejected,
+            "novelty_screen": self.policy.novelty_threshold is not None,
+            "sketch_entries": (None if self.repo.cohort_sketch is None
+                               else len(self.repo.cohort_sketch)),
             "recent_rejects": list(self._rejects),
             "fuse_latency_s": last.wall_time if last else None,
             "last_fuse": None if last is None else {

@@ -49,6 +49,11 @@ from repro.utils.pytree import path_str
 LANE = 1024
 DEFAULT_SHARD_BLOCK = 64 * 1024
 
+# buckets per row-sketch statistic (kernels/ops.row_sketch): small enough
+# that a sketch is a few hundred bytes of JSON, large enough that distinct
+# finetunes land distinct bucket profiles
+SKETCH_BUCKETS = 32
+
 
 @dataclass(frozen=True)
 class LeafSpec:
@@ -214,6 +219,195 @@ def row_checksum(buf) -> str:
     # crc32 consumes the buffer protocol directly — no tobytes copy of a
     # multi-MB row on the submit path
     return f"{zlib.crc32(np.ascontiguousarray(arr)) & 0xFFFFFFFF:08x}"
+
+
+# ---------------------------------------------------------------------------
+# CohortSketch — the novelty admission screen's recency window
+# ---------------------------------------------------------------------------
+
+
+def row_sketch_host(row, n_buckets: int = SKETCH_BUCKETS) -> np.ndarray:
+    """Host (numpy) twin of ``repro.kernels.ref.row_sketch`` — the same
+    ``[2, n_buckets]`` tile-bucketed sums/sq-sums statistic, without a
+    device round trip.  The submit path uses it to stamp rider sketches
+    (the row is already host-resident there; dispatching jax costs ~5x).
+    Parity with the kernel/oracle is pinned by tests/test_sketch.py."""
+    x = np.asarray(row)
+    if x.dtype == jnp.bfloat16:
+        x = x.astype(np.float32)
+    x = x.astype(np.float32, copy=False)
+    t_full = x.shape[0] // LANE
+    main = x[: t_full * LANE].reshape(t_full, LANE)
+    ts = main.sum(axis=1)
+    tq = np.einsum("ij,ij->i", main, main)
+    tail = x[t_full * LANE:]
+    if tail.size:  # the final partial tile (zero padding adds nothing)
+        ts = np.append(ts, tail.sum())
+        tq = np.append(tq, np.dot(tail, tail))
+    pad = (-ts.shape[0]) % n_buckets
+    if pad:
+        ts = np.append(ts, np.zeros(pad, np.float32))
+        tq = np.append(tq, np.zeros(pad, np.float32))
+    # bucket of tile t is t % n_buckets: fold the tile axis over the buckets
+    return np.stack([ts.reshape(-1, n_buckets).sum(axis=0),
+                     tq.reshape(-1, n_buckets).sum(axis=0)])
+
+
+class CohortSketch:
+    """Recency window of admitted-row content sketches, plus the current
+    base's sketch — the host half of the novelty admission screen
+    (docs/service_loop.md).
+
+    Each sketch is the ``[2, n_buckets]`` statistic of
+    ``repro.kernels.ops.row_sketch``: tile-bucketed sums (projections onto
+    bucket indicators) and tile-bucketed squared norms.  Both yield *lower
+    bounds* on the true distance between two rows:
+
+    * projections — ``Σ_j (p_a[j] − p_b[j])² / L ≤ ‖a − b‖²`` by
+      Cauchy–Schwarz per bucket (``L`` = elements per bucket);
+    * blockwise norms — ``Σ_j (√q_a[j] − √q_b[j])² ≤ ‖a − b‖²`` by the
+      reverse triangle inequality per bucket.
+
+    The screen compares the larger of the two bounds *relative to each
+    row's distance from the base* (same bound, against ``base``): two
+    contributions are near-duplicates when their mutual distance is small
+    compared with how far either moved from the base — an exact replay
+    scores 0 regardless of model scale, while independent finetunes of
+    similar magnitude score O(1).  Normalizing by the base distance is what
+    keeps the looseness of the bounds out of the decision: numerator and
+    denominator lose the same statistical factor.
+
+    ``add`` is idempotent per id (a re-admitted submission replaces its own
+    entry — crash recovery must never flag a row as a duplicate of itself)
+    and trims to the most recent ``window`` entries.  Each entry records
+    the queue ``file`` it was sketched from: the self-match skip demands
+    BOTH the id and the file agree, so a replay that forges a previously
+    admitted rider id (ids are contributor-supplied) cannot talk its way
+    past the screen — only the literal same queue file (the
+    post-sketch-persist crash re-screen) is exempt.  ``to_json``/
+    ``from_json`` round-trip the whole state; the Repository persists it
+    atomically next to the staging manifest (``cohort_sketch.json``).
+    """
+
+    EPS = 1e-12
+
+    def __init__(self, size: int, n_buckets: int = SKETCH_BUCKETS,
+                 window: int = 32):
+        if window < 1:
+            raise ValueError(f"window must be >= 1, got {window}")
+        self.size = int(size)
+        self.n_buckets = int(n_buckets)
+        self.window = int(window)
+        self.base: Optional[np.ndarray] = None
+        # (id, originating queue file, sketch), oldest first
+        self.entries: List[Tuple[str, Optional[str], np.ndarray]] = []
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    @property
+    def seg_elems(self) -> int:
+        """Upper bound on elements per bucket (the Cauchy–Schwarz L)."""
+        tiles = -(-max(self.size, 1) // LANE)
+        return -(-tiles // self.n_buckets) * LANE
+
+    def _check(self, sketch) -> np.ndarray:
+        arr = np.asarray(sketch, np.float64)
+        if arr.shape != (2, self.n_buckets):
+            raise ValueError(
+                f"sketch shape {arr.shape} != (2, {self.n_buckets})")
+        return arr
+
+    # -- the lower-bound metric -----------------------------------------
+    def _lb(self, a: np.ndarray, b: np.ndarray) -> float:
+        dp2 = float(np.sum((a[0] - b[0]) ** 2)) / self.seg_elems
+        dn2 = float(np.sum((np.sqrt(np.maximum(a[1], 0.0))
+                            - np.sqrt(np.maximum(b[1], 0.0))) ** 2))
+        return float(np.sqrt(max(dp2, dn2)))
+
+    def distance(self, a, b) -> float:
+        """Relative lower-bound distance between two sketches: mutual lb
+        distance over the larger base-relative lb distance (row norms when
+        no base sketch is set).  0 for exact duplicates; ~O(1) for
+        independent contributions of comparable finetune magnitude."""
+        a, b = self._check(a), self._check(b)
+        d = self._lb(a, b)
+        if self.base is not None:
+            scale = max(self._lb(a, self.base), self._lb(b, self.base))
+        else:
+            scale = max(float(np.sqrt(max(np.sum(a[1]), 0.0))),
+                        float(np.sqrt(max(np.sum(b[1]), 0.0))))
+        if scale <= self.EPS:
+            # both rows sit on the base (or are zero): identical for the
+            # screen's purposes iff their mutual distance vanishes too
+            return 0.0 if d <= self.EPS else float("inf")
+        return d / scale
+
+    # -- window maintenance ---------------------------------------------
+    def set_base(self, sketch) -> None:
+        self.base = self._check(sketch)
+
+    def add(self, sub_id: str, sketch, *, file: Optional[str] = None) -> None:
+        arr = self._check(sketch)
+        self.entries = [e for e in self.entries if e[0] != sub_id]
+        self.entries.append((str(sub_id), file, arr))
+        del self.entries[: -self.window]
+
+    def discard(self, sub_id: str) -> None:
+        """Drop a submission's entry (admission failed after its sketch
+        was recorded — the window must only hold rows that staged)."""
+        self.entries = [e for e in self.entries if e[0] != sub_id]
+
+    def nearest(self, sketch, *, skip_id: Optional[str] = None,
+                skip_file: Optional[str] = None
+                ) -> Optional[Tuple[str, float]]:
+        """(id, relative distance) of the closest windowed entry, or None
+        when the window is empty.  An entry is excluded only when BOTH its
+        id matches ``skip_id`` and its recorded file matches ``skip_file``
+        — the submission's own pre-crash entry, never a forged-id replay
+        under a different queue file."""
+        best: Optional[Tuple[str, float]] = None
+        for sub_id, file, s in self.entries:
+            if (skip_id is not None and sub_id == skip_id
+                    and file is not None and file == skip_file):
+                continue
+            d = self.distance(sketch, s)
+            if best is None or d < best[1]:
+                best = (sub_id, d)
+        return best
+
+    def match(self, sketch, threshold: float, *,
+              skip_id: Optional[str] = None,
+              skip_file: Optional[str] = None) -> Optional[Tuple[str, float]]:
+        """The admission query: the (id, distance) of a windowed entry
+        within ``threshold`` of ``sketch`` — i.e. the near-duplicate to
+        reject for — or None when the row is novel."""
+        hit = self.nearest(sketch, skip_id=skip_id, skip_file=skip_file)
+        if hit is not None and hit[1] <= threshold:
+            return hit
+        return None
+
+    # -- serialization (cohort_sketch.json) ------------------------------
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "version": 1,
+            "size": self.size,
+            "n_buckets": self.n_buckets,
+            "window": self.window,
+            "base": None if self.base is None else self.base.tolist(),
+            "entries": [{"id": i, "file": f, "sketch": s.tolist()}
+                        for i, f, s in self.entries],
+        }
+
+    @classmethod
+    def from_json(cls, meta: Dict[str, Any]) -> "CohortSketch":
+        sk = cls(int(meta["size"]), int(meta["n_buckets"]),
+                 int(meta["window"]))
+        if meta.get("base") is not None:
+            sk.set_base(meta["base"])
+        for e in meta.get("entries", []):
+            sk.add(e["id"], e["sketch"], file=e.get("file"))
+        return sk
 
 
 # ---------------------------------------------------------------------------

@@ -364,6 +364,228 @@ def test_ingest_spilled_direct_api(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# novelty admission screen (docs/service_loop.md)
+# ---------------------------------------------------------------------------
+
+
+def test_novelty_screen_rejects_replay_and_near_duplicate(tmp_path):
+    """Exact replays (same content, different id) and near-duplicates are
+    rejected at the queue boundary; distinct contributions are admitted."""
+    root = str(tmp_path / "repo")
+    svc = ColdService(_make(root), policy=AdmissionPolicy(
+        min_cohort=2, novelty_threshold=0.05, sketch_window=8))
+    client = ContributorClient(root, name="c0")
+    client.submit(_m(1.0))
+    client.submit(_m(1.0))             # exact replay, new submission id
+    client.submit(_m(1.0 + 1e-6))      # near-duplicate
+    client.submit(_m(4.0))             # distinct
+    st = _drain(svc)
+    assert st["iteration"] == 1 and st["fused_contributions"] == 2
+    assert st["rejected_total"] == 2 and st["novelty_rejected_total"] == 2
+    assert all("near-duplicate" in r["reason"] for r in st["recent_rejects"])
+    assert st["novelty_screen"] is True and st["sketch_entries"] == 2
+    np.testing.assert_allclose(np.asarray(svc.repo.download()["w"]), 2.5)
+
+
+def test_novelty_screen_survives_restart(tmp_path):
+    """The sketch window is durable: a replay of a row fused BEFORE a
+    daemon restart is still rejected by the restarted daemon."""
+    root = str(tmp_path / "repo")
+    pol = AdmissionPolicy(min_cohort=1, novelty_threshold=0.05,
+                          sketch_window=8)
+    svc = ColdService(_make(root), policy=pol)
+    client = ContributorClient(root, name="c0")
+    client.submit(_m(2.0))
+    _drain(svc)
+    svc.close()
+    svc2 = ColdService(Repository.open(root, spill=True), policy=pol)
+    ContributorClient(root, name="c1").submit(_m(2.0))  # replay, new name
+    st = _drain(svc2)
+    assert st["iteration"] == 1 and st["novelty_rejected_total"] == 1
+
+
+def test_novelty_screen_off_by_default(tmp_path):
+    """Without novelty_threshold the replay fuses (PR 4 behaviour) and no
+    sketch state is created."""
+    root = str(tmp_path / "repo")
+    svc = ColdService(_make(root), policy=AdmissionPolicy(min_cohort=2))
+    client = ContributorClient(root, name="c0")
+    client.submit(_m(1.0))
+    client.submit(_m(1.0))
+    st = _drain(svc)
+    assert st["fused_contributions"] == 2 and st["novelty_rejected_total"] == 0
+    assert st["sketch_entries"] is None
+    assert not os.path.exists(os.path.join(root, "cohort_sketch.json"))
+
+
+def test_novelty_screen_without_rider_sketch(tmp_path):
+    """Rows enqueued without a rider sketch (foreign writers) are sketched
+    from the file at admission — the screen still catches the replay."""
+    root = str(tmp_path / "repo")
+    svc = ColdService(_make(root), policy=AdmissionPolicy(
+        min_cohort=1, novelty_threshold=0.05, sketch_window=8))
+    spec = FlatSpec.from_tree(_m(0))
+    row = np.asarray(spec.flatten(_m(6.0)))
+    qdir = os.path.join(root, QUEUE_DIR)
+    ckpt.save_flat(os.path.join(qdir, "f-000000.npz"), row, spec,
+                   extra={"id": "f-000000"})
+    _drain(svc)
+    ckpt.save_flat(os.path.join(qdir, "f-000001.npz"), row, spec,
+                   extra={"id": "f-000001"})
+    st = _drain(svc)
+    assert st["iteration"] == 1 and st["novelty_rejected_total"] == 1
+
+
+def test_novelty_screen_not_bypassed_by_forged_rider_id(tmp_path):
+    """Regression (review): the self-match skip is keyed by id AND queue
+    file — a replay that forges a previously admitted submission's rider
+    id under a new file cannot talk its way past the screen."""
+    root = str(tmp_path / "repo")
+    svc = ColdService(_make(root), policy=AdmissionPolicy(
+        min_cohort=1, novelty_threshold=0.05, sketch_window=8))
+    client = ContributorClient(root, name="c0")
+    client.submit(_m(2.0))
+    _drain(svc)
+    spec = FlatSpec.from_tree(_m(0))
+    ckpt.save_flat(os.path.join(root, QUEUE_DIR, "forger-000000.npz"),
+                   np.asarray(spec.flatten(_m(2.0))), spec,
+                   extra={"id": "c0-000000"})  # the fused row's id, replayed
+    st = _drain(svc)
+    assert st["iteration"] == 1 and st["novelty_rejected_total"] == 1, st
+
+
+def test_novelty_screen_distrusts_rider_under_verify(tmp_path):
+    """With verify_checksums the service recomputes the sketch from the
+    file: a rider sketch that lies about duplicate content cannot evade
+    the screen."""
+    root = str(tmp_path / "repo")
+    svc = ColdService(_make(root), policy=AdmissionPolicy(
+        min_cohort=1, novelty_threshold=0.05, sketch_window=8,
+        verify_checksums=True))
+    client = ContributorClient(root, name="c0")
+    client.submit(_m(3.0))
+    _drain(svc)
+    spec = FlatSpec.from_tree(_m(0))
+    row = np.asarray(spec.flatten(_m(3.0)))  # duplicate content...
+    fake = np.asarray(spec.flatten(_m(99.0)))  # ...novel-looking rider sketch
+    from repro.utils.flat import row_sketch_host
+    ckpt.save_flat(os.path.join(root, QUEUE_DIR, "liar-000000.npz"), row, spec,
+                   extra={"id": "liar-000000",
+                          "sketch": row_sketch_host(fake).tolist()})
+    st = _drain(svc)
+    assert st["iteration"] == 1 and st["novelty_rejected_total"] == 1
+
+
+# ---------------------------------------------------------------------------
+# admit-path hardening (malformed riders, torn reads, re-mark dedupe)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bad_extra", [
+    {"base_iteration": "garbage"},
+    {"base_iteration": [1, 2]},
+    {"weight": "heavy"},
+    {"weight": {"x": 1}},
+    {"weight": "nan"},   # finite-ness: NaN·w/Σw would publish a NaN base
+    {"weight": "inf"},
+    {"id": {"not": "a string"}},
+])
+def test_malformed_rider_is_per_file_rejection(tmp_path, bad_extra):
+    """Regression: a garbage rider must be a per-file rejection with a
+    reason — not a daemon last_error that stalls the whole admit pass."""
+    root = str(tmp_path / "repo")
+    svc = ColdService(_make(root), policy=AdmissionPolicy(
+        min_cohort=1, max_staleness=2))
+    spec = FlatSpec.from_tree(_m(0))
+    ckpt.save_flat(os.path.join(root, QUEUE_DIR, "bad-000000.npz"),
+                   np.asarray(spec.flatten(_m(9.0))), spec,
+                   extra={"id": "bad-000000", **bad_extra})
+    ContributorClient(root, name="good").submit(_m(5.0), base_iteration=0)
+    st = _drain(svc)
+    assert st["iteration"] == 1 and st["last_error"] is None
+    assert st["rejected_total"] == 1
+    assert "malformed rider" in st["recent_rejects"][0]["reason"]
+    np.testing.assert_allclose(np.asarray(svc.repo.download()["w"]), 5.0)
+
+
+def _corrupt_buffer_entry(path):
+    """Rewrite a flat npz so its metadata entries stay readable but the
+    buffer entry's bytes are garbage (CRC fails on access) — a torn file
+    that passes the admission meta peek and dies on the full-row read."""
+    import zipfile
+    tmp = path + ".rewrite"
+    with zipfile.ZipFile(path) as zin, \
+            zipfile.ZipFile(tmp, "w", zipfile.ZIP_STORED) as zout:
+        for info in zin.infolist():
+            zout.writestr(info.filename, zin.read(info.filename))
+            if info.filename.startswith("__flat_buffer__"):
+                # poison the central directory's recorded CRC: zipfile
+                # raises BadZipFile ("Bad CRC-32") when the entry is read
+                zout.infolist()[-1].CRC = 0xDEADBEEF
+    os.replace(tmp, path)
+
+
+def test_torn_row_between_meta_and_checksum_read_quarantined(tmp_path):
+    """Regression: _checksum_ok raising (file torn between the meta peek
+    and the full-row read) must reject that one file, not abort the
+    whole admit pass."""
+    root = str(tmp_path / "repo")
+    svc = ColdService(_make(root), policy=AdmissionPolicy(
+        min_cohort=1, verify_checksums=True))
+    client = ContributorClient(root, name="c0")
+    client.submit(_m(2.0), checksum=True)
+    _corrupt_buffer_entry(os.path.join(root, QUEUE_DIR, "c0-000000.npz"))
+    client.submit(_m(7.0), checksum=True)  # healthy row behind the torn one
+    st = _drain(svc)
+    assert st["iteration"] == 1 and st["last_error"] is None
+    assert st["rejected_total"] == 1
+    assert "unreadable" in st["recent_rejects"][0]["reason"]
+    np.testing.assert_allclose(np.asarray(svc.repo.download()["w"]), 7.0)
+
+
+def test_remark_dedupes_by_file_when_rider_id_differs(tmp_path):
+    """Regression: a submission whose rider id differs from its filename
+    stem, ingested pre-crash but never queue-marked, must end up under ONE
+    queue-manifest entry after the re-mark — and fuse exactly once."""
+    root = str(tmp_path / "repo")
+    repo = _make(root)
+    spec = FlatSpec.from_tree(_m(0))
+    path = os.path.join(root, QUEUE_DIR, "stem-000000.npz")
+    ckpt.save_flat(path, np.asarray(spec.flatten(_m(4.0))), spec,
+                   extra={"id": "rider-id-x", "weight": 2.0})
+    repo.ingest_spilled(path, weight=2.0)  # crash at service.post_ingest
+    svc = ColdService(repo, policy=AdmissionPolicy(min_cohort=1))
+    st = svc.run_once()
+    files = [e["file"] for e in svc._entries.values()]
+    assert files.count("stem-000000.npz") <= 1, svc._entries
+    st = _drain(svc)
+    assert st["iteration"] == 1
+    assert sum(r.n_contributions for r in svc.repo.history) == 1
+    np.testing.assert_allclose(np.asarray(svc.repo.download()["w"]), 4.0)
+    qdir = os.path.join(root, QUEUE_DIR)
+    assert [f for f in os.listdir(qdir) if f.endswith(".npz")] == []
+    assert ckpt.load_json(os.path.join(qdir, QUEUE_MANIFEST))["entries"] == []
+
+
+def test_rejection_counters_survive_restart(tmp_path):
+    """Counters persist in the queue manifest even on reject-only passes,
+    so a restarted daemon's totals match what the status reported."""
+    root = str(tmp_path / "repo")
+    pol = AdmissionPolicy(min_cohort=1, novelty_threshold=0.05)
+    svc = ColdService(_make(root), policy=pol)
+    client = ContributorClient(root, name="c0")
+    client.submit(_m(2.0))
+    _drain(svc)
+    client.submit(_m(2.0))  # replay: a reject-only admit pass
+    st = _drain(svc)
+    assert st["rejected_total"] == 1 and st["novelty_rejected_total"] == 1
+    svc.close()
+    svc2 = ColdService(Repository.open(root, spill=True), policy=pol)
+    st2 = svc2.status()
+    assert st2["rejected_total"] == 1 and st2["novelty_rejected_total"] == 1
+
+
+# ---------------------------------------------------------------------------
 # property tests: queue/cohort invariants under arbitrary interleavings
 # ---------------------------------------------------------------------------
 
@@ -397,6 +619,48 @@ def test_interleavings_preserve_monotonicity_and_drop_nothing(ops):
         assert st["iteration"] >= last_it
         fused = sum(r.n_contributions for r in svc.repo.history)
         assert fused == submitted, f"dropped/duplicated: {fused} != {submitted}"
+        assert st["iteration"] == len(svc.repo.history)
+        qdir = os.path.join(root, QUEUE_DIR)
+        assert [f for f in os.listdir(qdir) if f.endswith(".npz")] == []
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+# NOTE: @settings below @given so the shim's given() sees the settings
+@given(st.lists(st.sampled_from(["submit", "dup", "near", "cycle", "burst"]),
+                min_size=1, max_size=8))
+@settings(max_examples=8, deadline=None)
+def test_interleavings_with_duplicates_screen_consistently(ops):
+    """Any interleaving of distinct submits, exact replays, and
+    near-duplicates: every distinct contribution fuses exactly once, every
+    planted duplicate is rejected exactly once, and the counters stay
+    consistent with the history."""
+    root = tempfile.mkdtemp(prefix="cold_prop_nov_")
+    try:
+        svc = ColdService(_make(root), policy=AdmissionPolicy(
+            min_cohort=2, novelty_threshold=0.02, sketch_window=64))
+        client = ContributorClient(root, name="p")
+        distinct = dups = 0
+        last_val = None
+        for op in ops:
+            if op in ("submit", "burst"):
+                for _ in range(2 if op == "burst" else 1):
+                    distinct += 1
+                    last_val = float(distinct)
+                    client.submit(_m(last_val))
+            elif op == "dup" and last_val is not None:
+                client.submit(_m(last_val))            # exact replay
+                dups += 1
+            elif op == "near" and last_val is not None:
+                client.submit(_m(last_val + 1e-7))     # near-duplicate
+                dups += 1
+            st = svc.run_once()
+        svc.policy.min_cohort = 1  # drain stragglers below the cohort bar
+        st = _drain(svc)
+        fused = sum(r.n_contributions for r in svc.repo.history)
+        assert fused == distinct, f"{fused} fused != {distinct} distinct"
+        assert st["novelty_rejected_total"] == dups, st
+        assert st["rejected_total"] == dups, st
         assert st["iteration"] == len(svc.repo.history)
         qdir = os.path.join(root, QUEUE_DIR)
         assert [f for f in os.listdir(qdir) if f.endswith(".npz")] == []
@@ -581,6 +845,137 @@ def test_uninterrupted_reference_run(tmp_path):
     run_child(_SCENARIO, [root, "prep"])
     done = _done_line(run_child(_SCENARIO, [root, "serve"]))
     assert done == {"it": "1", "fused": "3", "w": "2.500000", "qfiles": "0"}
+
+
+# the novelty-screen variant of the crash matrix: three distinct prepped
+# submissions plus a planted exact replay of one of them, served with the
+# screen armed.  Every window of the original matrix plus the new
+# sketch-persist window (service.post_sketch) must converge to the same
+# duplicate-free base with consistent rejection counters.
+_NOVELTY_SCENARIO = '''
+import os, sys
+sys.path.insert(0, "src")
+import numpy as np
+import jax.numpy as jnp
+from repro.core.repository import Repository
+from repro.serve.cold_service import AdmissionPolicy, ColdService, ContributorClient
+
+root, phase = sys.argv[1], sys.argv[2]
+
+def m(v):
+    return {"w": jnp.full((96,), float(v)), "b": jnp.full((7,), float(v))}
+
+if phase == "prep":
+    Repository(m(0.0), root=root, spill=True, screen=False)
+    client = ContributorClient(root, name="c")
+    for v, w in ((1.0, 2.0), (3.0, 1.0), (5.0, 1.0)):
+        client.submit(m(v), weight=w, base_iteration=0)
+    # the planted replay: same content as c-000001, different contributor
+    ContributorClient(root, name="d").submit(m(3.0), weight=1.0,
+                                             base_iteration=0)
+    print("PREP_OK", flush=True)
+    sys.exit(0)
+
+repo = Repository.open(root, spill=True)
+svc = ColdService(repo, policy=AdmissionPolicy(
+    min_cohort=3, novelty_threshold=0.02, sketch_window=8))
+for _ in range(200):
+    st = svc.run_once()
+    if (st["iteration"] >= 1 and not st["inflight"] and st["staged"] == 0
+            and st["queue_depth"] == 0):
+        break
+else:
+    print("NO_CONVERGENCE", st, flush=True)
+    sys.exit(3)
+st = svc.close()
+w = np.asarray(repo.download()["w"])
+n_q = len([f for f in os.listdir(svc.queue_dir) if f.endswith(".npz")])
+print(f"DONE it={st['iteration']} fused={st['fused_contributions']} "
+      f"w={w[0]:.6f} rej={st['rejected_total']} "
+      f"nov={st['novelty_rejected_total']} qfiles={n_q}", flush=True)
+'''
+
+_NOVELTY_DONE = {"it": "1", "fused": "3", "w": "2.500000",
+                 "rej": "1", "nov": "1", "qfiles": "0"}
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("point", ["service.post_sketch"] + CRASH_POINTS)
+def test_novelty_screen_exactly_once_across_crash_points(tmp_path, point):
+    """kill -9 the screened daemon at any window (including the new
+    sketch-persist window), restart: every distinct submission fuses
+    exactly once, the replay is rejected exactly once, and the counters
+    agree with the uninterrupted run."""
+    root = str(tmp_path / "repo")
+    run_child(_NOVELTY_SCENARIO, [root, "prep"])
+    run_child(_NOVELTY_SCENARIO, [root, "serve"], crash_at=point)
+    done = _done_line(run_child(_NOVELTY_SCENARIO, [root, "serve"]))
+    assert done == _NOVELTY_DONE, done
+
+
+@pytest.mark.slow
+def test_novelty_uninterrupted_reference_run(tmp_path):
+    root = str(tmp_path / "repo")
+    run_child(_NOVELTY_SCENARIO, [root, "prep"])
+    done = _done_line(run_child(_NOVELTY_SCENARIO, [root, "serve"]))
+    assert done == _NOVELTY_DONE, done
+
+
+# fault-harness regression for the re-mark dedupe: a submission whose rider
+# id differs from its filename stem, killed at service.post_ingest (staged
+# but never queue-marked), must re-mark into ONE entry and fuse once.
+_ODD_ID_SCENARIO = '''
+import os, sys
+sys.path.insert(0, "src")
+import numpy as np
+import jax.numpy as jnp
+from repro.checkpoint import io as ckpt
+from repro.core.repository import Repository
+from repro.serve.cold_service import AdmissionPolicy, ColdService
+from repro.utils.flat import FlatSpec
+
+root, phase = sys.argv[1], sys.argv[2]
+
+def m(v):
+    return {"w": jnp.full((96,), float(v)), "b": jnp.full((7,), float(v))}
+
+if phase == "prep":
+    Repository(m(0.0), root=root, spill=True, screen=False)
+    spec = FlatSpec.from_tree(m(0.0))
+    ckpt.save_flat(os.path.join(root, "queue", "stem-000000.npz"),
+                   np.asarray(spec.flatten(m(4.0))), spec,
+                   extra={"id": "rider-id-x", "weight": 1.0})
+    print("PREP_OK", flush=True)
+    sys.exit(0)
+
+repo = Repository.open(root, spill=True)
+svc = ColdService(repo, policy=AdmissionPolicy(min_cohort=1))
+for _ in range(200):
+    st = svc.run_once()
+    if (st["iteration"] >= 1 and not st["inflight"] and st["staged"] == 0
+            and st["queue_depth"] == 0):
+        break
+else:
+    print("NO_CONVERGENCE", st, flush=True)
+    sys.exit(3)
+st = svc.close()
+qman = ckpt.load_json(os.path.join(root, "queue", "queue_manifest.json"))
+w = np.asarray(repo.download()["w"])
+n_q = len([f for f in os.listdir(svc.queue_dir) if f.endswith(".npz")])
+print(f"DONE it={st['iteration']} fused={st['fused_contributions']} "
+      f"w={w[0]:.6f} entries={len(qman['entries'])} qfiles={n_q}", flush=True)
+'''
+
+
+@pytest.mark.slow
+def test_odd_rider_id_remark_across_post_ingest_crash(tmp_path):
+    root = str(tmp_path / "repo")
+    run_child(_ODD_ID_SCENARIO, [root, "prep"])
+    run_child(_ODD_ID_SCENARIO, [root, "serve"],
+              crash_at="service.post_ingest")
+    done = _done_line(run_child(_ODD_ID_SCENARIO, [root, "serve"]))
+    assert done == {"it": "1", "fused": "1", "w": "4.000000",
+                    "entries": "0", "qfiles": "0"}, done
 
 
 @pytest.mark.slow
