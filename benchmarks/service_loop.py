@@ -24,16 +24,31 @@ row-sketch read plus the window comparison and the atomic
 the row isolates the screen's *overhead* (the cost of admitting, not
 rejecting); the bar is screened admission staying within 1.3x of the
 unscreened queue path.
+
+The ``service_loop/regression_gate`` row measures the forgetting
+regression gate (docs/observability.md) the same way: the queue path
+with ``--gate``-equivalent probes armed, so every publish additionally
+pays the probe scoring, the gate-state persist, and the synchronous
+(``wait=True``) fuse the gate requires.  The bar is the gated cycle
+staying within 1.3x of the ungated queue path end to end.  Before the
+row is recorded, ``_gate_rollback_check`` runs the gate's correctness
+scenario — a harmful cohort must trip exactly one rollback, land in
+quarantine, and leave the base bit-identical to the benign fixed point —
+so a gate that stopped gating can never post a (fast) number.
 """
 import tempfile
 import time
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from benchmarks import common as C
 from benchmarks.fuse_e2e import K, _contributions, _model
 from repro.core.repository import Repository
 from repro.serve.cold_service import AdmissionPolicy, ColdService, ContributorClient
+from repro.serve.probes import ProbeSuite, RegressionGate
+from repro.utils.flat import FlatSpec
 
 
 def _direct_once(base, contribs):
@@ -84,6 +99,77 @@ def _queue_once(base, contribs, **policy_kw):
         return (t_ingest - t0) * 1e6, (time.time() - t0) * 1e6
 
 
+def _gate_once(base, contribs, gate):
+    """(ingest_us, total_us): the queue path with the regression gate
+    armed — identical flow to ``_queue_once`` plus the per-publish probe
+    scoring, gate-state persist, and the synchronous fuse."""
+    with tempfile.TemporaryDirectory(prefix="svc_gate_") as root:
+        t0 = time.time()
+        repo = Repository(base, root=root, spill=True, use_flat=True,
+                          screen=False)
+        svc = ColdService(repo, policy=AdmissionPolicy(min_cohort=K + 1),
+                          gate=gate)
+        client = ContributorClient(root, name="bench")
+        for c in contribs:
+            client.submit(c)
+        for _ in range(64):
+            if svc.run_once()["staged"] == K:
+                break
+        t_ingest = time.time()
+        svc.policy.min_cohort = K
+        for _ in range(64):
+            st = svc.run_once()
+            if st["iteration"] >= 1 and not st["inflight"] \
+                    and st["staged"] == 0:
+                break
+        svc.close()
+        # a benign cohort that tripped the gate (or never fused) must fail
+        # loudly, not get timed as if it had published
+        assert st["iteration"] >= 1 and st["rollbacks_total"] == 0, st
+        jax.block_until_ready(jax.tree.leaves(repo.download()))
+        return (t_ingest - t0) * 1e6, (time.time() - t0) * 1e6
+
+
+def _gate_rollback_check(base, contribs, gate):
+    """The gate's correctness scenario, asserted before the perf row is
+    recorded: benign cohort publishes clean; a harmful cohort (large
+    uniform-norm noise, invisible to the MAD screen) trips exactly one
+    rollback; every harmful row is quarantined; the base converges back
+    bit-identically to the benign fixed point."""
+    bad = [jax.tree.map(
+        lambda x: x + jax.random.normal(
+            jax.random.fold_in(jax.random.PRNGKey(7000 + i), x.size),
+            x.shape, jnp.float32) * 10.0, base) for i in range(K)]
+    with tempfile.TemporaryDirectory(prefix="svc_gate_chk_") as root:
+        repo = Repository(base, root=root, spill=True, use_flat=True,
+                          screen=False)
+        svc = ColdService(repo, policy=AdmissionPolicy(min_cohort=K),
+                          gate=gate)
+        client = ContributorClient(root, name="bench")
+        for c in contribs:
+            client.submit(c)
+        for _ in range(64):
+            st = svc.run_once()
+            if st["iteration"] >= 1 and not st["inflight"] \
+                    and st["staged"] == 0:
+                break
+        assert st["iteration"] == 1 and st["rollbacks_total"] == 0, st
+        good = np.array(repo.flat_base_host(), copy=True)
+        for c in bad:
+            client.submit(c, base_iteration=1)
+        for _ in range(64):
+            st = svc.run_once()
+            if st["rollbacks_total"] and not st["inflight"] \
+                    and st["staged"] == 0 and st["queue_depth"] == 0:
+                break
+        svc.close()
+        assert st["rollbacks_total"] == 1, st
+        assert st["quarantined_total"] == K, st
+        assert st["iteration"] == 1, st
+        assert np.array_equal(repo.flat_base_host(), good), \
+            "rollback did not restore the benign fixed point"
+
+
 def run(rows: C.Rows, reps: int = 3):
     base = _model(jax.random.PRNGKey(0))
     contribs = _contributions(base, K)
@@ -95,15 +181,22 @@ def run(rows: C.Rows, reps: int = 3):
     # relative scale and compresses distinct-pair distances — see
     # docs/service_loop.md on threshold calibration)
     novelty = dict(novelty_threshold=0.01, sketch_window=2 * K)
+    # one probe pool for every gated run: construction is service-start
+    # cost, not per-cohort cost, so it stays outside the timed region
+    gate = RegressionGate(ProbeSuite(FlatSpec.from_tree(base).size))
+    _gate_rollback_check(base, contribs, gate)
     _direct_once(base, contribs)  # warm the jit caches
     _queue_once(base, contribs)
     _queue_once(base, contribs, **novelty)
+    _gate_once(base, contribs, gate)
     d = [_direct_once(base, contribs) for _ in range(reps)]
     q = [_queue_once(base, contribs) for _ in range(reps)]
     n = [_queue_once(base, contribs, **novelty) for _ in range(reps)]
+    g = [_gate_once(base, contribs, gate) for _ in range(reps)]
     di, dt = min(x[0] for x in d), min(x[1] for x in d)
     qi, qt = min(x[0] for x in q), min(x[1] for x in q)
     ni, nt = min(x[0] for x in n), min(x[1] for x in n)
+    gi, gt = min(x[0] for x in g), min(x[1] for x in g)
     rows.add("service_loop/throughput", qi,
              f"contribs_per_s={K / (qi / 1e6):.1f};direct_us={di:.1f};"
              f"vs_direct={qi / di:.2f}x;e2e_vs_direct={qt / dt:.2f}x;"
@@ -112,3 +205,7 @@ def run(rows: C.Rows, reps: int = 3):
              f"contribs_per_s={K / (ni / 1e6):.1f};unscreened_us={qi:.1f};"
              f"vs_unscreened={ni / qi:.2f}x;e2e_vs_unscreened={nt / qt:.2f}x;"
              f"K={K};params={n_params}")
+    rows.add("service_loop/regression_gate", gt,
+             f"contribs_per_s={K / (gt / 1e6):.1f};ungated_us={qt:.1f};"
+             f"e2e_vs_ungated={gt / qt:.2f}x;ingest_vs_ungated={gi / qi:.2f}x;"
+             f"rollback_check=pass;K={K};params={n_params}")

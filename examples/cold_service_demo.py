@@ -25,6 +25,15 @@ name, and arms the daemon's content-based novelty screen
 near-duplicates were all rejected at the queue boundary — the published
 base and fused-contribution count match the duplicate-free closed form —
 while every distinct contribution was admitted.
+
+``--regress R`` launches R *saboteur* contributors and arms the daemon's
+forgetting regression gate (``--gate``, docs/observability.md).  Each
+saboteur waits for the last benign round to publish, then submits a full
+cohort of large-noise rows — uniform enough to pass the §9 MAD screen,
+harmful enough that the post-publish task probes trip.  The driver then
+verifies the gate rolled every harmful publish back on disk (the final
+base still matches the closed form), moved every planted row into
+``<root>/quarantine/``, and logged the verdicts to ``metrics.jsonl``.
 """
 import argparse
 import os
@@ -50,6 +59,26 @@ def contributor_main(args) -> int:
     import jax
 
     from repro.serve.cold_service import ContributorClient
+
+    if args.regressor:
+        # the saboteur: wait for every benign round to land, then submit a
+        # full cohort of large-noise rows.  All the rows' diff norms agree,
+        # so the §9 MAD screen admits them; the noise wrecks the probe
+        # readouts, so the regression gate must roll the publish back and
+        # quarantine every row (docs/observability.md).
+        name = f"bad{args.index}"
+        client = ContributorClient(args.root, name=name)
+        client.wait_for_iteration(args.rounds, timeout=args.timeout)
+        base = client.download_base()
+        for j in range(args.contributors):
+            rng = np.random.default_rng((4242, args.index, j))
+            harmful = jax.tree.map(
+                lambda x: x + rng.normal(0.0, 10.0, x.shape).astype(x.dtype),
+                base)
+            sub = client.submit(harmful, weight=1.0,
+                                base_iteration=args.rounds)
+            print(f"[{name}] submitted harmful row {sub}", flush=True)
+        return 0
 
     # a shadow contributor replays contributor --shadow-of's round-r
     # finetune under its own name: content the novelty screen must reject,
@@ -98,10 +127,18 @@ def driver_main(args) -> int:
     daemon_cmd = [
         sys.executable, "-m", "repro.launch.serve_repository",
         "--root", root, "--init-npz", base_npz,
-        "--min-cohort", str(args.contributors),
-        "--max-iterations", str(args.rounds),
-        "--idle-timeout", "30", "--poll", "0.02",
+        "--min-cohort", str(args.contributors), "--poll", "0.02",
     ]
+    if args.regress:
+        # no --max-iterations: the daemon would quiesce at the benign fixed
+        # point (iteration == rounds, empty queue) before the saboteurs'
+        # rows arrive — and after a rollback it sits there again.  The
+        # driver watches status for the gate verdict and asks for a clean
+        # shutdown; the idle timeout is only a backstop.
+        daemon_cmd += ["--gate", "--idle-timeout", str(args.timeout)]
+    else:
+        daemon_cmd += ["--max-iterations", str(args.rounds),
+                       "--idle-timeout", "30"]
     if args.mesh:
         daemon_cmd += ["--mesh", str(args.mesh)]
     if args.duplicates:
@@ -111,23 +148,18 @@ def driver_main(args) -> int:
                        "--sketch-window",
                        str(4 * (args.contributors + args.duplicates))]
 
-    def _spawn(i, shadow_of=None):
+    def _spawn(i, shadow_of=None, regressor=False):
         cmd = [sys.executable, os.path.abspath(__file__),
                "--role", "contributor", "--root", root, "--index", str(i),
                "--contributors", str(args.contributors),
                "--rounds", str(args.rounds), "--timeout", str(args.timeout)]
         if shadow_of is not None:
             cmd += ["--shadow-of", str(shadow_of)]
+        if regressor:
+            cmd += ["--regressor"]
         return subprocess.Popen(cmd, env=env)
 
-    t0 = time.time()
-    daemon = subprocess.Popen(daemon_cmd, env=daemon_env)
-    workers = [(f"c{i}", _spawn(i)) for i in range(args.contributors)]
-    workers += [(f"dup{i}", _spawn(i, shadow_of=i % args.contributors))
-                for i in range(args.duplicates)]
-    procs = [("daemon", daemon)] + workers
-    failed = False
-    for name, proc in procs:
+    def _wait(name, proc):
         try:
             rc = proc.wait(timeout=args.timeout)
         except subprocess.TimeoutExpired:
@@ -135,7 +167,35 @@ def driver_main(args) -> int:
             rc = "timeout"
         if rc != 0:
             print(f"[demo] {name} FAILED (rc={rc})", flush=True)
-            failed = True
+        return rc != 0
+
+    t0 = time.time()
+    daemon = subprocess.Popen(daemon_cmd, env=daemon_env)
+    workers = [(f"c{i}", _spawn(i)) for i in range(args.contributors)]
+    workers += [(f"dup{i}", _spawn(i, shadow_of=i % args.contributors))
+                for i in range(args.duplicates)]
+    workers += [(f"bad{i}", _spawn(i, regressor=True))
+                for i in range(args.regress)]
+    failed = any([_wait(name, proc) for name, proc in workers])
+    if args.regress:
+        # every saboteur row is in the queue; wait for the gate to finish
+        # quarantining them all, then ask the daemon to quiesce
+        client = ContributorClient(root)
+        want_q = args.regress * args.contributors
+        deadline = time.time() + args.timeout
+        while not failed and time.time() < deadline:
+            st = client.status()
+            if (st is not None and st["quarantined_total"] == want_q
+                    and st["iteration"] == args.rounds
+                    and st["queue_depth"] == 0):
+                break
+            time.sleep(0.1)
+        else:
+            if not failed:
+                print("[demo] gate verdict never landed", flush=True)
+                failed = True
+        daemon.terminate()
+    failed |= _wait("daemon", daemon)
     elapsed = time.time() - t0
     if failed:
         return 1
@@ -155,6 +215,24 @@ def driver_main(args) -> int:
         # (exactly one of each identical-content pair fused, so the base
         # check above already proves none slipped through)
         ok = ok and st["novelty_rejected_total"] == n_dup
+    if args.regress:
+        # the base check above already proves every harmful publish was
+        # rolled back on disk; here: every planted row sits in quarantine
+        # (never deleted, never re-fused) and the verdicts were logged
+        from repro.checkpoint.io import read_jsonl
+        n_bad = args.regress * args.contributors
+        qdir = os.path.join(root, "quarantine")
+        qfiles = os.listdir(qdir) if os.path.isdir(qdir) else []
+        events = [r.get("event") for r in
+                  read_jsonl(os.path.join(root, "metrics.jsonl"))]
+        ok = (ok and st["quarantined_total"] == n_bad
+              and len(qfiles) == n_bad
+              and st["rollbacks_total"] >= 1
+              and (args.regress > 1 or st["rollbacks_total"] == 1)
+              and "quarantine" in events and "rollback" in events)
+        print(f"[demo] gate: {st['rollbacks_total']} rollbacks, "
+              f"{st['quarantined_total']}/{n_bad} harmful rows quarantined, "
+              f"{len(events)} metrics records", flush=True)
     print(f"[demo] {args.contributors} contributors x {args.rounds} rounds "
           f"(+{args.duplicates} replayers) -> iteration {st['iteration']}, "
           f"{st['fused_contributions']} contributions fused, "
@@ -177,10 +255,16 @@ def main() -> int:
     p.add_argument("--duplicates", type=int, default=0,
                    help="launch this many replaying shadow contributors and "
                         "arm the daemon's novelty screen against them")
+    p.add_argument("--regress", type=int, default=0,
+                   help="launch this many harmful saboteur contributors and "
+                        "arm the daemon's forgetting regression gate")
     p.add_argument("--timeout", type=float, default=180.0)
     p.add_argument("--index", type=int, default=0, help="(contributor role)")
     p.add_argument("--shadow-of", type=int, default=None,
                    help="(contributor role) replay this index's submissions")
+    p.add_argument("--regressor", action="store_true",
+                   help="(contributor role) submit a harmful cohort after "
+                        "the benign rounds finish")
     args = p.parse_args()
     if args.role == "contributor":
         return contributor_main(args)

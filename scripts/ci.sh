@@ -49,6 +49,15 @@ python examples/cold_service_demo.py --contributors 2 --rounds 3 --mesh 8 \
     --duplicates 1
 python -m pytest tests/test_cold_service.py -q -m slow
 
+# regression-gate stage: the forgetting gate end-to-end on the same forced
+# 8-fake-device mesh — a planted saboteur's harmful cohort must publish,
+# trip the post-publish task probes, roll the base back on disk, and land
+# in <root>/quarantine/ while the benign closed form survives
+# (docs/observability.md).  The gate fault matrix (kill -9 inside
+# probe -> quarantine -> rollback) runs with the slow suite above.
+python examples/cold_service_demo.py --contributors 2 --rounds 3 --mesh 8 \
+    --regress 1
+
 # kernel + end-to-end fuse micro-benches (smoke scale); refreshes
 # BENCH_kernels.json (including the fuse_e2e/mesh8_sharded,
 # fuse_e2e/async_overlap, and service_loop/throughput rows) so the perf

@@ -182,6 +182,97 @@ def load_json(path: str) -> Any:
         return json.load(f)
 
 
+# -- append-only JSONL (service metrics time series) ------------------------
+#
+# The atomic tmp+replace discipline above is wrong for a *time series*: a
+# metrics log is appended hundreds of times per run and must never be
+# rewritten whole.  Instead the file is strictly append-only — one JSON
+# object per line — and readers tolerate exactly the damage a kill -9 can
+# inflict on an O_APPEND writer: a torn FINAL line (no interior line can
+# tear, because every earlier append completed before the next began).
+
+
+def append_jsonl(path: str, obj: Any, *, default=None) -> None:
+    """Append one record to a JSONL file as a single ``\\n``-terminated
+    line.  The line is built before the file is touched, so a serialization
+    error appends nothing; a crash mid-``write`` leaves at most a torn
+    final line, which ``read_jsonl``/``repair_jsonl_tail`` skip."""
+    line = json.dumps(obj, default=default)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "a") as f:
+        f.write(line + "\n")
+
+
+def read_jsonl(path: str, *, warn: bool = True) -> list:
+    """Parse a JSONL file, returning the records in order.  A torn tail —
+    an unterminated or unparseable FINAL line, the only damage an
+    append-only writer's death can cause — is skipped (with a warning by
+    default), never raised: a monitoring reader must not stall the daemon
+    or the operator.  A malformed line anywhere *else* raises ``ValueError``
+    — that is corruption, not a crash artifact.  A missing file is an
+    empty series, not an error (the reader may start before the first
+    append)."""
+    out = []
+    try:
+        with open(path) as f:
+            lines = f.readlines()
+    except FileNotFoundError:
+        return out
+    for i, line in enumerate(lines):
+        stripped = line.strip()
+        if not stripped:
+            continue
+        try:
+            rec = json.loads(stripped)
+        except json.JSONDecodeError as err:
+            if i == len(lines) - 1:
+                if warn:
+                    import warnings
+                    warnings.warn(f"{path}: skipping torn final line "
+                                  f"({len(stripped)} bytes): {err}")
+                break
+            raise ValueError(
+                f"{path}: malformed record at line {i + 1} (not the torn "
+                f"tail a crash can leave): {err}") from err
+        out.append(rec)
+    return out
+
+
+def repair_jsonl_tail(path: str) -> int:
+    """Truncate a torn final line off a JSONL file so future appends start
+    on a record boundary (appending after a torn tail would corrupt a
+    MID-file line, which ``read_jsonl`` treats as fatal).  Complete records
+    are never modified — the file stays append-only in the only sense that
+    matters.  Returns the number of bytes truncated (0 when intact); a
+    missing file is a no-op."""
+    try:
+        with open(path, "rb") as f:
+            data = f.read()
+    except FileNotFoundError:
+        return 0
+    keep = len(data)
+    while keep > 0:
+        if data[:keep].endswith(b"\n"):
+            # the final terminated line must itself parse, or it is torn
+            # too (a partial line that happened to flush its newline)
+            last = data[:keep].rstrip(b"\n").rsplit(b"\n", 1)[-1]
+            try:
+                if last.strip():
+                    json.loads(last.decode())
+                break
+            except (json.JSONDecodeError, UnicodeDecodeError):
+                keep = len(data[:keep].rstrip(b"\n").rsplit(b"\n", 1)[0])
+                if keep:
+                    keep += 1  # keep the preceding line's newline
+                continue
+        keep -= 1
+    torn = len(data) - keep
+    if torn:
+        with open(path, "r+b") as f:
+            f.truncate(keep)
+    return torn
+
+
 # -- per-shard flat format (sharded spill) ----------------------------------
 
 

@@ -992,16 +992,64 @@ class Repository:
         self._base_flat = None
         return rec
 
-    def rollback(self, to_iteration: int):
+    def rollback(self, to_iteration: int, *, keep_staged: bool = False):
         """Paper §8: "backtracking when a harmful update was done".  Any
-        in-flight fuse is finalized first; the staged (front) cohort is
-        dropped with the history."""
+        in-flight fuse is finalized first.
+
+        The restore source is the in-memory ``keep_history`` snapshot when
+        one exists, else the ``compact``-retained on-disk
+        ``base_iterNNNN.npz`` — so a service that keeps no pytree history
+        can still back out a harmful publish (the regression gate,
+        docs/observability.md).  Missing both raises without touching any
+        state.
+
+        ``keep_staged=False`` (the historical behavior) drops the staged
+        front cohort with the history; ``keep_staged=True`` preserves it —
+        staged-but-unfused rows are re-stamped to the rolled-back staging
+        iteration, so a gate-tripped publish never loses the *next*
+        cohort's admitted rows.
+
+        Crash safety (on-disk repositories): the restored base's npz
+        already exists, so the single commit point is the atomic
+        ``repository.json`` rewrite.  A kill -9 before it leaves the old
+        (pre-rollback) state for the caller to re-detect and retry — the
+        whole sequence is idempotent; a kill -9 after it reopens at the
+        rolled-back base.  The ``repo.mid_rollback`` seam sits between
+        that commit and the staging-manifest rewrite: entries persisted
+        with a pre-rollback ``staged_at`` carry no ``fusing`` mark, so
+        recovery re-stages them regardless of the stamp."""
         self.flush()  # quiesce: queued manifest/publish writes must settle
-        if not self.keep_history:
-            raise RuntimeError("rollback requires keep_history=True")
-        if not (0 <= to_iteration < len(self._snapshots)):
+        if not (0 <= to_iteration <= self.iteration):
+            raise ValueError(
+                f"cannot roll back to iteration {to_iteration} from "
+                f"{self.iteration}")
+        if self.keep_history and to_iteration < len(self._snapshots):
+            base = self._snapshots[to_iteration]
+        elif self.root is not None:
+            path = os.path.join(self.root, f"base_iter{to_iteration:04d}.npz")
+            if not os.path.exists(path):
+                raise ValueError(
+                    f"no snapshot for iteration {to_iteration}: not in "
+                    f"memory (keep_history={self.keep_history}) and "
+                    f"{os.path.basename(path)} is not on disk — was it "
+                    "compacted away? (compact keep_bases must cover the "
+                    "rollback depth)")
+            base = ckpt.load(path)
+            if self._spec is not None:
+                rspec = FlatSpec.from_tree(base)
+                if rspec.dtype != self._spec.dtype or rspec.size != self._spec.size:
+                    raise ValueError(
+                        f"{os.path.basename(path)} loads as FlatSpec(dtype="
+                        f"{rspec.dtype}, N={rspec.size}) but the repository "
+                        f"base is (dtype={self._spec.dtype}, "
+                        f"N={self._spec.size}) — refusing to roll back onto "
+                        "a mismatched base")
+        elif not self.keep_history:
+            raise RuntimeError(
+                "rollback requires keep_history=True or an on-disk root")
+        else:
             raise ValueError(f"no snapshot for iteration {to_iteration}")
-        self._base = self._snapshots[to_iteration]
+        self._base = base
         self._base_flat = None
         self._snapshots = self._snapshots[:to_iteration]
         self.history = self.history[:to_iteration]
@@ -1009,11 +1057,28 @@ class Repository:
         # the publish guard must follow the regression or later (smaller-
         # iteration) publishes would be skipped as stale
         self._persisted_iteration = min(self._persisted_iteration, to_iteration)
-        self._buffers = BufferPair()
+        if keep_staged:
+            # the front cohort survives the rollback; its manifest entries
+            # follow the new staging iteration like any other publish
+            self._refresh_front_staging()
+        else:
+            self._buffers = BufferPair()
+        if self.root:
+            # commit point: repository.json now names the rolled-back
+            # iteration (its base npz is already durable — it is the
+            # restore source, or the snapshot is re-persisted here)
+            self._persist_base()
+            faults.crash_point("repo.mid_rollback")
         if self.spill and self.root:
             with self._manifest_lock:
                 self._write_manifest()
         self._refresh_base_sketch()  # the screen's normalizer moved too
+
+    def flat_base_host(self) -> np.ndarray:
+        """The current base as a host ``[N]`` float row (the form probe
+        suites score).  Requires the flat engine."""
+        self._ensure_flat_base()
+        return np.asarray(self._spec.flatten(self._base))
 
     def snapshot(self, iteration: int):
         return self._snapshots[iteration]

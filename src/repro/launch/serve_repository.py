@@ -28,6 +28,7 @@ import sys
 from repro.checkpoint import io as ckpt
 from repro.core.repository import Repository
 from repro.serve.cold_service import AdmissionPolicy, ColdService
+from repro.serve.probes import ProbeSuite, RegressionGate
 
 
 def build_service(args) -> ColdService:
@@ -62,7 +63,15 @@ def build_service(args) -> ColdService:
         sketch_window=args.sketch_window,
         compact_keep_bases=args.compact_keep,
     )
-    return ColdService(repo, policy=policy)
+    gate = None
+    if args.gate:
+        repo._ensure_flat_base()  # the probe pool is sized to the flat base
+        gate = RegressionGate(
+            ProbeSuite(repo._spec.size, n_tasks=args.probe_tasks,
+                       n_examples=args.probe_examples,
+                       seed=args.probe_seed),
+            tolerance=args.probe_tolerance)
+    return ColdService(repo, policy=policy, gate=gate)
 
 
 def main(argv=None) -> int:
@@ -94,6 +103,20 @@ def main(argv=None) -> int:
                    help="recent admissions the novelty screen remembers")
     p.add_argument("--compact-keep", type=int, default=None, metavar="M",
                    help="compact after each publish, keeping M bases")
+    p.add_argument("--gate", action="store_true",
+                   help="arm the forgetting regression gate: probe every "
+                        "publish against the pre-fuse baseline; on a "
+                        "regression, roll the base back and quarantine the "
+                        "offending cohort (docs/observability.md)")
+    p.add_argument("--probe-tasks", type=int, default=4,
+                   help="synthetic tasks in the gate's probe suite")
+    p.add_argument("--probe-examples", type=int, default=32,
+                   help="eval examples per probe task")
+    p.add_argument("--probe-tolerance", type=float, default=0.5, metavar="T",
+                   help="per-task probe-loss increase that counts as a "
+                        "regression")
+    p.add_argument("--probe-seed", type=int, default=0,
+                   help="seed fixing the probe batches and readouts")
     p.add_argument("--poll", type=float, default=0.02, metavar="S",
                    help="idle poll interval (seconds)")
     p.add_argument("--max-iterations", type=int, default=None,
@@ -120,7 +143,9 @@ def main(argv=None) -> int:
     print(f"[cold-service] stopped at iteration {st['iteration']}: "
           f"{st['fuses']} fuses, {st['fused_contributions']} contributions "
           f"fused, {st['rejected_total']} rejected "
-          f"({st['novelty_rejected_total']} near-duplicates)", flush=True)
+          f"({st['novelty_rejected_total']} near-duplicates), "
+          f"{st['rollbacks_total']} rollbacks "
+          f"({st['quarantined_total']} submissions quarantined)", flush=True)
     return 0
 
 

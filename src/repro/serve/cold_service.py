@@ -48,12 +48,31 @@ Every ``faults.crash_point`` below names one of these windows; the
 kill-at-checkpoint harness in ``tests/_faults.py`` arms them one at a time
 and asserts the restarted daemon converges to the uninterrupted run's
 base.  See docs/service_loop.md for the full crash matrix.
+
+The forgetting regression gate
+------------------------------
+
+With ``gate=`` (a ``repro.serve.probes.RegressionGate``) armed, every
+publish is *probed* before the service builds on it: fuses run
+synchronously, the new base is scored by the fixed per-task probe suite,
+and the scores are compared against the pre-fuse baseline.  A clean
+publish refreshes the durable baseline (``gate_state.json``); a tripped
+gate **quarantines** the offending cohort's queue files into
+``<root>/quarantine/`` (never deleted, never re-fused) and **rolls the
+repository back** to the baseline base on disk.  The gate verdict is
+deterministic and the baseline durable, so a kill -9 anywhere in
+probe → rollback → quarantine is replayed on restart — the bad publish
+can never outlive the daemon that let it through.  Every cycle that
+changes state appends one record to the append-only ``metrics.jsonl``
+time series (torn tail repaired on restart).  See docs/observability.md.
 """
 from __future__ import annotations
 
 import math
 import os
+import random
 import time
+import warnings
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -61,6 +80,7 @@ import numpy as np
 
 from repro.checkpoint import io as ckpt
 from repro.core.repository import Repository
+from repro.serve.probes import RegressionGate
 from repro.utils import faults
 from repro.utils.flat import (FlatSpec, ShardedFlatSpec, row_checksum,
                               row_sketch_host)
@@ -68,6 +88,10 @@ from repro.utils.flat import (FlatSpec, ShardedFlatSpec, row_checksum,
 QUEUE_DIR = "queue"
 QUEUE_MANIFEST = "queue_manifest.json"
 STATUS_FILE = "service_status.json"
+QUARANTINE_DIR = "quarantine"
+GATE_STATE_FILE = "gate_state.json"
+METRICS_FILE = "metrics.jsonl"
+ERROR_RING = 16  # recent_errors entries kept (and persisted) per service
 
 
 def _queue_dir(root: str) -> str:
@@ -194,20 +218,31 @@ class ContributorClient:
             return 0
 
     def wait_for_iteration(self, target: int, *, timeout: float = 60.0,
-                           interval: float = 0.02) -> Dict[str, Any]:
+                           interval: float = 0.02,
+                           max_interval: float = 1.0) -> Dict[str, Any]:
         """Bounded poll until the published iteration reaches ``target``.
         Returns the status observed; raises TimeoutError at the deadline
-        (never an unbounded sleep)."""
+        (never an unbounded sleep).
+
+        Polling backs off exponentially from ``interval`` with full
+        jitter, capped at ``max_interval`` — a fleet of contributors
+        waiting on the same status file neither busy-spins the filesystem
+        nor thunders in lockstep.  Every sleep is additionally clamped to
+        the time remaining, so the total wait stays bounded by
+        ``timeout`` regardless of the interval parameters."""
         deadline = time.monotonic() + timeout
+        delay = interval
         while True:
             st = self.status()
             if st is not None and int(st["iteration"]) >= target:
                 return st
-            if time.monotonic() >= deadline:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
                 raise TimeoutError(
                     f"iteration {target} not published within {timeout}s "
                     f"(last status: {st})")
-            time.sleep(interval)
+            time.sleep(min(remaining, random.uniform(delay / 2, delay)))
+            delay = min(delay * 2, max_interval)
 
     def download_base(self):
         """Pull the latest published base pytree (Fig. 1, step 1).  The
@@ -269,7 +304,8 @@ class ColdService:
     repository root (contributors scale horizontally instead)."""
 
     def __init__(self, repo: Repository, *,
-                 policy: Optional[AdmissionPolicy] = None):
+                 policy: Optional[AdmissionPolicy] = None,
+                 gate: Optional[RegressionGate] = None):
         if not repo.root:
             raise ValueError("ColdService requires an on-disk repository")
         if not repo.spill:
@@ -278,20 +314,50 @@ class ColdService:
                 "rides the crash-recoverable staging manifest")
         self.repo = repo
         self.policy = policy or AdmissionPolicy()
+        self.gate = gate
         self.queue_dir = _queue_dir(repo.root)
+        self.quarantine_dir = os.path.join(repo.root, QUARANTINE_DIR)
         os.makedirs(self.queue_dir, exist_ok=True)
         self._qman_path = os.path.join(self.queue_dir, QUEUE_MANIFEST)
         self._status_path = os.path.join(repo.root, STATUS_FILE)
+        self._gate_path = os.path.join(repo.root, GATE_STATE_FILE)
+        self._metrics_path = os.path.join(repo.root, METRICS_FILE)
         self._entries: Dict[str, Dict[str, Any]] = {}
         self._rejects: List[Dict[str, str]] = []
         self._fused_ids = 0          # queue submissions retired as fused
         self._rejected = 0
         self._novelty_rejected = 0   # subset of _rejected: near-duplicates
+        self._quarantined = 0        # queue submissions banished by the gate
+        self._rollbacks = 0          # gate trips that backed out a publish
+        self._recent_errors: List[Dict[str, Any]] = []
         self._cohort_since: Optional[float] = None
         self._failed_cohort_size: Optional[int] = None
         self._last_error: Optional[str] = None
+        self._last_gate: Optional[Dict[str, Any]] = None
+        self._gate_baseline: Optional[Dict[str, float]] = None
+        self._gate_iteration: Optional[int] = None
+        self._cycle = 0
+        self._metrics_mark: Optional[tuple] = None
         self._stop = False
+        # a previous daemon killed mid-append leaves a torn final line;
+        # truncate it BEFORE the first append or the next record would be
+        # welded onto the fragment (mid-file corruption, which readers
+        # rightly treat as fatal rather than as a crash artifact)
+        torn = ckpt.repair_jsonl_tail(self._metrics_path)
+        if torn:
+            warnings.warn(f"metrics.jsonl: truncated a torn {torn}-byte "
+                          "tail left by a crashed daemon")
+        if gate is not None and self.policy.compact_keep_bases is not None \
+                and self.policy.compact_keep_bases < 2:
+            warnings.warn("regression gate needs the baseline base retained "
+                          "on disk — raising compact_keep_bases to 2")
+            self.policy.compact_keep_bases = 2
         self._load_queue_manifest()
+        if gate is not None:
+            # before _recover(): a publish whose gate verdict was lost to a
+            # crash must be replayed first, or _recover would GC (as fused)
+            # the very cohort the replayed verdict needs to quarantine
+            self._init_gate()
         self._recover()
         if self.policy.novelty_threshold is not None:
             # adopt (or create) the persisted sketch window before the
@@ -316,6 +382,9 @@ class ColdService:
         self._fused_ids = int(data.get("fused_total", 0))
         self._rejected = int(data.get("rejected_total", 0))
         self._novelty_rejected = int(data.get("novelty_rejected_total", 0))
+        self._quarantined = int(data.get("quarantined_total", 0))
+        self._rollbacks = int(data.get("rollbacks_total", 0))
+        self._recent_errors = list(data.get("recent_errors", []))[-ERROR_RING:]
 
     def _write_queue_manifest(self) -> None:
         ckpt.save_json_atomic(self._qman_path, {
@@ -323,6 +392,9 @@ class ColdService:
             "fused_total": self._fused_ids,
             "rejected_total": self._rejected,
             "novelty_rejected_total": self._novelty_rejected,
+            "quarantined_total": self._quarantined,
+            "rollbacks_total": self._rollbacks,
+            "recent_errors": list(self._recent_errors),
             "entries": list(self._entries.values()),
         })
 
@@ -345,6 +417,127 @@ class ColdService:
             changed = True
         if changed:
             self._write_queue_manifest()
+
+    # -- the forgetting regression gate ---------------------------------
+    def _init_gate(self) -> None:
+        """Adopt (or establish) the durable gate baseline, replaying any
+        publish whose verdict a crash swallowed.
+
+        ``gate_state.json`` records the probe scores of the last
+        known-good base and its iteration.  On start:
+
+        * state matches the repository iteration — adopt it;
+        * state lags the repository — a publish landed post-baseline whose
+          gate never ran (kill -9 between publish and verdict): re-score
+          the current base and apply the verdict NOW, exactly as the dead
+          daemon would have (probes are deterministic, so the replayed
+          verdict is the one that was lost);
+        * no state (or implausible state) — baseline = the current base.
+        """
+        state = None
+        try:
+            state = ckpt.load_json(self._gate_path)
+        except FileNotFoundError:
+            pass
+        if state is not None:
+            try:
+                it = int(state["iteration"])
+                scores = {k: float(v) for k, v in state["scores"].items()}
+            except (KeyError, TypeError, ValueError):
+                warnings.warn("gate_state.json unreadable — re-baselining "
+                              "on the current base")
+                state = None
+        if state is not None and it == self.repo.iteration:
+            self._gate_baseline, self._gate_iteration = scores, it
+            return
+        if state is not None and it < self.repo.iteration:
+            self._gate_baseline, self._gate_iteration = scores, it
+            self._apply_gate_verdict(
+                self.gate.check(scores, self.repo.flat_base_host()))
+            return
+        if state is not None:
+            warnings.warn(
+                f"gate_state.json names iteration {it} but the repository "
+                f"is at {self.repo.iteration} — re-baselining")
+        self._rebaseline_gate()
+
+    def _rebaseline_gate(self) -> None:
+        """Score the current base as the new known-good baseline and
+        persist it atomically."""
+        self._gate_baseline = self.gate.probes.score(self.repo.flat_base_host())
+        self._gate_iteration = self.repo.iteration
+        ckpt.save_json_atomic(self._gate_path, {
+            "version": 1,
+            "iteration": self._gate_iteration,
+            "scores": self._gate_baseline,
+        })
+
+    def _apply_gate_verdict(self, report) -> Dict[str, Any]:
+        """Act on a probe comparison of the just-published base.
+
+        Clean: the baseline advances to the new base (durably) and the
+        service proceeds.  Tripped: the consumed cohort's queue files are
+        **quarantined** (moved, counted, never re-fused), then the
+        repository **rolls back on disk** to the baseline iteration with
+        the staged next cohort preserved.  Quarantine strictly precedes
+        rollback: while the bad base is still current, the repository
+        iteration sits ahead of ``gate_state.json``, which is exactly the
+        signal that makes a restarted daemon replay this verdict — roll
+        back first and a crash before quarantine would leave the cohort
+        looking ordinarily fused.  Returns the gate event for metrics."""
+        faults.crash_point("service.post_probe")
+        self._last_gate = report.to_json()
+        if report.ok:
+            self._rebaseline_gate()
+            return {"event": "probe", "ok": True,
+                    "iteration": self.repo.iteration,
+                    "probe": self._last_gate}
+        bad_iteration = self.repo.iteration
+        moved = self._quarantine_consumed()
+        self._emit_metrics({
+            "event": "quarantine", "iteration": bad_iteration,
+            "quarantined": moved, "quarantined_total": self._quarantined,
+            "regressed": report.regressed, "worst_delta": report.worst,
+        })
+        faults.crash_point("service.post_quarantine")
+        self.repo.rollback(self._gate_iteration, keep_staged=True)
+        self._failed_cohort_size = None  # the staged cohort is unrelated
+        self._emit_metrics({
+            "event": "rollback", "from_iteration": bad_iteration,
+            "to_iteration": self._gate_iteration,
+            "rollbacks_total": self._rollbacks, "probe": self._last_gate,
+        })
+        return {"event": "rollback", "ok": False,
+                "from_iteration": bad_iteration,
+                "to_iteration": self._gate_iteration,
+                "quarantined": moved, "probe": self._last_gate}
+
+    def _quarantine_consumed(self) -> int:
+        """Move the consumed cohort's queue files into
+        ``<root>/quarantine/`` — file moved (atomic ``os.replace``) before
+        its entry is dropped, mirroring GC ordering (4): a crash
+        mid-quarantine leaves an orphan *entry* whose file already sits in
+        quarantine, finished by the replayed verdict; never an orphan
+        queue file that could re-fuse.  Counters ride the same queue-
+        manifest write as the entry drops, so ``quarantined_total`` (and
+        the rollback count, incremented here because a trip quarantines
+        exactly one cohort) stay exact across any crash."""
+        staged = self.repo.staged_spill_files()
+        moved = 0
+        for sub_id, e in list(self._entries.items()):
+            if f"{QUEUE_DIR}/{e['file']}" in staged:
+                continue  # next cohort, still staged: not this publish's
+            src = os.path.join(self.queue_dir, e["file"])
+            if os.path.exists(src):
+                os.makedirs(self.quarantine_dir, exist_ok=True)
+                os.replace(src, os.path.join(self.quarantine_dir, e["file"]))
+            del self._entries[sub_id]
+            self._quarantined += 1
+            moved += 1
+        if moved:
+            self._rollbacks += 1
+            self._write_queue_manifest()
+        return moved
 
     # -- admission ------------------------------------------------------
     def _scan_new(self) -> List[str]:
@@ -622,20 +815,39 @@ class ColdService:
     def _note_error(self, err: Exception) -> None:
         self._last_error = f"{type(err).__name__}: {err}"
         self._failed_cohort_size = self.repo.n_staged
+        # the ring (unlike last_error) survives the next clean cycle AND a
+        # restart: an error observed once is an error an operator can still
+        # see.  Persisted via the queue manifest — errors are rare, so the
+        # extra atomic write is off every hot path.
+        self._recent_errors = (self._recent_errors + [
+            {"t": time.time(), "error": self._last_error}])[-ERROR_RING:]
+        self._write_queue_manifest()
 
     # -- the poll cycle -------------------------------------------------
     def run_once(self) -> Dict[str, Any]:
         """One cycle of the service loop: admit arrivals, dispatch (or
-        finalize) per the cohort policy, GC consumed submissions, publish
-        status.  Returns the status dict it published."""
+        finalize) per the cohort policy, gate the publish when armed, GC
+        consumed submissions, publish status, append metrics.  Returns the
+        status dict it published."""
+        self._cycle += 1
         adm = self._admit()
         it_before = self.repo.iteration
+        gate_event = None
         if self._should_fuse():
             try:
-                # finalizes any in-flight fuse, then dispatches the staged
-                # cohort with wait=False: the device crunches while the
-                # next cycles keep draining the queue
-                self.repo.fuse_pending(wait=False)
+                if self.gate is not None:
+                    # gated: fuse synchronously.  The wait=False overlap
+                    # would let a second cohort dispatch against a base the
+                    # gate is about to roll back — its rows would be
+                    # consumed by a publish that never survives.  The gate
+                    # trades that overlap for the probe (the
+                    # service_loop/regression_gate bench bounds the cost).
+                    self.repo.fuse_pending(wait=True)
+                else:
+                    # finalizes any in-flight fuse, then dispatches the
+                    # staged cohort with wait=False: the device crunches
+                    # while the next cycles keep draining the queue
+                    self.repo.fuse_pending(wait=False)
                 self._cohort_since = None
                 self._last_error = None
                 faults.crash_point("service.post_dispatch")
@@ -651,6 +863,9 @@ class ColdService:
                 self._note_error(err)
         if self.repo.iteration != it_before:
             faults.crash_point("service.post_publish")
+            if self.gate is not None:
+                gate_event = self._apply_gate_verdict(self.gate.check(
+                    self._gate_baseline, self.repo.flat_base_host()))
             self._gc_consumed()
             if (self.policy.compact_keep_bases is not None
                     and not self.repo.inflight):
@@ -662,18 +877,74 @@ class ColdService:
         st = self.status(admitted=adm["admitted"],
                          queue_depth=adm["queue_depth"])
         ckpt.save_json_atomic(self._status_path, st)
+        self._emit_cycle_metrics(st, gate_event)
         return st
+
+    # -- metrics time series --------------------------------------------
+    def _emit_metrics(self, record: Dict[str, Any]) -> None:
+        """One record onto the append-only ``metrics.jsonl`` time series
+        (docs/observability.md).  Advisory state: appends happen after the
+        durability-critical writes of their cycle, so a crash can lose a
+        record but the series never disagrees with the repository."""
+        ckpt.append_jsonl(self._metrics_path,
+                          {"t": time.time(), **record})
+
+    def _emit_cycle_metrics(self, st: Dict[str, Any],
+                            gate_event: Optional[Dict[str, Any]]) -> None:
+        """Append the per-cycle record — for every cycle that *changed*
+        anything (publish, admission, rejection, error, gate event) plus
+        the first cycle.  Idle polls repeat the previous mark and are
+        skipped, so a long-lived daemon's series grows with events, not
+        wall time."""
+        mark = (st["iteration"], st["staged"], st["admitted"],
+                st["fused_queue_submissions"], st["rejected_total"],
+                st["quarantined_total"], st["rollbacks_total"],
+                st["last_error"])
+        if mark == self._metrics_mark and gate_event is None:
+            return
+        self._metrics_mark = mark
+        last = st["last_fuse"]
+        self._emit_metrics({
+            "event": "cycle",
+            "cycle": self._cycle,
+            "iteration": st["iteration"],
+            "queue_depth": st["queue_depth"],
+            "staged": st["staged"],
+            "inflight": st["inflight"],
+            "admitted_this_cycle": st["admitted_this_cycle"],
+            "cohort": None if last is None else last["n_contributions"],
+            "fuse_latency_s": st["fuse_latency_s"],
+            "fused_queue_submissions": st["fused_queue_submissions"],
+            "rejected_total": st["rejected_total"],
+            "novelty_rejected_total": st["novelty_rejected_total"],
+            "quarantined_total": st["quarantined_total"],
+            "rollbacks_total": st["rollbacks_total"],
+            "probe": None if gate_event is None else gate_event.get("probe"),
+            "last_error": st["last_error"],
+        })
 
     def serve_forever(self, *, poll_interval: float = 0.02,
                       max_iterations: Optional[int] = None,
-                      idle_timeout: Optional[float] = None) -> Dict[str, Any]:
+                      idle_timeout: Optional[float] = None,
+                      max_poll_interval: Optional[float] = None
+                      ) -> Dict[str, Any]:
         """Run poll cycles until stopped: by ``request_stop()`` (signal
         handlers), by the published iteration reaching ``max_iterations``
         (once quiescent), or by ``idle_timeout`` seconds without progress
         — no admission and no publish, queue empty.  An undersized cohort
         held below ``min_cohort`` counts as idle time (its rows are
         durable in the staging manifest and survive the exit).  Returns
-        the final status."""
+        the final status.
+
+        No-progress sleeps back off exponentially (with jitter) from
+        ``poll_interval`` up to ``max_poll_interval`` (default: the larger
+        of ``poll_interval`` and 0.25s) — the same cap discipline as
+        ``ContributorClient.wait_for_iteration`` — and reset on any
+        progress.  An in-flight fuse pins the sleep at ``poll_interval``
+        so its finalize is never backed off."""
+        cap = (max(poll_interval, 0.25) if max_poll_interval is None
+               else max(poll_interval, max_poll_interval))
+        delay = poll_interval
         last_progress = time.monotonic()
         last_it = self.repo.iteration
         while not self._stop:
@@ -682,6 +953,7 @@ class ColdService:
             last_it = st["iteration"]
             if progress:
                 last_progress = time.monotonic()
+                delay = poll_interval
             idle = (st["queue_depth"] == 0 and st["staged"] == 0
                     and not st["inflight"])
             if (max_iterations is not None and idle
@@ -695,7 +967,11 @@ class ColdService:
                 # nothing moved this cycle (empty queue, undersized or
                 # screen-stuck cohort): sleep instead of busy-spinning the
                 # scan/status write. An in-flight fuse finalizes next cycle.
-                time.sleep(poll_interval)
+                if st["inflight"]:
+                    time.sleep(poll_interval)
+                else:
+                    time.sleep(random.uniform(delay / 2, delay))
+                    delay = min(delay * 2, cap)
         return self.close()
 
     def request_stop(self) -> None:
@@ -743,6 +1019,10 @@ class ColdService:
             "sketch_entries": (None if self.repo.cohort_sketch is None
                                else len(self.repo.cohort_sketch)),
             "recent_rejects": list(self._rejects),
+            "gate": self.gate is not None,
+            "quarantined_total": self._quarantined,
+            "rollbacks_total": self._rollbacks,
+            "last_gate": self._last_gate,
             "fuse_latency_s": last.wall_time if last else None,
             "last_fuse": None if last is None else {
                 "iteration": last.iteration,
@@ -752,6 +1032,7 @@ class ColdService:
                 "wall_time": last.wall_time,
             },
             "last_error": self._last_error,
+            "recent_errors": list(self._recent_errors),
             "pid": os.getpid(),
             "running": not self._stop,
             "updated_at": time.time(),

@@ -1,0 +1,195 @@
+"""Post-publish task probes: the forgetting regression gate's sensor.
+
+ColD Fusion's claim is that recycling finetunes *improves* the shared
+base; the §9 MAD screen and the novelty screen reject anomalous *rows*,
+but a statistically unremarkable cohort can still publish a base that
+regresses earlier tasks ("Merging without Forgetting", Pan et al.; paper
+§8 calls for "backtracking when a harmful update was done").  The
+``ProbeSuite`` here is the cheap, fixed, per-task measurement the service
+runs after every publish; ``docs/observability.md`` documents the full
+probe → gate → rollback → quarantine lifecycle.
+
+Design constraints, in order:
+
+* **architecture-agnostic** — the service owns an arbitrary parameter
+  pytree; it cannot assume a forward function.  Each probe therefore
+  scores the *flat* ``[N]`` base directly: task ``k`` reads a fixed
+  pseudo-random slice of the base as a linear readout ``W_k ∈ R^{M x C}``
+  over the synthetic suite's motif features, and the probe score is the
+  classification loss of that readout on a frozen eval batch
+  (``repro.data.synthetic.SyntheticSuite`` features,
+  ``repro.train.losses.cls_loss``).  Any movement of the base moves the
+  scores; a *harmful* fuse (large or adversarial drift) moves them far
+  beyond the per-fuse drift of a benign cohort.
+* **deterministic** — batches, readout indices, and signs are all fixed
+  by ``(seed, task id)``; the same base always scores identically, which
+  is what lets a restarted daemon *replay* a gate verdict after a crash
+  (docs/service_loop.md, crash matrix).
+* **cheap** — a few tasks x a few dozen examples x one ``[n, M] @ [M, C]``
+  matmul: microseconds next to a fuse, so the gate can run on every
+  publish.
+
+``compare`` applies a **per-task tolerance**: the gate trips when more
+than ``max_regressed`` tasks worsened by more than ``tolerance`` loss
+versus the pre-fuse baseline.  Tolerance is on the per-fuse *delta*, not
+an absolute bar — the baseline is re-established at every clean publish,
+so benign drift never accumulates into a false trip.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import SyntheticSuite
+from repro.train.losses import accuracy, cls_loss
+from repro.utils.flat import FlatSpec
+
+
+@dataclass
+class ProbeReport:
+    """One gate comparison: per-task (baseline, score) with the verdict."""
+
+    ok: bool
+    tolerance: float
+    max_regressed: int
+    regressed: List[str]                      # task names over tolerance
+    deltas: Dict[str, float]                  # score - baseline, per task
+    scores: Dict[str, float]
+    baseline: Dict[str, float]
+
+    @property
+    def worst(self) -> float:
+        """The largest per-task loss increase (negative = all improved)."""
+        return max(self.deltas.values()) if self.deltas else 0.0
+
+    def to_json(self) -> Dict[str, Any]:
+        return {
+            "ok": self.ok,
+            "tolerance": self.tolerance,
+            "regressed": list(self.regressed),
+            "worst_delta": self.worst,
+            "scores": dict(self.scores),
+        }
+
+
+class ProbeSuite:
+    """Fixed per-task eval batches scoring a flat ``[N]`` base.
+
+    ``size`` is the flat base length (``FlatSpec.size``); everything else
+    shapes the probe pool.  All randomness is consumed at construction —
+    ``score`` is a pure deterministic function of the base afterwards.
+    """
+
+    def __init__(self, size: int, *, n_tasks: int = 4, n_examples: int = 32,
+                 seq_len: int = 16, seed: int = 0,
+                 suite: Optional[SyntheticSuite] = None):
+        if size <= 0:
+            raise ValueError(f"flat base size must be positive, got {size}")
+        if n_tasks < 1:
+            raise ValueError(f"need at least one probe task, got {n_tasks}")
+        self.size = int(size)
+        self.n_tasks = int(n_tasks)
+        self.n_examples = int(n_examples)
+        self.seq_len = int(seq_len)
+        self.seed = int(seed)
+        self.suite = suite or SyntheticSuite(
+            num_tasks=max(self.n_tasks, 1), seed=seed)
+        if self.n_tasks > self.suite.num_tasks:
+            raise ValueError(f"probe pool wants {self.n_tasks} tasks but the "
+                             f"suite has {self.suite.num_tasks}")
+        self._tasks: List[Tuple[str, np.ndarray, np.ndarray,
+                                np.ndarray, np.ndarray]] = []
+        for t in range(self.n_tasks):
+            spec = self.suite.tasks[t]
+            ds = self.suite.dataset(t, 1, self.n_examples, self.seq_len,
+                                    split_seed=self.seed)
+            toks, labels = ds["x_test"], ds["y_test"]
+            # motif features are model-independent: the probe's "encoder"
+            # is the suite's ground-truth Φ, so the score isolates what the
+            # READOUT — a fixed slice of the base — does to the task
+            feats = self.suite.phi[toks].mean(axis=1).astype(np.float32)
+            rng = np.random.default_rng((self.seed, spec.seed, 11))
+            m, c = self.suite.num_motifs, spec.num_classes
+            idx = rng.integers(0, self.size, size=m * c)
+            sign = rng.choice(np.asarray([-1.0, 1.0], np.float32), size=m * c)
+            self._tasks.append((spec.name, feats, labels, idx, sign))
+
+    # -- scoring --------------------------------------------------------
+    def _flat(self, base) -> np.ndarray:
+        """Accept a flat ``[N]`` row or a parameter pytree."""
+        arr = base if isinstance(base, (np.ndarray, jnp.ndarray)) else None
+        if arr is None or getattr(arr, "ndim", None) != 1:
+            arr = FlatSpec.from_tree(base).flatten(base)
+        arr = np.asarray(arr, np.float32)
+        if arr.shape != (self.size,):
+            raise ValueError(f"probe suite was built for flat size "
+                             f"{self.size}, got base of shape {arr.shape}")
+        return arr
+
+    def score(self, base) -> Dict[str, float]:
+        """Per-task probe losses of a base (flat ``[N]`` row or pytree).
+        Deterministic: the same base always produces the same scores."""
+        flat = self._flat(base)
+        out: Dict[str, float] = {}
+        for name, feats, labels, idx, sign in self._tasks:
+            m = feats.shape[1]
+            w = (flat[idx] * sign).reshape(m, -1)
+            logits = feats @ w
+            out[name] = float(cls_loss(jnp.asarray(logits),
+                                       jnp.asarray(labels)))
+        return out
+
+    def accuracies(self, base) -> Dict[str, float]:
+        """Per-task probe accuracies (observability only — the gate
+        compares losses, which move smoothly under small drift)."""
+        flat = self._flat(base)
+        out: Dict[str, float] = {}
+        for name, feats, labels, idx, sign in self._tasks:
+            m = feats.shape[1]
+            w = (flat[idx] * sign).reshape(m, -1)
+            out[name] = float(accuracy(jnp.asarray(feats @ w),
+                                       jnp.asarray(labels)))
+        return out
+
+    # -- gate decision --------------------------------------------------
+    def compare(self, baseline: Dict[str, float], scores: Dict[str, float],
+                *, tolerance: float = 0.5,
+                max_regressed: int = 0) -> ProbeReport:
+        """Per-task tolerance comparison: a task *regressed* when its loss
+        rose more than ``tolerance`` over ``baseline``; the gate is ``ok``
+        while at most ``max_regressed`` tasks regressed.  Tasks absent
+        from ``baseline`` (a probe-pool reconfiguration mid-run) are
+        skipped rather than treated as regressions."""
+        deltas = {name: scores[name] - baseline[name]
+                  for name in scores if name in baseline}
+        regressed = [name for name, d in deltas.items() if d > tolerance]
+        return ProbeReport(
+            ok=len(regressed) <= max_regressed,
+            tolerance=float(tolerance),
+            max_regressed=int(max_regressed),
+            regressed=sorted(regressed),
+            deltas=deltas,
+            scores=dict(scores),
+            baseline=dict(baseline),
+        )
+
+
+@dataclass
+class RegressionGate:
+    """The service's gate configuration: a probe pool plus the trip rule.
+    Built by ``repro.launch.serve_repository`` from the ``--gate`` flags
+    and handed to ``ColdService(gate=...)``."""
+
+    probes: ProbeSuite
+    tolerance: float = 0.5
+    max_regressed: int = 0
+
+    def check(self, baseline: Dict[str, float], base) -> ProbeReport:
+        """Score ``base`` and compare against ``baseline`` under this
+        gate's trip rule."""
+        return self.probes.compare(baseline, self.probes.score(base),
+                                   tolerance=self.tolerance,
+                                   max_regressed=self.max_regressed)

@@ -86,6 +86,45 @@ def test_rollback():
     np.testing.assert_allclose(np.asarray(repo.download()["w"]), 2.0)
 
 
+def test_rollback_on_disk_without_history(tmp_path):
+    """Crash-safe rollback: with keep_history=False the base is restored
+    from the compact-retained base_iterNNNN.npz, the manifest and
+    iteration update atomically, and a reopened repository agrees."""
+    root = str(tmp_path / "repo")
+    repo = Repository(_m(0), root=root, screen=False)
+    repo.upload(_m(2)); repo.fuse_pending()
+    repo.upload(_m(4)); repo.fuse_pending()
+    assert repo.iteration == 2 and not repo.keep_history
+    repo.rollback(1)
+    assert repo.iteration == 1
+    np.testing.assert_allclose(np.asarray(repo.download()["w"]), 2.0)
+    again = Repository.open(root)
+    assert again.iteration == 1
+    np.testing.assert_allclose(np.asarray(again.download()["w"]), 2.0)
+    # rolling forward again from the restored base still works
+    again.upload(_m(6)); again.fuse_pending()
+    np.testing.assert_allclose(np.asarray(again.download()["w"]), 6.0)
+
+
+def test_rollback_validations(tmp_path):
+    root = str(tmp_path / "repo")
+    repo = Repository(_m(0), root=root, screen=False)
+    repo.upload(_m(2)); repo.fuse_pending()
+    with pytest.raises(ValueError, match="iteration"):
+        repo.rollback(5)
+    with pytest.raises(ValueError, match="iteration"):
+        repo.rollback(-1)
+    # a compacted-away base cannot be a rollback target
+    os.remove(os.path.join(root, "base_iter0000.npz"))
+    with pytest.raises(ValueError, match="keep_bases"):
+        repo.rollback(0)
+    # no root and no history: rollback has nothing to restore from
+    mem = Repository(_m(0), screen=False)
+    mem.upload(_m(2)); mem.fuse_pending()
+    with pytest.raises(RuntimeError, match="keep_history"):
+        mem.rollback(0)
+
+
 def test_disk_persistence(tmp_path):
     root = str(tmp_path / "repo")
     repo = Repository(_m(0), root=root)
