@@ -13,6 +13,13 @@ expectation and reports queue throughput.
   PYTHONPATH=src python examples/cold_service_demo.py
   PYTHONPATH=src python examples/cold_service_demo.py --mesh 8   # sharded daemon
   PYTHONPATH=src python examples/cold_service_demo.py --duplicates 1  # novelty screen
+  PYTHONPATH=src python examples/cold_service_demo.py --compress  # delta codec
+
+With ``--compress`` every contributor enqueues its round as a
+delta-compressed submission (top-k int8 payload against the base it just
+downloaded, docs/service_loop.md) instead of a dense row; the daemon
+decodes inside the fused kernel and the driver checks the same closed
+form — compression must be invisible to the result.
 
 With ``--mesh N`` the daemon opens the repository on an N-device mesh
 (the driver forces the fake host-device count for that child); the
@@ -100,9 +107,19 @@ def contributor_main(args) -> int:
         else:
             base = client.download_base()
             finetuned = jax.tree.map(lambda x: x + delta, base)
-        sub = client.submit(finetuned, weight=1.0, base_iteration=r)
+        if args.compress and not shadow:
+            # a uniform finetune delta has every entry live, so keep the
+            # whole block (k_per_block=LANE) — the only loss is int8
+            # quantization, invisible at the driver's closed-form atol
+            from repro.utils.flat import LANE
+            sub = client.submit(finetuned, weight=1.0, base_iteration=r,
+                                compress=True, base=base, k_per_block=LANE)
+        else:
+            sub = client.submit(finetuned, weight=1.0, base_iteration=r)
         print(f"[{name}] round {r}: submitted {sub} "
-              f"(delta=+{delta:.2f}{' REPLAY' if shadow else ''})", flush=True)
+              f"(delta=+{delta:.2f}{' REPLAY' if shadow else ''}"
+              f"{' COMPRESSED' if args.compress and not shadow else ''})",
+              flush=True)
     return 0
 
 
@@ -157,6 +174,8 @@ def driver_main(args) -> int:
             cmd += ["--shadow-of", str(shadow_of)]
         if regressor:
             cmd += ["--regressor"]
+        if args.compress:
+            cmd += ["--compress"]
         return subprocess.Popen(cmd, env=env)
 
     def _wait(name, proc):
@@ -258,6 +277,10 @@ def main() -> int:
     p.add_argument("--regress", type=int, default=0,
                    help="launch this many harmful saboteur contributors and "
                         "arm the daemon's forgetting regression gate")
+    p.add_argument("--compress", action="store_true",
+                   help="contributors enqueue delta-compressed submissions "
+                        "(top-k int8 vs their downloaded base) instead of "
+                        "dense rows")
     p.add_argument("--timeout", type=float, default=180.0)
     p.add_argument("--index", type=int, default=0, help="(contributor role)")
     p.add_argument("--shadow-of", type=int, default=None,

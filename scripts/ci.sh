@@ -18,15 +18,16 @@ python -m pytest -q
 # links, fenced python blocks import-check against src/
 python scripts/check_docs.py
 
-# multi-device smoke: the sharded-fuse + novelty-sketch tests on a real
-# (fake-)8-device mesh — under plain pytest above they ran on the single
-# CPU device.  The sketch tests pin the sharded one-psum sketch (the
-# novelty screen's distributed path) against the single-device oracle.
-# The slow subprocess test forces its own 8 devices and already ran
-# above: skip it.
+# multi-device smoke: the sharded-fuse + novelty-sketch + delta-codec
+# tests on a real (fake-)8-device mesh — under plain pytest above they ran
+# on the single CPU device.  The sketch tests pin the sharded one-psum
+# sketch (the novelty screen's distributed path) against the single-device
+# oracle; the codec tests pin the sharded decode+accumulate fuse the same
+# way (one psum, no all-gather).  The slow subprocess test forces its own
+# 8 devices and already ran above: skip it.
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     python -m pytest tests/test_sharded_fuse.py tests/test_sketch.py \
-    -q -m "not slow"
+    tests/test_delta_codec.py -q -m "not slow"
 
 # crash-recovery under the forced 8-fake-device config: kill-and-reopen
 # spill recovery (per-shard placement, manifest validation) with the mesh
@@ -47,6 +48,11 @@ XLA_FLAGS=--xla_force_host_platform_device_count=8 \
 # window, docs/service_loop.md)
 python examples/cold_service_demo.py --contributors 2 --rounds 3 --mesh 8 \
     --duplicates 1
+# ... and the delta-compressed round: contributors enqueue top-k int8
+# payloads against their downloaded base; the sharded daemon decodes
+# inside the fused kernel and the same closed form must come out
+python examples/cold_service_demo.py --contributors 2 --rounds 3 --mesh 8 \
+    --compress
 python -m pytest tests/test_cold_service.py -q -m slow
 
 # regression-gate stage: the forgetting gate end-to-end on the same forced
@@ -60,8 +66,10 @@ python examples/cold_service_demo.py --contributors 2 --rounds 3 --mesh 8 \
 
 # kernel + end-to-end fuse micro-benches (smoke scale); refreshes
 # BENCH_kernels.json (including the fuse_e2e/mesh8_sharded,
-# fuse_e2e/async_overlap, and service_loop/throughput rows) so the perf
-# trajectory stays current
+# fuse_e2e/async_overlap, service_loop/throughput, and
+# service_loop/delta_compression rows — the latter asserts >=5x queue-bytes
+# reduction and codec parity before posting) so the perf trajectory stays
+# current
 REPRO_BENCH_SCALE=quick python -m benchmarks.run --only kernels,fuse_e2e,service_loop
 
 # examples cannot silently rot: both must run end-to-end at dry-run scale

@@ -34,7 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.utils.flat import FlatSpec, ShardedFlatSpec
+from repro.utils.flat import DeltaPayload, FlatSpec, ShardedFlatSpec
 from repro.utils.pytree import path_str
 
 _SEP = "::"
@@ -44,6 +44,10 @@ _FLAT_SPEC = "__flat_spec__"
 _FLAT_SSPEC = "__flat_shard_spec__"
 _FLAT_EXTRA = "__flat_extra__"  # free-form JSON rider (queue submissions)
 _SHARD_FMT = "__flat_shard_{:04d}__"
+_DELTA_SPEC = "__delta_spec__"      # codec geometry (compressed submissions)
+_DELTA_IDX = "__delta_indices__"    # int16 [nb, kb] (or [S, nb, kb])
+_DELTA_VAL = "__delta_values__"     # int8  [nb, kb] (or [S, nb, kb])
+_DELTA_SCL = "__delta_scales__"     # f32   [nb]     (or [S, nb])
 
 
 def _flatten(tree) -> Dict[str, np.ndarray]:
@@ -356,8 +360,10 @@ class FlatShardReader:
 def flat_row_meta(path: str) -> Dict[str, Any]:
     """Peek a spilled row's layout without touching its buffer entries:
     returns the ``FlatSpec`` JSON dict plus ``{"sharded": bool}`` (and the
-    ``ShardedFlatSpec`` JSON under ``"shard_spec"`` when sharded).  Used by
-    crash recovery to validate manifest entries cheaply."""
+    ``ShardedFlatSpec`` JSON under ``"shard_spec"`` when sharded).  A
+    delta-compressed row (``save_flat_delta``) additionally carries
+    ``{"compressed": True, "delta_spec": {...}}``.  Used by crash recovery
+    to validate manifest entries cheaply."""
     with np.load(path) as data:
         if _FLAT_SPEC not in data.files:
             raise ValueError(f"{path} is not a flat checkpoint")
@@ -365,6 +371,119 @@ def flat_row_meta(path: str) -> Dict[str, Any]:
         meta["sharded"] = _FLAT_SSPEC in data.files
         if meta["sharded"]:
             meta["shard_spec"] = json.loads(bytes(data[_FLAT_SSPEC]).decode())
+        meta["compressed"] = _DELTA_SPEC in data.files
+        if meta["compressed"]:
+            meta["delta_spec"] = json.loads(bytes(data[_DELTA_SPEC]).decode())
         if _FLAT_EXTRA in data.files:
             meta["extra"] = json.loads(bytes(data[_FLAT_EXTRA]).decode())
     return meta
+
+
+# -- delta-compressed flat format (compressed queue submissions) ------------
+#
+# A compressed submission never carries the dense [N] row: it persists the
+# DeltaPayload arrays (per-block top-k int16 offsets, int8 values, f32
+# scales — repro.utils.flat.delta_encode) plus the SAME FlatSpec/
+# ShardedFlatSpec layout entries the dense formats write, so
+# ``flat_row_meta`` validation and by-reference ingest work unchanged.  The
+# sharded variant stacks the S per-shard payloads along a leading axis
+# (every shard has identical codec geometry: shard_len is uniform by
+# construction), one npz entry per array — not per shard — keeping the
+# file layout O(1) in S.
+
+
+def save_flat_delta(path: str, payloads, spec: FlatSpec, *,
+                    sspec: Optional[ShardedFlatSpec] = None,
+                    extra: Optional[Dict[str, Any]] = None) -> None:
+    """Persist a compressed contribution: one ``DeltaPayload`` (whole-row)
+    or a list of S per-shard payloads with their ``sspec`` (the compressed
+    analog of ``save_flat``/``save_flat_shards``).  Written atomically;
+    ``extra`` is the same free-form JSON rider."""
+    if isinstance(payloads, DeltaPayload):
+        if sspec is not None:
+            raise ValueError("whole-row payload with a shard spec")
+        plist = [payloads]
+    else:
+        plist = list(payloads)
+        if sspec is None:
+            raise ValueError("a payload list requires its ShardedFlatSpec")
+        if len(plist) != sspec.n_shards:
+            raise ValueError(
+                f"{len(plist)} payloads != n_shards {sspec.n_shards}")
+    p0 = plist[0]
+    for p in plist:
+        if (p.size, p.block, p.indices.shape) != \
+                (p0.size, p0.block, p0.indices.shape):
+            raise ValueError("per-shard payload geometries differ")
+    dspec = {
+        "version": 1,
+        "size": p0.size,
+        "block": p0.block,
+        "k_per_block": p0.k_per_block,
+        "sharded": sspec is not None,
+    }
+    arrays: Dict[str, np.ndarray] = {
+        _FLAT_SPEC: _spec_entry(spec),
+        _DELTA_SPEC: np.frombuffer(
+            json.dumps(dspec).encode(), dtype=np.uint8),
+        _DELTA_IDX: np.stack([p.indices for p in plist]),
+        _DELTA_VAL: np.stack([p.values for p in plist]),
+        _DELTA_SCL: np.stack([p.scales for p in plist]),
+    }
+    if sspec is None:
+        for k in (_DELTA_IDX, _DELTA_VAL, _DELTA_SCL):
+            arrays[k] = arrays[k][0]
+    else:
+        arrays[_FLAT_SSPEC] = np.frombuffer(
+            json.dumps(sspec.to_json()).encode(), dtype=np.uint8)
+    if extra is not None:
+        arrays[_FLAT_EXTRA] = _extra_entry(extra)
+    _atomic_savez(path, arrays)
+
+
+def load_flat_delta(path: str) -> Tuple[list, Dict[str, Any]]:
+    """Load a ``save_flat_delta`` file: returns (payloads, meta) where
+    ``payloads`` is the list of ``DeltaPayload`` (length 1 whole-row, S
+    sharded) and ``meta`` is the ``flat_row_meta`` dict.  Every geometry
+    mismatch — wrong dtypes, inconsistent shapes, out-of-range offsets —
+    raises (``DeltaPayload`` validates on construction), as does any zip-
+    or entry-level truncation: a torn compressed file is a rejection,
+    never a stall or a silent mis-decode."""
+    meta = flat_row_meta(path)
+    if not meta.get("compressed"):
+        raise ValueError(f"{path} is not a compressed flat checkpoint")
+    dspec = meta["delta_spec"]
+    size, block = int(dspec["size"]), int(dspec["block"])
+    kb = int(dspec["k_per_block"])
+    sharded = bool(dspec["sharded"])
+    with np.load(path) as data:
+        for k in (_DELTA_IDX, _DELTA_VAL, _DELTA_SCL):
+            if k not in data.files:
+                raise ValueError(f"{path}: missing delta entry {k}")
+        idx, val, scl = data[_DELTA_IDX], data[_DELTA_VAL], data[_DELTA_SCL]
+    if not sharded:
+        idx, val, scl = idx[None], val[None], scl[None]
+    n = idx.shape[0]
+    if sharded:
+        ss = ShardedFlatSpec.from_json(meta["shard_spec"])
+        if n != ss.n_shards:
+            raise ValueError(
+                f"{path}: {n} payloads != n_shards {ss.n_shards}")
+        if size != ss.shard_len:
+            raise ValueError(
+                f"{path}: payload size {size} != shard_len {ss.shard_len}")
+    if val.shape[0] != n or scl.shape[0] != n:
+        raise ValueError(f"{path}: delta entry leading dims disagree")
+    payloads = []
+    for i in range(n):
+        p = DeltaPayload(idx[i], val[i], scl[i], size, block)
+        if p.k_per_block != kb:
+            raise ValueError(
+                f"{path}: k_per_block {p.k_per_block} != declared {kb}")
+        payloads.append(p)
+    return payloads, meta
+
+
+def is_flat_compressed(path: str) -> bool:
+    with np.load(path) as data:
+        return _DELTA_SPEC in data.files

@@ -78,7 +78,8 @@ from repro.launch import sharding as SH
 from repro.utils import faults
 from repro.utils.flat import (SKETCH_BUCKETS, BufferPair, CohortSketch,
                               FlatSpec, ShardedFlatSpec, StagedBuffer,
-                              StagingSide)
+                              StagingSide, delta_decode, delta_decode_sharded,
+                              delta_entries, sketch_apply_delta)
 
 # operators the streaming flat engine covers; everything else (fisher, ties)
 # falls back to the per-leaf pytree engine
@@ -109,7 +110,9 @@ class PendingFusion:
     ``fuse_pending``/``download``) finalizes it; ``record`` is set once the
     publish happened."""
 
-    stage: Optional[StagedBuffer]  # kept only while a screen re-pass may need it
+    # StagedBuffer (dense cohort) or MixedStage (compressed rows present);
+    # kept only while a screen re-pass may need it
+    stage: Optional[Any]
     fused: jax.Array
     sq: jax.Array
     weights: jax.Array
@@ -120,6 +123,31 @@ class PendingFusion:
     @property
     def done(self) -> bool:
         return self.record is not None
+
+
+@dataclass
+class MixedStage:
+    """Fuse operand for a cohort that mixes dense staged rows with
+    delta-compressed submissions (docs/service_loop.md).  ``dense`` holds
+    the stacked dense rows (cohort positions ``dense_pos``); the
+    compressed rows ride as their stacked codec arrays (``comp_pos``) and
+    are decoded *inside* the fuse (``ops.fuse_flat_compressed``) — a dense
+    ``[N]`` row per compressed contributor never materializes.  Kept as
+    the ``PendingFusion`` stage so the §9 screen's zero-weight re-pass can
+    re-fuse with adjusted cohort-order weights, exactly like a dense
+    ``StagedBuffer``."""
+
+    dense: Optional[StagedBuffer]
+    indices: jax.Array   # [C, nb, kb] int16 ([C, S, nb, kb] sharded)
+    values: jax.Array    # [C, nb, kb] int8
+    scales: jax.Array    # [C, nb] f32 ([C, S, nb] sharded)
+    block: int
+    dense_pos: np.ndarray  # cohort positions of the dense rows, in order
+    comp_pos: np.ndarray   # cohort positions of the compressed rows
+
+    @property
+    def k(self) -> int:
+        return len(self.dense_pos) + len(self.comp_pos)
 
 
 @functools.lru_cache(maxsize=32)
@@ -303,6 +331,16 @@ class Repository:
         fut = self._row_futures.pop(p, None)
         if fut is not None:
             fut.result()  # wait for (and surface errors from) THIS row's write
+        # compressed before sharded: a sharded compressed file carries the
+        # shard-spec entry too, and FlatShardReader has no buffers to read
+        if ckpt.is_flat_compressed(p):
+            # generic (non-fuse) access to a compressed submission — e.g.
+            # recovery without spill, or a layout-mismatch restage: decode
+            # the dense row against the current base.  The fuse itself
+            # never takes this path (_stage_mixed keeps payloads sparse).
+            payloads, meta = ckpt.load_flat_delta(p)
+            row = self._decode_compressed_dense(payloads, meta)
+            return self._stage_row(row) if self.mesh is not None else row
         if ckpt.is_flat_sharded(p):
             with ckpt.FlatShardReader(p) as r:
                 if self.mesh is not None and r.sspec == self._sspec:
@@ -329,11 +367,67 @@ class Repository:
         return stack(*rows)
 
     def _fuse_flat(self, stage, weights, alpha, *, donate: bool):
+        if isinstance(stage, MixedStage):
+            return self._fuse_mixed(stage, weights, alpha)
         if self.mesh is not None:
             return ops.fuse_flat_sharded(
                 self._base_flat, stage, weights, alpha,
                 mesh=self.mesh, axes=self.mesh_axes)
         return ops.fuse_flat(self._base_flat, stage, weights, alpha, donate=donate)
+
+    def _fuse_mixed(self, ms: MixedStage, weights, alpha):
+        """Screen+fuse a mixed cohort: compressed deltas are decoded and
+        accumulated on device in the same pass as the fuse — never into a
+        dense ``[N]`` row per contributor — and the sq statistics come
+        back scattered to cohort order, so ``_finalize_flat``'s screen and
+        zero-weight re-pass see the same ``[K]`` layout as a dense fuse.
+        Never donates: the payload stacks must survive a re-pass."""
+        w = jnp.asarray(weights, jnp.float32)
+        dpos = jnp.asarray(ms.dense_pos, jnp.int32)
+        cpos = jnp.asarray(ms.comp_pos, jnp.int32)
+        wc = jnp.take(w, cpos)
+        dense = ms.dense if len(ms.dense_pos) else None
+        wd = jnp.take(w, dpos) if len(ms.dense_pos) else None
+        if self.mesh is not None:
+            fused, sq_split = ops.fuse_flat_compressed_sharded(
+                self._base_flat, ms.indices, ms.values, ms.scales, wc, alpha,
+                mesh=self.mesh, axes=self.mesh_axes, block=ms.block,
+                dense=dense, dense_weights=wd)
+        else:
+            fused, sq_split = ops.fuse_flat_compressed(
+                self._base_flat, ms.indices, ms.values, ms.scales, wc, alpha,
+                block=ms.block, dense=dense, dense_weights=wd)
+        # sq_split is (dense..., compressed...); scatter back to cohort order
+        perm = jnp.concatenate([dpos, cpos])
+        sq = jnp.zeros((ms.k,), jnp.float32).at[perm].set(sq_split)
+        return fused, sq
+
+    def _decode_compressed_dense(self, payloads, meta, *, base=None):
+        """Slow-path decode of a compressed submission to a dense host
+        ``[N]`` row (layout/geometry fallbacks only): Δ scattered dense,
+        plus ``base`` (default: the current base)."""
+        if base is None:
+            base = self.flat_base_host()
+        if meta.get("sharded") and meta.get("shard_spec"):
+            ss = ShardedFlatSpec.from_json(meta["shard_spec"])
+            return jnp.asarray(delta_decode_sharded(payloads, ss, base))
+        return jnp.asarray(delta_decode(payloads[0], base))
+
+    def _decode_vs_declared(self, payloads, meta, declared: int):
+        """Vintage-mismatch fallback (belt and braces under the service's
+        admission pin): decode against the base the rider *declared*,
+        loaded from its retained ``base_iterNNNN.npz`` — a compressed row
+        is never decoded against a base it was not computed from."""
+        path = (os.path.join(self.root, f"base_iter{declared:04d}.npz")
+                if self.root else None)
+        if path is None or not os.path.exists(path):
+            raise ValueError(
+                f"compressed row declares base_iteration={declared} but the "
+                f"repository is at iteration {self.iteration} and "
+                f"base_iter{declared:04d}.npz is not on disk — cannot decode "
+                "(compact keep_bases must cover the declared vintage)")
+        base = np.asarray(self._spec.flatten(ckpt.load(path)))
+        return self._decode_compressed_dense(payloads, meta, base=base)
 
     def _publish_flat(self, fused: jax.Array):
         """Fused flat buffer -> the new base pytree (+ cached flat form)."""
@@ -509,6 +603,17 @@ class Repository:
         }
         if meta.get("shard_spec"):
             entry["shard_spec"] = meta["shard_spec"]
+        if meta.get("compressed"):
+            # by-reference compressed staging: the queue npz holds the
+            # DeltaPayload(s), decoded only at dispatch.  The declared
+            # vintage rides in the manifest so dispatch and recovery can
+            # re-check it (a delta only means anything against the exact
+            # base it was computed from — docs/service_loop.md).
+            entry["compressed"] = True
+            entry["codec"] = meta.get("delta_spec")
+            bi = (meta.get("extra") or {}).get("base_iteration")
+            if bi is not None:
+                entry["base_iteration"] = int(bi)
         side.rows.append(path)
         side.fishers.append(None)
         side.weights.append(weight)
@@ -600,12 +705,56 @@ class Repository:
         other unreadable submission.  ``meta=`` reuses a pre-read
         ``flat_row_meta`` peek (skips re-opening the npz header)."""
         self._ensure_flat_base()
+        compressed = (ckpt.is_flat_compressed(path) if meta is None
+                      else bool(meta.get("compressed")))
+        if compressed:
+            return self.sketch_delta_file(path)
         sharded = (ckpt.is_flat_sharded(path) if meta is None
                    else bool(meta["sharded"]))
         if not sharded:
             row, _ = ckpt.load_flat(path)
             return self._sketch_of_staged(row)
         return self._sketch_of_staged(self._load_staged_row(path))
+
+    def sketch_delta_file(self, path: str, *,
+                          meta: Optional[Dict[str, Any]] = None) -> np.ndarray:
+        """Content sketch of a delta-compressed submission without ever
+        materializing its dense row: the current base's sketch is
+        corrected bucket-wise from the sparse decoded delta
+        (``repro.utils.flat.sketch_apply_delta``), reading base values
+        only at the delta's own indices.  Matches ``row_sketch_host`` of
+        the decoded row up to float rounding, so the novelty screen's
+        distances are interchangeable between dense and compressed
+        submissions."""
+        del meta  # the payload load re-reads the header regardless
+        self._ensure_flat_base()
+        payloads, dmeta = ckpt.load_flat_delta(path)
+        nb = (self.cohort_sketch.n_buckets if self.cohort_sketch is not None
+              else SKETCH_BUCKETS)
+        if (self.cohort_sketch is not None
+                and self.cohort_sketch.base is not None):
+            base_sk = np.asarray(self.cohort_sketch.base, np.float64)
+        else:
+            base_sk = self._sketch_of_staged(self._base_flat).astype(np.float64)
+        gis: List[np.ndarray] = []
+        dvs: List[np.ndarray] = []
+        if bool(dmeta["delta_spec"].get("sharded")):
+            ss = ShardedFlatSpec.from_json(dmeta["shard_spec"])
+            for s, p in enumerate(payloads):
+                li, dv = delta_entries(p)
+                gi = ss.global_of(s, li)
+                keep = gi < self._spec.size  # drop block-grid padding slots
+                gis.append(gi[keep])
+                dvs.append(dv[keep])
+        else:
+            li, dv = delta_entries(payloads[0])
+            gis.append(np.asarray(li, np.int64))
+            dvs.append(dv)
+        gi = np.concatenate(gis) if gis else np.zeros((0,), np.int64)
+        dv = np.concatenate(dvs) if dvs else np.zeros((0,), np.float32)
+        base_at = self.flat_base_host()[gi]
+        sk = sketch_apply_delta(base_sk, gi, dv, base_at, n_buckets=nb)
+        return np.asarray(sk, np.float32)
 
     def contribute_async(self, params, *, alpha: Optional[float] = None) -> FusionRecord:
         """Asynchronous contribution (paper §8: "it would be beneficial if
@@ -753,12 +902,12 @@ class Repository:
         alive (no donation) only if a screening re-pass might need it."""
         self._ensure_flat_base()
         K = len(back.rows)
-        rows = [self._load_staged_row(p) for p in back.rows]
-        stage = StagedBuffer(self._stack_stage(rows))
-        del rows
+        stage = self._stage_cohort(back)
         w = self._cohort_weights(K, back.weights)
         alpha = self._flat_alpha(K)
-        fused, sq = self._fuse_flat(stage, w, alpha, donate=not self.screen)
+        mixed = isinstance(stage, MixedStage)
+        fused, sq = self._fuse_flat(stage, w, alpha,
+                                    donate=not self.screen and not mixed)
         try:
             # start moving the [K] screening statistic to the host as soon
             # as the fuse produces it, so finalize's device_get is a
@@ -773,6 +922,94 @@ class Repository:
         return PendingFusion(
             stage=stage if self.screen else None,
             fused=fused, sq=sq, weights=w, k=K, t0=t0)
+
+    def _stage_cohort(self, back: StagingSide):
+        """Build the fuse operand for the back cohort.  All-dense cohorts
+        take the historical path unchanged (a stacked ``StagedBuffer``,
+        donation-eligible); any delta-compressed submission among the rows
+        yields a ``MixedStage`` instead."""
+        if any(isinstance(p, str) and ckpt.is_flat_compressed(p)
+               for p in back.rows):
+            return self._stage_mixed(back)
+        rows = [self._load_staged_row(p) for p in back.rows]
+        return StagedBuffer(self._stack_stage(rows))
+
+    def _stage_mixed(self, back: StagingSide):
+        """Partition the back cohort into dense rows and compressed payload
+        stacks.  Compressed rows ride sparse on the fast path only when
+        their declared vintage matches the current iteration (the
+        service's admission pin; re-checked here belt-and-braces), their
+        layout matches the repository (sharded payloads on a matching
+        mesh, whole-row payloads single-device), and their codec geometry
+        agrees across the cohort — anything else host-decodes to a dense
+        row against the correct base and joins the dense side."""
+        entries = {e.get("file"): e for e in back.manifest}
+        root = os.path.abspath(self.root) if self.root else None
+        dense_rows: List[Any] = []
+        dense_pos: List[int] = []
+        payload_sets: List[list] = []
+        comp_pos: List[int] = []
+        geom = None
+        for i, p in enumerate(back.rows):
+            if not (isinstance(p, str) and ckpt.is_flat_compressed(p)):
+                dense_rows.append(self._load_staged_row(p))
+                dense_pos.append(i)
+                continue
+            fut = self._row_futures.pop(p, None)
+            if fut is not None:
+                fut.result()
+            payloads, meta = ckpt.load_flat_delta(p)
+            rel = (os.path.relpath(p, root).replace(os.sep, "/")
+                   if root else None)
+            entry = entries.get(rel, {})
+            declared = entry.get(
+                "base_iteration",
+                (meta.get("extra") or {}).get("base_iteration"))
+            if declared is not None and int(declared) != self.iteration:
+                dense_rows.append(
+                    self._decode_vs_declared(payloads, meta, int(declared)))
+                dense_pos.append(i)
+                continue
+            sharded_payload = bool(meta["delta_spec"].get("sharded"))
+            if self.mesh is not None:
+                fast = (sharded_payload
+                        and meta.get("shard_spec") is not None
+                        and ShardedFlatSpec.from_json(meta["shard_spec"])
+                        == self._sspec)
+            else:
+                fast = not sharded_payload
+            p0 = payloads[0]
+            this = (len(payloads), p0.block, p0.k_per_block, p0.n_blocks)
+            if fast and geom is None:
+                geom = this
+            elif this != geom:
+                fast = False
+            if fast:
+                payload_sets.append(payloads)
+                comp_pos.append(i)
+            else:
+                dense_rows.append(self._decode_compressed_dense(payloads, meta))
+                dense_pos.append(i)
+        if not comp_pos:
+            # every compressed row fell back dense (positions stayed in
+            # cohort order, so a plain stacked buffer is exact)
+            return StagedBuffer(self._stack_stage(dense_rows))
+        if self.mesh is not None:
+            idx = np.stack([[q.indices for q in pl] for pl in payload_sets])
+            val = np.stack([[q.values for q in pl] for pl in payload_sets])
+            scl = np.stack([[q.scales for q in pl] for pl in payload_sets])
+        else:
+            idx = np.stack([pl[0].indices for pl in payload_sets])
+            val = np.stack([pl[0].values for pl in payload_sets])
+            scl = np.stack([pl[0].scales for pl in payload_sets])
+        dense_stage = (StagedBuffer(self._stack_stage(dense_rows))
+                       if dense_rows else None)
+        return MixedStage(
+            dense=dense_stage,
+            indices=jnp.asarray(idx), values=jnp.asarray(val),
+            scales=jnp.asarray(scl), block=geom[1],
+            dense_pos=np.asarray(dense_pos, np.int32),
+            comp_pos=np.asarray(comp_pos, np.int32))
 
     def _finalize_flat(self, pf: PendingFusion) -> FusionRecord:
         """The host half of the screen+fuse: pull sq_diff (the only device
@@ -1209,6 +1446,17 @@ class Repository:
             if (e.get("fusing")
                     and int(e.get("staged_at", self.iteration)) < self.iteration):
                 continue  # consumed by a publish that landed pre-crash
+            if (e.get("compressed") and e.get("base_iteration") is not None
+                    and int(e["base_iteration"]) != self.iteration):
+                # a compressed delta is only decodable against its declared
+                # base; the admission pin makes this unreachable in normal
+                # flows, but a repository reopened at a different vintage
+                # (operator rollback, hand-edited state) must not mis-decode
+                warnings.warn(
+                    f"spill recovery: skipping compressed row {e['file']} — "
+                    f"encoded against base iteration {e['base_iteration']} "
+                    f"but the repository reopened at {self.iteration}")
+                continue
             path = os.path.join(self.root, e["file"])
             try:
                 meta = ckpt.flat_row_meta(path)
@@ -1229,7 +1477,16 @@ class Repository:
                 side.rows.append(self._load_staged_row(path))
             else:
                 # per-leaf engine: rebuild the pytree from the flat row
-                if meta.get("sharded"):
+                if meta.get("compressed"):
+                    payloads, _ = ckpt.load_flat_delta(path)
+                    base_row = np.asarray(spec.flatten(self._base))
+                    if meta.get("sharded"):
+                        ss = ShardedFlatSpec.from_json(meta["shard_spec"])
+                        row = delta_decode_sharded(payloads, ss, base_row)
+                    else:
+                        row = delta_decode(payloads[0], base_row)
+                    row, rspec = jnp.asarray(row), spec
+                elif meta.get("sharded"):
                     with ckpt.FlatShardReader(path) as r:
                         row, rspec = jnp.asarray(r.full_row()), r.spec
                 else:

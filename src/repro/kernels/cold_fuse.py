@@ -153,6 +153,88 @@ def cold_fuse(
 
 
 # ---------------------------------------------------------------------------
+# decode_accum — weighted scatter-accumulate of compressed contribution deltas
+# (docs/service_loop.md §Compressed submissions).  A compressed cohort
+# arrives as [C, nb, kb] payload stacks (within-block int offsets +
+# dequantized delta values); the fuse needs Σ_c w_c·Δ_c dense plus the per-
+# contribution ||Δ_c||² screen statistic — and must get both WITHOUT ever
+# materializing a dense [N] row per contributor.  The grid walks the nb
+# codec blocks; each step decodes every contributor's kb entries for that
+# block via a dense one-hot contraction ([C·kb, block] — TPU has no
+# efficient scatter; same trick as the sketch kernel) and writes one
+# [block] slice of the accumulator.  sq accumulates across the grid (same
+# output block every step — the idiomatic Pallas reduction above).
+# ---------------------------------------------------------------------------
+
+
+def _decode_kernel(w_ref, idx_ref, dv_ref, acc_ref, sq_ref):
+    pid = pl.program_id(0)
+
+    @pl.when(pid == 0)
+    def _init():
+        sq_ref[...] = jnp.zeros_like(sq_ref)
+
+    C, _, kb = idx_ref.shape
+    idx = idx_ref[...].reshape(C, kb)
+    dv = dv_ref[...].astype(jnp.float32).reshape(C, kb)
+    w = w_ref[...].astype(jnp.float32)
+    block = acc_ref.shape[0]
+    # zero-weight rows are masked out entirely: 0 * NaN must not reach the sum
+    wdv = (jnp.where((w == 0.0)[:, None], 0.0, dv) * w[:, None]).reshape(C * kb)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (C * kb, block), 1)
+    onehot = (idx.reshape(C * kb, 1) == cols).astype(jnp.float32)
+    acc_ref[...] = jnp.einsum("k,kn->n", wdv, onehot)
+    sq_ref[...] += jnp.sum(dv * dv, axis=1)
+
+
+def _decode_accum_impl(indices, dvalues, weights, size, block, interpret):
+    C, nb, kb = indices.shape
+    acc, sq = pl.pallas_call(
+        _decode_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((C,), lambda i: (0,)),            # weights (whole)
+            pl.BlockSpec((C, 1, kb), lambda i: (0, i, 0)),  # offsets, block i
+            pl.BlockSpec((C, 1, kb), lambda i: (0, i, 0)),  # deltas, block i
+        ],
+        out_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((C,), lambda i: (0,)),            # accumulated
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb * block,), jnp.float32),
+            jax.ShapeDtypeStruct((C,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(weights, indices, dvalues)
+    return acc[:size], sq
+
+
+_decode_accum = _jit_fuse(
+    _decode_accum_impl, static_argnames=("size", "block", "interpret"))
+
+
+def decode_accum(
+    indices: jax.Array,   # [C, nb, kb] int32 within-block offsets
+    dvalues: jax.Array,   # [C, nb, kb] f32 dequantized deltas
+    weights: jax.Array,   # [C]
+    *,
+    size: int,
+    block: int,
+    interpret: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (acc [size] = Σ_c w_c·Δ_c, sq [C] = ||Δ_c||²) — the fused
+    decode+accumulate over a stacked compressed cohort.  ``block`` is the
+    codec block (a LANE multiple); duplicate offsets accumulate.  Oracle:
+    ``repro.kernels.ref.decode_accum``."""
+    if indices.shape[0] == 0 or indices.shape[2] == 0:
+        return (jnp.zeros((size,), jnp.float32),
+                jnp.zeros((indices.shape[0],), jnp.float32))
+    return _decode_accum(indices, dvalues, weights,
+                         size=size, block=block, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
 # row_sketch — per-row block statistics for the novelty admission screen
 # ---------------------------------------------------------------------------
 #

@@ -20,6 +20,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.kernels import ref
 from repro.kernels.cold_fuse import call_donated as _call_donated
 from repro.kernels.cold_fuse import cold_fuse as _cold_fuse_kernel
+from repro.kernels.cold_fuse import decode_accum as _decode_accum_kernel
 from repro.kernels.cold_fuse import row_sketch as _row_sketch_kernel
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
 from repro.kernels.rwkv6_scan import rwkv6_scan as _rwkv_kernel
@@ -220,6 +221,189 @@ def cohort_fuse_sharded(
     fn = _cohort_fuse_fn(
         mesh, norm_axes(contrib_axes), norm_axes(shard_axes), float(alpha))
     return fn(stage)
+
+
+# ---------------------------------------------------------------------------
+# compressed fuse — screen+fuse directly over delta-compressed contributions
+# (docs/service_loop.md §Compressed submissions).  A compressed contribution
+# is θ_c = base + Δ_c with Δ_c carried as a DeltaPayload; substituting into
+# the fuse gives
+#
+#     fused = base + α·[(Σ_d w_d θ_d + (Σ_c w_c)·base + Σ_c w_c Δ_c)/Σw − base]
+#
+# so the ONLY dense quantity the compressed side needs is the single
+# accumulator Σ_c w_c Δ_c — one dense [N] total, never one per contributor —
+# and the §9 screen statistic is ||Δ_c||² straight from the sparse payload.
+# decode_accum produces both in one pass (Pallas on TPU, jnp oracle
+# elsewhere); the sharded variant keeps the one-psum-per-fuse contract.
+# ---------------------------------------------------------------------------
+
+
+def decode_accum(indices, values, scales, weights, *,
+                 size: int, block: int) -> Tuple[jax.Array, jax.Array]:
+    """Decode+accumulate a stacked compressed cohort: returns
+    (acc [size] = Σ_c w_c·Δ_c, sq [C] = ||Δ_c||²).  ``indices``/``values``
+    are the stacked ``[C, nb, kb]`` payload arrays (any int/numeric dtype —
+    cast internally), ``scales`` is ``[C, nb]``, ``block`` the codec block.
+    Zero-weight contributions are masked out of ``acc``; ``sq`` always
+    reflects the raw decoded delta."""
+    idx = jnp.asarray(indices, jnp.int32)
+    dv = (jnp.asarray(values, jnp.float32)
+          * jnp.asarray(scales, jnp.float32)[..., None])
+    w = jnp.asarray(weights, jnp.float32)
+    if idx.shape[0] == 0 or idx.shape[2] == 0:
+        return jnp.zeros((size,), jnp.float32), jnp.zeros((idx.shape[0],), jnp.float32)
+    if kernels_enabled() and not _interpret():
+        return _decode_accum_kernel(idx, dv, w, size=size, block=block,
+                                    interpret=False)
+    return _ref_decode(idx, dv, w, size=size, block=block)
+
+
+_ref_decode = jax.jit(ref.decode_accum, static_argnames=("size", "block"))
+
+
+@functools.partial(jax.jit, donate_argnums=())
+def _compressed_combine(base, acc, comp_weights, sq_comp,
+                        dense, dense_weights, alpha):
+    """Finish the compressed fuse from the decoded accumulator: combined
+    normalization over dense + compressed weights, zero-weight masking on
+    the dense side, sq ordered (dense..., compressed...)."""
+    bf = base.astype(jnp.float32)
+    wd = dense_weights.astype(jnp.float32)
+    wc = comp_weights.astype(jnp.float32)
+    w_tot = jnp.sum(wd) + jnp.sum(wc)
+    df = dense.astype(jnp.float32)
+    masked = jnp.where((wd == 0.0)[:, None], 0.0, df)
+    num = jnp.einsum("k,kn->n", wd, masked) + jnp.sum(wc) * bf + acc
+    fused = (bf + alpha * (num / w_tot - bf)).astype(base.dtype)
+    sq_dense = jnp.sum(jnp.square(df - bf[None, :]), axis=1)
+    return fused, jnp.concatenate([sq_dense, sq_comp])
+
+
+def fuse_flat_compressed(
+    base: jax.Array,       # [N]
+    indices, values, scales,  # stacked payloads: [C, nb, kb] / [C, nb]
+    comp_weights,          # [C]
+    alpha=1.0,
+    *,
+    block: int,
+    dense=None,            # optional dense [K, N] side of a mixed cohort
+    dense_weights=None,    # [K]
+) -> Tuple[jax.Array, jax.Array]:
+    """Fused repository update consuming delta-compressed contributions
+    directly.  Returns (fused [N], sq_diff [K+C]) with sq ordered
+    (dense contributions first, compressed after) — the same single-pass
+    screen+fuse contract as ``fuse_flat``, but no dense ``[N]`` row is ever
+    materialized per compressed contributor.  Oracle identity: with exact
+    payloads this equals ``fuse_flat(base, stack(dense + decoded), w)``."""
+    N = int(base.shape[0])
+    acc, sq_comp = decode_accum(indices, values, scales, comp_weights,
+                                size=N, block=block)
+    if dense is None:
+        dense = jnp.zeros((0, N), base.dtype)
+        dense_weights = jnp.zeros((0,), jnp.float32)
+    return _compressed_combine(
+        base, acc, jnp.asarray(comp_weights, jnp.float32), sq_comp,
+        _staged(dense), jnp.asarray(dense_weights, jnp.float32),
+        jnp.asarray(alpha, jnp.float32))
+
+
+@functools.lru_cache(maxsize=32)
+def _compressed_sharded_fn(mesh: Mesh, axes: Tuple[str, ...], block: int,
+                           use_kernel: bool, has_dense: bool):
+    """Build (once per mesh/layout) the jitted shard_map compressed fuse
+    over per-shard payload stacks ``[C, S, nb, kb]``.  Exactly one
+    collective: the psum completing the concatenated (dense..., compressed...)
+    sq partials — the fused output needs no communication at all."""
+    row_spec = P(axes_entry(axes), None)
+    stage_spec = P(None, axes_entry(axes), None)
+    comp_spec = P(None, axes_entry(axes), None, None)
+    scl_spec = P(None, axes_entry(axes), None)
+
+    def _local_decode(idx, val, scl, wc, length):
+        dv = val.astype(jnp.float32) * scl.astype(jnp.float32)[..., None]
+        if idx.shape[0] == 0 or idx.shape[2] == 0:
+            return (jnp.zeros((length,), jnp.float32),
+                    jnp.zeros((idx.shape[0],), jnp.float32))
+        if use_kernel:
+            return _decode_accum_kernel(idx.astype(jnp.int32), dv, wc,
+                                        size=length, block=block,
+                                        interpret=False)
+        return ref.decode_accum(idx.astype(jnp.int32), dv, wc,
+                                size=length, block=block)
+
+    def _local_math(base, acc, wc, sq_comp, dense, wd, alpha):
+        bf = base.astype(jnp.float32)
+        w_tot = jnp.sum(wd) + jnp.sum(wc)
+        masked = jnp.where((wd == 0.0)[:, None], 0.0, dense.astype(jnp.float32))
+        num = jnp.einsum("k,kn->n", wd, masked) + jnp.sum(wc) * bf + acc
+        fused = (bf + alpha * (num / w_tot - bf)).astype(base.dtype)
+        sq_dense = jnp.sum(jnp.square(dense.astype(jnp.float32) - bf[None, :]), axis=1)
+        return fused, jnp.concatenate([sq_dense, sq_comp])
+
+    if has_dense:
+        def local(base, idx, val, scl, wc, dense, wd, alpha):
+            # local blocks carry a size-1 stub of the shard dim: strip it
+            acc, sq_comp = _local_decode(
+                idx[:, 0], val[:, 0], scl[:, 0], wc, base.shape[1])
+            fused, sq = _local_math(base[0], acc, wc, sq_comp,
+                                    dense[:, 0, :], wd, alpha[0])
+            return fused[None], jax.lax.psum(sq, axes)
+
+        in_specs = (row_spec, comp_spec, comp_spec, scl_spec, P(),
+                    stage_spec, P(), P())
+    else:
+        def local(base, idx, val, scl, wc, alpha):
+            acc, sq_comp = _local_decode(
+                idx[:, 0], val[:, 0], scl[:, 0], wc, base.shape[1])
+            dense = jnp.zeros((0, base.shape[1]), base.dtype)
+            wd = jnp.zeros((0,), jnp.float32)
+            fused, sq = _local_math(base[0], acc, wc, sq_comp,
+                                    dense, wd, alpha[0])
+            return fused[None], jax.lax.psum(sq, axes)
+
+        in_specs = (row_spec, comp_spec, comp_spec, scl_spec, P(), P())
+
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=in_specs,
+        out_specs=(row_spec, P()),
+        check_rep=False,
+    )
+    return jax.jit(fn)
+
+
+def fuse_flat_compressed_sharded(
+    base: jax.Array,       # [S, shard_len] — sharded over `axes`
+    indices, values, scales,  # [C, S, nb, kb] / [C, S, nb] per-shard stacks
+    comp_weights,          # [C] (replicated)
+    alpha=1.0,
+    *,
+    mesh: Mesh,
+    axes: Axes,
+    block: int,
+    dense=None,            # optional dense [K, S, shard_len] side
+    dense_weights=None,    # [K]
+) -> Tuple[jax.Array, jax.Array]:
+    """Distributed ``fuse_flat_compressed`` over a block-cyclic layout:
+    each shard decodes its own payload slices (``delta_encode_sharded``
+    order) and fuses locally; the concatenated sq partials are completed by
+    exactly ONE psum — the same one-all-reduce contract as
+    ``fuse_flat_sharded`` (docs/sharding.md).  Returns (fused [S, shard_len]
+    sharded like ``base``, sq_diff [K+C] replicated, dense first)."""
+    ax = norm_axes(axes)
+    use_kernel = kernels_enabled() and not _interpret()
+    wc = jnp.asarray(comp_weights, jnp.float32)
+    alpha_arr = jnp.asarray(jnp.reshape(alpha, (1,)), jnp.float32)
+    idx = jnp.asarray(indices)
+    val = jnp.asarray(values)
+    scl = jnp.asarray(scales)
+    if dense is None:
+        fn = _compressed_sharded_fn(mesh, ax, int(block), use_kernel, False)
+        return fn(base, idx, val, scl, wc, alpha_arr)
+    fn = _compressed_sharded_fn(mesh, ax, int(block), use_kernel, True)
+    return fn(base, idx, val, scl, wc, _staged(dense),
+              jnp.asarray(dense_weights, jnp.float32), alpha_arr)
 
 
 # ---------------------------------------------------------------------------

@@ -42,6 +42,45 @@ def cold_fuse(
 
 
 # ---------------------------------------------------------------------------
+# decode_accum: weighted scatter-accumulate of compressed contribution deltas
+# ---------------------------------------------------------------------------
+
+
+def decode_accum(
+    indices: jax.Array,   # [C, nb, kb] int — within-block offsets
+    dvalues: jax.Array,   # [C, nb, kb] f32 — dequantized deltas (values·scales)
+    weights: jax.Array,   # [C]
+    *,
+    size: int,
+    block: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (acc [size], sq [C]) for C compressed contributions
+    (``repro.utils.flat.DeltaPayload`` stacked along a leading axis):
+
+        acc[n]  = Σ_c w_c · Δ_c[n]        (the fuse numerator's delta term)
+        sq[c]   = Σ |Δ_c|²                (the §9 screening statistic)
+
+    Entry j of block b lands at ``b·block + indices[c,b,j]``; duplicate
+    offsets accumulate (scatter-add), padding-slot ``(0, 0)`` entries add
+    zero, and anything past ``size`` is trimmed.  Zero-weight contributions
+    are masked out of ``acc`` entirely (NaN·0 must not poison the sum —
+    the same re-weighted-second-pass contract as ``cold_fuse``); ``sq``
+    always reflects the raw decoded delta.
+    """
+    C, nb, kb = indices.shape
+    w = weights.astype(jnp.float32)
+    dv = dvalues.astype(jnp.float32)
+    acc = jnp.zeros((nb * block,), jnp.float32)
+    if C and kb:
+        gi = (jnp.arange(nb, dtype=jnp.int32)[None, :, None] * block
+              + indices.astype(jnp.int32))
+        wdv = jnp.where((w == 0.0)[:, None, None], 0.0, dv) * w[:, None, None]
+        acc = acc.at[gi.reshape(-1)].add(wdv.reshape(-1))
+    sq = jnp.sum(dv * dv, axis=(1, 2))
+    return acc[:size], sq
+
+
+# ---------------------------------------------------------------------------
 # row_sketch: per-row block statistics for the novelty admission screen
 # ---------------------------------------------------------------------------
 

@@ -82,7 +82,8 @@ from repro.checkpoint import io as ckpt
 from repro.core.repository import Repository
 from repro.serve.probes import RegressionGate
 from repro.utils import faults
-from repro.utils.flat import (FlatSpec, ShardedFlatSpec, row_checksum,
+from repro.utils.flat import (LANE, FlatSpec, ShardedFlatSpec, delta_checksum,
+                              delta_encode, delta_encode_sharded, row_checksum,
                               row_sketch_host)
 
 QUEUE_DIR = "queue"
@@ -125,7 +126,11 @@ class ContributorClient:
                base_iteration: Optional[int] = None,
                seq: Optional[int] = None,
                checksum: bool = False,
-               sketch: Optional[bool] = None) -> str:
+               sketch: Optional[bool] = None,
+               compress: bool = False,
+               base=None,
+               k_per_block: int = 64,
+               codec_block: int = LANE) -> str:
         """Enqueue one contribution; returns the submission id once (and
         only once) it is durably in the queue.
 
@@ -154,7 +159,19 @@ class ContributorClient:
         ``weight``/``base_iteration`` (a rider that mis-states it only
         distorts the advisory screen for its own row — no different from
         perturbing the row itself); under ``verify_checksums`` the service
-        recomputes it from the file."""
+        recomputes it from the file.
+
+        ``compress=True`` enqueues the contribution **delta-compressed**
+        (docs/service_loop.md): the difference against ``base`` (the
+        pulled base pytree, or its pre-flattened row) is encoded as
+        per-block top-``k_per_block`` sparse int8 values with per-block
+        float scales (``repro.utils.flat.delta_encode``; per-shard under
+        ``sspec``) — typically 5-10x fewer queue bytes than a dense row.
+        Requires ``base_iteration``: the service admits a compressed
+        delta only against its exact declared base vintage (a delta means
+        nothing against any other base).  ``checksum=True`` then stamps a
+        CRC of the *encoded payload bytes*, which is what the service
+        recomputes under ``verify_checksums``."""
         if row is None:
             if params is None:
                 raise ValueError("submit needs params= or row=")
@@ -170,6 +187,26 @@ class ContributorClient:
         path = os.path.join(_queue_dir(self.root), sub_id + ".npz")
         os.makedirs(_queue_dir(self.root), exist_ok=True)
         host_row = np.asarray(row)
+        payloads = None
+        if compress:
+            if base is None:
+                raise ValueError("compress=True needs base= — the pulled "
+                                 "base this contribution was finetuned from")
+            if base_iteration is None:
+                raise ValueError(
+                    "compress=True needs base_iteration= — the service "
+                    "admits a compressed delta only against its declared "
+                    "base vintage")
+            base_row = np.asarray(base if getattr(base, "ndim", None) == 1
+                                  else spec.flatten(base))
+            if sspec is not None:
+                payloads = delta_encode_sharded(
+                    host_row, base_row, sspec,
+                    k_per_block=k_per_block, block=codec_block)
+            else:
+                payloads = delta_encode(host_row, base_row,
+                                        k_per_block=k_per_block,
+                                        block=codec_block)
         extra = {
             "id": sub_id,
             "contributor": self.name,
@@ -177,6 +214,9 @@ class ContributorClient:
             "base_iteration": base_iteration,
             "submitted_at": time.time(),
         }
+        if compress:
+            extra["codec"] = {"k_per_block": int(k_per_block),
+                              "block": int(codec_block)}
         if sketch is None:
             st = self.status()
             sketch = st is None or bool(st.get("novelty_screen"))
@@ -185,12 +225,19 @@ class ContributorClient:
             # host pass over memory, vs a full row re-read at admission
             extra["sketch"] = row_sketch_host(host_row).tolist()
         if checksum:
-            extra["checksum"] = row_checksum(host_row)
+            # compressed submissions CRC the encoded payload bytes — the
+            # artifact actually in the queue — so a rider cannot vouch for
+            # a decode it never shipped (the liar-rider seam)
+            extra["checksum"] = (delta_checksum(payloads) if compress
+                                 else row_checksum(host_row))
         # the armed window: nothing durable has happened yet — a death here
         # (or anywhere inside the atomic write) enqueues nothing, and the
         # caller never receives the id
         faults.crash_point("client.mid_submit")
-        if sspec is not None:
+        if compress:
+            ckpt.save_flat_delta(path, payloads, spec, sspec=sspec,
+                                 extra=extra)
+        elif sspec is not None:
             ckpt.save_flat_shards(path, sspec.shard_slices(host_row), spec,
                                   sspec, extra=extra)
         else:
@@ -272,7 +319,10 @@ class AdmissionPolicy:
       cohort; the excess stays queued for the next round;
     * ``max_staleness`` — reject a submission whose recorded
       ``base_iteration`` lags the current base by more than this many
-      iterations (None = accept any vintage);
+      iterations (None = accept any vintage).  Delta-compressed
+      submissions ignore this knob: they are pinned to the *exact*
+      current vintage (and deferred while a fuse is in flight), since a
+      delta is only decodable against the base it was computed from;
     * ``verify_checksums`` — re-read each row at admission and verify the
       contributor's CRC (costs a full row read; off by default);
     * ``novelty_threshold`` — content-based novelty screen (ROADMAP
@@ -586,16 +636,67 @@ class ColdService:
         return None
 
     def _checksum_ok(self, path: str, meta: Dict[str, Any],
-                     want: str) -> Tuple[bool, np.ndarray]:
+                     want: str) -> Tuple[bool, Optional[np.ndarray]]:
         """Returns (crc matches, the portable [N] row it read) — callers
         that need the row again (the novelty screen's rider-distrust
-        recompute) reuse it instead of paying a second full read."""
+        recompute) reuse it instead of paying a second full read.
+
+        Compressed submissions verify against the **encoded payload
+        bytes** (``repro.utils.flat.delta_checksum``) — the artifact
+        actually enqueued — never against a decode: a liar rider stamping
+        the CRC of the row it *claims* to decode to is a per-file
+        checksum rejection, not an accepted forgery.  The returned row is
+        None (the novelty screen sketches compressed rows from the delta
+        instead)."""
+        if meta.get("compressed"):
+            payloads, _ = ckpt.load_flat_delta(path)
+            return delta_checksum(payloads) == want, None
         if meta["sharded"]:
             with ckpt.FlatShardReader(path) as r:
                 row = r.full_row()
         else:
             row, _ = ckpt.load_flat(path, as_jax=False)
         return row_checksum(row) == want, row
+
+    def _compressed_screen(self, extra: Dict[str, Any],
+                           path: str) -> Optional[str]:
+        """Admission screen for a delta-compressed submission.  Returns
+        None (admit), ``"defer"`` (leave queued for the next cycle), or a
+        per-file rejection reason.
+
+        A delta is only decodable against the exact base it was computed
+        from, so the vintage pin is equality — ``base_iteration`` must
+        match the current iteration — not the dense rows' lag-tolerant
+        ``max_staleness``.  While a fuse is in flight the next publish is
+        already moving the base, so a current-vintage delta is *deferred*
+        (kept in the queue, neither staged nor rejected) rather than
+        admitted into a cohort that would decode it against tomorrow's
+        base.  The payload arrays are validated here too: non-finite
+        quantization scales would decode to a non-finite delta and poison
+        the fuse, so they are malformed-rider rejections at the boundary,
+        with the same per-file (never admit-pass-aborting) discipline as
+        every other screen."""
+        bi = extra.get("base_iteration")
+        if bi is None:
+            return ("malformed rider: compressed submission without "
+                    "base_iteration — a delta is only decodable against "
+                    "its declared base")
+        bi = int(bi)  # _rider_error already screened non-integers
+        if self.repo.inflight:
+            return "defer"
+        if bi != self.repo.iteration:
+            return (f"stale: delta encoded against base iteration {bi}, "
+                    f"current {self.repo.iteration} — a compressed "
+                    "submission must match the current vintage exactly")
+        try:
+            payloads, _ = ckpt.load_flat_delta(path)
+        except Exception as err:  # torn/garbage payload entries
+            return f"unreadable ({type(err).__name__}: {err})"
+        for p in payloads:
+            if not np.isfinite(p.scales).all():
+                return ("malformed rider: non-finite quantization scale "
+                        "in delta payload")
+        return None
 
     def _admit(self) -> Dict[str, int]:
         """Stage new queue arrivals into the repository, up to the cohort
@@ -650,10 +751,23 @@ class ColdService:
                     self._reject(fn, rider_err)
                     continue
                 sub_id = extra.get("id") or sub_id
-                stale = self._staleness(extra)
-                if stale is not None:
-                    self._reject(fn, stale)
-                    continue
+                if meta.get("compressed"):
+                    verdict = self._compressed_screen(extra, path)
+                    if verdict == "defer":
+                        # current-vintage delta arriving mid-fuse: neither
+                        # staged (the in-flight publish is about to move
+                        # the base it decodes against) nor rejected — it
+                        # stays queued and admits next cycle
+                        leftover += 1
+                        continue
+                    if verdict is not None:
+                        self._reject(fn, verdict)
+                        continue
+                else:
+                    stale = self._staleness(extra)
+                    if stale is not None:
+                        self._reject(fn, stale)
+                        continue
                 row = None
                 if self.policy.verify_checksums and extra.get("checksum"):
                     try:

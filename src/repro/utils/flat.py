@@ -490,6 +490,14 @@ class ShardedFlatSpec:
         j, r = divmod(i, self.block)
         return j % self.n_shards, (j // self.n_shards) * self.block + r
 
+    def global_of(self, shard: int, offsets) -> np.ndarray:
+        """Inverse of ``shard_of``, vectorized: flat global indices of the
+        given offsets *within* shard ``shard``.  Offsets that land in the
+        block-grid padding map past ``size`` — callers filter those."""
+        off = np.asarray(offsets, np.int64)
+        slot, r = np.divmod(off, self.block)
+        return (slot * self.n_shards + int(shard)) * self.block + r
+
     # -- rearrangement --------------------------------------------------
     def shard(self, buf) -> jax.Array:
         """``[..., N]`` -> ``[..., S, shard_len]`` block-cyclic rearrangement
@@ -549,6 +557,242 @@ class ShardedFlatSpec:
     @classmethod
     def from_json(cls, meta: Dict[str, Any]) -> "ShardedFlatSpec":
         return cls(int(meta["size"]), int(meta["n_shards"]), int(meta["block"]))
+
+
+# ---------------------------------------------------------------------------
+# Delta codec — top-k sparse / int8 compressed contributions
+# ---------------------------------------------------------------------------
+
+# int16 within-block offsets: a block may not exceed the int16 range
+MAX_DELTA_BLOCK = 32768
+
+
+@dataclass(frozen=True)
+class DeltaPayload:
+    """One compressed contribution delta: per-block top-k sparse indices,
+    int8-quantized values, and per-block f32 scales (docs/service_loop.md
+    §Compressed submissions).
+
+    The row of ``size`` elements is partitioned into ``n_blocks`` blocks of
+    ``block`` elements (LANE-aligned, so the decode kernel's grid is whole
+    tiles); each block keeps exactly ``k_per_block`` entries — the fixed
+    shape is what lets K payloads stack into one ``[K, nb, kb]`` kernel
+    operand (a global top-k would be ragged).  Unused slots hold
+    ``(offset 0, value 0)`` and decode to a harmless ``+0``.
+
+    * ``indices`` — ``[nb, kb]`` int16 offsets *within* each block;
+    * ``values``  — ``[nb, kb]`` int8 quantized deltas (±127 clip);
+    * ``scales``  — ``[nb]`` f32, ``max|selected delta| / 127`` per block
+      (0 for all-zero blocks).
+
+    Reconstruction is ``delta ≈ values·scales`` scattered at the indices:
+    kept entries carry ≤ ``scale/2`` quantization error, dropped entries
+    err by their own magnitude (bounded by the smallest kept magnitude in
+    their block) — the error-bound contract pinned by
+    tests/test_delta_codec.py.
+    """
+
+    indices: np.ndarray   # [nb, kb] int16
+    values: np.ndarray    # [nb, kb] int8
+    scales: np.ndarray    # [nb] float32
+    size: int             # decoded element count (N, or shard_len)
+    block: int            # elements per codec block (LANE-aligned)
+
+    def __post_init__(self):
+        if self.size < 1:
+            raise ValueError(f"size must be >= 1, got {self.size}")
+        if self.block % LANE or not (0 < self.block <= MAX_DELTA_BLOCK):
+            raise ValueError(
+                f"block {self.block} must be a LANE multiple in "
+                f"(0, {MAX_DELTA_BLOCK}]")
+        nb = -(-self.size // self.block)
+        idx, val, scl = self.indices, self.values, self.scales
+        if idx.dtype != np.int16 or val.dtype != np.int8 \
+                or scl.dtype != np.float32:
+            raise ValueError(
+                f"payload dtypes ({idx.dtype}, {val.dtype}, {scl.dtype}) != "
+                "(int16, int8, float32)")
+        if idx.ndim != 2 or idx.shape[0] != nb or idx.shape != val.shape \
+                or scl.shape != (nb,):
+            raise ValueError(
+                f"payload shapes idx{idx.shape} val{val.shape} "
+                f"scl{scl.shape} inconsistent with size={self.size} "
+                f"block={self.block}")
+        if idx.shape[1] > self.block:
+            raise ValueError(
+                f"k_per_block {idx.shape[1]} > block {self.block}")
+        if idx.size and (idx.min() < 0 or int(idx.max()) >= self.block):
+            raise ValueError("payload indices out of block range")
+
+    @property
+    def n_blocks(self) -> int:
+        return self.indices.shape[0]
+
+    @property
+    def k_per_block(self) -> int:
+        return self.indices.shape[1]
+
+    @property
+    def nbytes(self) -> int:
+        """Encoded payload bytes (the queue-bandwidth figure of merit)."""
+        return self.indices.nbytes + self.values.nbytes + self.scales.nbytes
+
+
+def _as_f32_row(buf, what: str) -> np.ndarray:
+    arr = np.asarray(buf)
+    if arr.dtype == jnp.bfloat16:
+        arr = arr.astype(np.float32)
+    arr = np.ascontiguousarray(arr, np.float32)
+    if arr.ndim != 1:
+        raise ValueError(f"{what} must be 1-D, got shape {arr.shape}")
+    return arr
+
+
+def delta_encode(row, base, *, k_per_block: int,
+                 block: int = LANE) -> DeltaPayload:
+    """Encode ``row − base`` as a per-block top-k / int8 ``DeltaPayload``.
+
+    Selection is by |delta| per block with a stable order, so the same
+    inputs always produce byte-identical payloads (the checksum contract).
+    Non-finite deltas are a caller bug and raise — the service treats a
+    non-finite *scale* on disk as a malformed rider."""
+    row, base = _as_f32_row(row, "row"), _as_f32_row(base, "base")
+    if row.shape != base.shape:
+        raise ValueError(f"row shape {row.shape} != base shape {base.shape}")
+    size = row.shape[0]
+    if size < 1:
+        raise ValueError("cannot encode an empty row")
+    d = row - base
+    if not np.isfinite(d).all():
+        raise ValueError("delta contains non-finite values")
+    nb = -(-size // block)
+    kb = int(k_per_block)
+    if not (0 <= kb <= block):
+        raise ValueError(f"k_per_block {kb} not in [0, {block}]")
+    pad = nb * block - size
+    if pad:
+        d = np.concatenate([d, np.zeros((pad,), np.float32)])
+    d = d.reshape(nb, block)
+    if kb == 0:
+        return DeltaPayload(np.zeros((nb, 0), np.int16),
+                            np.zeros((nb, 0), np.int8),
+                            np.zeros((nb,), np.float32), size, block)
+    # stable top-k by magnitude: deterministic for byte-identical payloads
+    order = np.argsort(-np.abs(d), axis=1, kind="stable")[:, :kb]
+    sel = np.take_along_axis(d, order, axis=1)            # [nb, kb]
+    scales = (np.max(np.abs(sel), axis=1) / 127.0).astype(np.float32)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        q = np.where(scales[:, None] > 0.0, sel / scales[:, None], 0.0)
+    values = np.clip(np.rint(q), -127, 127).astype(np.int8)
+    return DeltaPayload(order.astype(np.int16), values, scales, size, block)
+
+
+def delta_decode(payload: DeltaPayload, base=None) -> np.ndarray:
+    """Decode a payload to its dense f32 delta (or ``base + delta`` when a
+    base row is given).  Duplicate indices accumulate — matching the
+    decode+accumulate kernel's scatter-add semantics."""
+    nb, kb = payload.indices.shape
+    dense = np.zeros((nb * payload.block,), np.float32)
+    if kb:
+        flat_idx = (np.arange(nb, dtype=np.int64)[:, None] * payload.block
+                    + payload.indices.astype(np.int64))
+        dv = payload.values.astype(np.float32) * payload.scales[:, None]
+        np.add.at(dense, flat_idx.reshape(-1), dv.reshape(-1))
+    dense = dense[: payload.size]
+    if base is None:
+        return dense
+    base = _as_f32_row(base, "base")
+    if base.shape != dense.shape:
+        raise ValueError(f"base shape {base.shape} != ({payload.size},)")
+    return base + dense
+
+
+def delta_entries(payload: DeltaPayload
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """(flat indices, dequantized delta values) of a payload's non-zero
+    entries — padding-slot and zero-quantized entries dropped.  This is the
+    sparse view the sketch correction consumes; no dense row materializes."""
+    nb, kb = payload.indices.shape
+    if kb == 0:
+        return (np.zeros((0,), np.int64), np.zeros((0,), np.float32))
+    gi = (np.arange(nb, dtype=np.int64)[:, None] * payload.block
+          + payload.indices.astype(np.int64)).reshape(-1)
+    dv = (payload.values.astype(np.float32)
+          * payload.scales[:, None]).reshape(-1)
+    keep = (gi < payload.size) & (dv != 0.0)
+    return gi[keep], dv[keep]
+
+
+def delta_encode_sharded(row, base, sspec: ShardedFlatSpec, *,
+                         k_per_block: int,
+                         block: int = LANE) -> List[DeltaPayload]:
+    """Per-shard variant: encode each block-cyclic ``shard_slices`` slice of
+    ``row`` against the matching slice of ``base`` — the compressed analog
+    of ``save_flat_shards``'s spill layout.  ``sspec.block`` must be a
+    multiple of the codec block so codec blocks never straddle shards."""
+    if sspec.block % block:
+        raise ValueError(
+            f"shard block {sspec.block} not a multiple of codec block {block}")
+    row_s = sspec.shard_slices(_as_f32_row(row, "row"))
+    base_s = sspec.shard_slices(_as_f32_row(base, "base"))
+    return [delta_encode(r, b, k_per_block=k_per_block, block=block)
+            for r, b in zip(row_s, base_s)]
+
+
+def delta_decode_sharded(payloads: Sequence[DeltaPayload],
+                         sspec: ShardedFlatSpec, base=None) -> np.ndarray:
+    """Per-shard payloads -> the dense ``[N]`` delta (or ``base + delta``)
+    — the host fallback when a spilled compressed layout does not match the
+    mesh the repository runs under."""
+    if len(payloads) != sspec.n_shards:
+        raise ValueError(
+            f"{len(payloads)} payloads != n_shards {sspec.n_shards}")
+    delta = sspec.unshard_slices([delta_decode(p) for p in payloads])
+    if base is None:
+        return delta
+    return _as_f32_row(base, "base") + delta
+
+
+def delta_checksum(payloads) -> str:
+    """CRC32 (hex) over the *encoded* payload bytes, in canonical order
+    (geometry, then indices/values/scales per payload).  This — not the
+    decoded row's CRC — is what ``verify_checksums`` recomputes for a
+    compressed submission: the checksum covers the bytes that actually
+    cross the queue, so a liar rider stamping the decoded row's CRC is a
+    per-file rejection."""
+    if isinstance(payloads, DeltaPayload):
+        payloads = [payloads]
+    crc = 0
+    for p in payloads:
+        crc = zlib.crc32(f"{p.size}:{p.block}:{p.k_per_block};".encode(), crc)
+        crc = zlib.crc32(np.ascontiguousarray(p.indices), crc)
+        crc = zlib.crc32(np.ascontiguousarray(p.values), crc)
+        crc = zlib.crc32(np.ascontiguousarray(p.scales), crc)
+    return f"{crc & 0xFFFFFFFF:08x}"
+
+
+def sketch_apply_delta(base_sketch, indices, dvals, base_at,
+                       n_buckets: int = SKETCH_BUCKETS) -> np.ndarray:
+    """Sketch of ``base + delta`` from the base's sketch and the sparse
+    delta — no dense host row.  Exact in exact arithmetic:
+
+    * bucket of flat element ``i`` is ``(i // LANE) % n_buckets`` (the
+      tile-bucket convention of ``row_sketch_host``);
+    * sums gain ``Σ dv`` per bucket, squared norms gain
+      ``Σ dv·(dv + 2·base[i])`` per bucket (``(b+d)² − b²``).
+
+    ``base_at`` is the base row gathered at ``indices`` — the only base
+    values the correction needs."""
+    sk = np.array(base_sketch, np.float64, copy=True)
+    if sk.shape != (2, n_buckets):
+        raise ValueError(f"base sketch shape {sk.shape} != (2, {n_buckets})")
+    b = (np.asarray(indices, np.int64) // LANE) % n_buckets
+    dv = np.asarray(dvals, np.float64)
+    ba = np.asarray(base_at, np.float64)
+    sk[0] += np.bincount(b, weights=dv, minlength=n_buckets)
+    sk[1] += np.bincount(b, weights=dv * (dv + 2.0 * ba),
+                         minlength=n_buckets)
+    return sk
 
 
 # ---------------------------------------------------------------------------

@@ -19,7 +19,8 @@ from repro.serve.cold_service import (ERROR_RING, QUEUE_DIR, QUEUE_MANIFEST,
                                       STATUS_FILE, AdmissionPolicy,
                                       ColdService, ContributorClient)
 from repro.serve.probes import ProbeSuite, RegressionGate
-from repro.utils.flat import FlatSpec, ShardedFlatSpec, row_checksum
+from repro.utils.flat import (FlatSpec, ShardedFlatSpec, delta_encode,
+                              row_checksum)
 
 
 def _m(v, n=64):
@@ -1290,3 +1291,292 @@ def test_gate_uninterrupted_reference_run(tmp_path):
     run_child(_GATE_SCENARIO, [root, "plant"])
     done = _done_line(run_child(_GATE_SCENARIO, [root, "serve"]))
     assert done == _GATE_DONE, done
+
+
+# ---------------------------------------------------------------------------
+# delta-compressed submissions (docs/service_loop.md): admission, vintage
+# pin, checksum-over-encoded-bytes, novelty from the decoded delta, and the
+# mixed compressed+dense crash matrix
+# ---------------------------------------------------------------------------
+
+# uniform deltas with k_per_block covering every live entry reconstruct to
+# float32 rounding (~1e-7 relative), so the dense closed forms carry over
+_KB = 128  # > 69 live entries of _m: nothing is dropped by top-k
+
+
+def _submit_compressed(client, v, *, weight=None, base_iteration=0,
+                       base_v=0.0, **kw):
+    return client.submit(_m(v), weight=weight, base_iteration=base_iteration,
+                         compress=True, base=_m(base_v), k_per_block=_KB,
+                         **kw)
+
+
+def test_compressed_submit_fuse_roundtrip(tmp_path):
+    """Compressed submissions fuse to the dense closed form, never leave a
+    dense row in the queue, and GC like any other submission."""
+    root = str(tmp_path / "repo")
+    svc = ColdService(_make(root), policy=AdmissionPolicy(min_cohort=2))
+    client = ContributorClient(root, name="c0")
+    _submit_compressed(client, 3.0, weight=1.0)
+    _submit_compressed(client, 9.0, weight=3.0)
+    qdir = os.path.join(root, QUEUE_DIR)
+    for f in os.listdir(qdir):
+        if f.endswith(".npz"):  # encoded payloads on the wire, never dense
+            assert ckpt.is_flat_compressed(os.path.join(qdir, f)), f
+    st = _drain(svc)
+    assert st["iteration"] == 1 and st["fused_contributions"] == 2
+    np.testing.assert_allclose(np.asarray(svc.repo.download()["w"]),
+                               (1 * 3.0 + 3 * 9.0) / 4.0, atol=1e-5)
+    assert [f for f in os.listdir(qdir) if f.endswith(".npz")] == []
+    # (the queue-bytes reduction itself is asserted at realistic N by
+    # benchmarks/service_loop.py --compress; 69 params is all overhead)
+
+
+def test_compressed_mixed_cohort_matches_dense(tmp_path):
+    """A cohort mixing dense rows and compressed deltas publishes the same
+    weighted mean as the all-dense equivalent."""
+    root = str(tmp_path / "repo")
+    svc = ColdService(_make(root), policy=AdmissionPolicy(min_cohort=4))
+    client = ContributorClient(root, name="c0")
+    client.submit(_m(1.0), weight=2.0)
+    client.submit(_m(3.0), weight=1.0)
+    _submit_compressed(client, 5.0, weight=1.0)
+    _submit_compressed(client, 7.0, weight=2.0)
+    st = _drain(svc)
+    assert st["iteration"] == 1 and st["fused_contributions"] == 4
+    np.testing.assert_allclose(np.asarray(svc.repo.download()["w"]),
+                               (2 * 1 + 1 * 3 + 1 * 5 + 2 * 7) / 6.0,
+                               atol=1e-5)
+
+
+def test_compressed_vintage_pin_rejects_stale(tmp_path):
+    """A delta declared against any iteration but the current one is a
+    per-file rejection — it can only mis-decode against the wrong base."""
+    root = str(tmp_path / "repo")
+    svc = ColdService(_make(root), policy=AdmissionPolicy(min_cohort=1))
+    client = ContributorClient(root, name="c0")
+    client.submit(_m(2.0))
+    _drain(svc)
+    assert svc.repo.iteration == 1
+    _submit_compressed(client, 5.0, base_iteration=0)  # yesterday's base
+    st = _drain(svc)
+    assert st["iteration"] == 1 and st["rejected_total"] == 1
+    assert "stale" in st["recent_rejects"][0]["reason"]
+    np.testing.assert_allclose(np.asarray(svc.repo.download()["w"]), 2.0)
+    # ... and future vintages are equally undecodable
+    _submit_compressed(client, 5.0, base_iteration=7)
+    st = _drain(svc)
+    assert st["rejected_total"] == 2
+    assert "stale" in st["recent_rejects"][-1]["reason"]
+
+
+def test_compressed_without_base_iteration_is_malformed(tmp_path):
+    """A compressed file with no declared vintage is undecodable by
+    construction: per-file malformed-rider rejection, daemon unharmed."""
+    root = str(tmp_path / "repo")
+    svc = ColdService(_make(root), policy=AdmissionPolicy(min_cohort=1))
+    spec = FlatSpec.from_tree(_m(0))
+    base = np.asarray(spec.flatten(_m(0.0)), np.float32)
+    pay = delta_encode(np.asarray(spec.flatten(_m(4.0)), np.float32), base,
+                       k_per_block=_KB)
+    ckpt.save_flat_delta(os.path.join(root, QUEUE_DIR, "f-000000.npz"), pay,
+                         spec, extra={"id": "f-000000"})
+    ContributorClient(root, name="good").submit(_m(5.0))
+    st = _drain(svc)
+    assert st["iteration"] == 1 and st["last_error"] is None
+    assert st["rejected_total"] == 1
+    assert "malformed rider" in st["recent_rejects"][0]["reason"]
+    np.testing.assert_allclose(np.asarray(svc.repo.download()["w"]), 5.0)
+
+
+def test_compressed_nonfinite_scale_is_malformed(tmp_path):
+    """Non-finite quantization scales would decode to a non-finite delta:
+    rejected at the boundary, not dispatched into the fuse."""
+    root = str(tmp_path / "repo")
+    svc = ColdService(_make(root), policy=AdmissionPolicy(min_cohort=1))
+    client = ContributorClient(root, name="c0")
+    sub = _submit_compressed(client, 4.0)
+    path = os.path.join(root, QUEUE_DIR, sub + ".npz")
+    with np.load(path) as data:
+        arrays = {k: data[k] for k in data.files}
+    arrays["__delta_scales__"] = np.full_like(arrays["__delta_scales__"],
+                                              np.inf)
+    np.savez(path, **arrays)
+    ContributorClient(root, name="good").submit(_m(5.0))
+    st = _drain(svc)
+    assert st["iteration"] == 1 and st["last_error"] is None
+    assert st["rejected_total"] == 1
+    assert "non-finite quantization scale" in st["recent_rejects"][0]["reason"]
+    np.testing.assert_allclose(np.asarray(svc.repo.download()["w"]), 5.0)
+
+
+def test_compressed_checksum_over_encoded_bytes(tmp_path):
+    """Regression: verify_checksums recomputes over the ENCODED payload
+    bytes.  A liar rider stamping the decoded row's CRC is a per-file
+    rejection — matching on the decoded row would let a corrupted payload
+    through whenever it still decoded cleanly."""
+    root = str(tmp_path / "repo")
+    svc = ColdService(_make(root), policy=AdmissionPolicy(
+        min_cohort=1, verify_checksums=True))
+    client = ContributorClient(root, name="c0")
+    _submit_compressed(client, 2.0, checksum=True)
+    st = _drain(svc)
+    assert st["iteration"] == 1 and st["rejected_total"] == 0
+    np.testing.assert_allclose(np.asarray(svc.repo.download()["w"]), 2.0,
+                               atol=1e-5)
+    # the liar: a hand-built file whose rider CRC is of the decoded row
+    spec = FlatSpec.from_tree(_m(0))
+    base = np.asarray(svc.repo.flat_base_host())
+    row = np.asarray(spec.flatten(_m(6.0)), np.float32)
+    pay = delta_encode(row, base, k_per_block=_KB)
+    ckpt.save_flat_delta(
+        os.path.join(root, QUEUE_DIR, "liar-000000.npz"), pay, spec,
+        extra={"id": "liar-000000", "base_iteration": 1,
+               "checksum": row_checksum(row)})
+    st = _drain(svc)
+    assert st["iteration"] == 1 and st["rejected_total"] == 1
+    assert "checksum" in st["recent_rejects"][-1]["reason"]
+
+
+def test_compressed_replay_caught_by_novelty_screen(tmp_path):
+    """Two same-content compressed submissions from different contributors
+    (no rider sketch — the screen must sketch from the decoded delta,
+    without materializing a dense host row): one fuses, one rejects."""
+    root = str(tmp_path / "repo")
+    svc = ColdService(_make(root), policy=AdmissionPolicy(
+        min_cohort=1, novelty_threshold=0.05, sketch_window=8))
+    spec = FlatSpec.from_tree(_m(0))
+    base = np.asarray(spec.flatten(_m(0.0)), np.float32)
+    pay = delta_encode(np.asarray(spec.flatten(_m(6.0)), np.float32), base,
+                       k_per_block=_KB)
+    for name in ("a-000000", "b-000000"):
+        ckpt.save_flat_delta(os.path.join(root, QUEUE_DIR, f"{name}.npz"),
+                             pay, spec,
+                             extra={"id": name, "base_iteration": 0})
+    st = _drain(svc)
+    assert st["iteration"] == 1 and st["fused_contributions"] == 1
+    assert st["novelty_rejected_total"] == 1
+    assert "near-duplicate" in st["recent_rejects"][0]["reason"]
+    np.testing.assert_allclose(np.asarray(svc.repo.download()["w"]), 6.0,
+                               atol=1e-5)
+
+
+def test_compressed_deferred_while_inflight_then_vintage_checked(tmp_path):
+    """While a fuse is in flight the base is already moving: a compressed
+    arrival is DEFERRED (neither staged nor rejected), and once the
+    publish lands its vintage is re-checked against the new iteration."""
+    root = str(tmp_path / "repo")
+    svc = ColdService(_make(root), policy=AdmissionPolicy(min_cohort=1))
+    client = ContributorClient(root, name="c0")
+    client.submit(_m(2.0))
+    st = svc.run_once()
+    assert st["inflight"]
+    _submit_compressed(client, 5.0, base_iteration=0)
+    st = svc.run_once()  # defers the delta, then finalizes the publish
+    assert st["iteration"] == 1
+    assert st["queue_depth"] == 1 and st["rejected_total"] == 0
+    st = _drain(svc)  # now at vintage 1: the 0-vintage delta is stale
+    assert st["rejected_total"] == 1
+    assert "stale" in st["recent_rejects"][-1]["reason"]
+    np.testing.assert_allclose(np.asarray(svc.repo.download()["w"]), 2.0)
+
+
+def test_compressed_rejected_after_gate_rollback(tmp_path):
+    """Regression: the PR 6 gate rolls the base back, so a delta declared
+    against the rolled-back-away vintage must be rejected as stale — never
+    decoded against the restored (different) base."""
+    root = str(tmp_path / "repo")
+    repo = _make(root)
+    svc = ColdService(repo, policy=AdmissionPolicy(min_cohort=2),
+                      gate=_gate())
+    client = ContributorClient(root, name="c")
+    for v in (0.1, 0.3):
+        client.submit(_m(v), base_iteration=0)
+    _drain(svc)
+    assert svc.repo.iteration == 1
+    good = np.array(repo.flat_base_host(), copy=True)
+    _harmful(ContributorClient(root, name="bad"), base_iteration=1)
+    st = _drain(svc)
+    assert st["rollbacks_total"] == 1 and st["iteration"] == 1
+    # a rider finetuned from the transient (rolled-back) iteration-2 base
+    _submit_compressed(client, 9.0, base_iteration=2)
+    st = _drain(svc)
+    assert st["iteration"] == 1 and "stale" in st["recent_rejects"][-1]["reason"]
+    np.testing.assert_array_equal(repo.flat_base_host(), good)
+
+
+# the mixed variant of the crash matrix: two dense + two compressed
+# submissions, all declared against vintage 0, served through every kill
+# window of the original matrix.  Exactly-once must hold for BOTH row
+# kinds, and the published base must match the all-dense closed form.
+_COMPRESSED_SCENARIO = '''
+import os, sys
+sys.path.insert(0, "src")
+import numpy as np
+import jax.numpy as jnp
+from repro.core.repository import Repository
+from repro.serve.cold_service import AdmissionPolicy, ColdService, ContributorClient
+
+root, phase = sys.argv[1], sys.argv[2]
+
+def m(v):
+    return {"w": jnp.full((96,), float(v)), "b": jnp.full((7,), float(v))}
+
+if phase == "prep":
+    Repository(m(0.0), root=root, spill=True, screen=False)
+    client = ContributorClient(root, name="c")
+    client.submit(m(1.0), weight=2.0, base_iteration=0)
+    client.submit(m(3.0), weight=1.0, base_iteration=0)
+    for v, w in ((5.0, 1.0), (7.0, 2.0)):
+        client.submit(m(v), weight=w, base_iteration=0, compress=True,
+                      base=m(0.0), k_per_block=128)
+    print("PREP_OK", flush=True)
+    sys.exit(0)
+
+# phase == "serve": poll to quiescence (or die at the armed crash point)
+repo = Repository.open(root, spill=True)
+svc = ColdService(repo, policy=AdmissionPolicy(min_cohort=4))
+for _ in range(200):
+    st = svc.run_once()
+    if (st["iteration"] >= 1 and not st["inflight"] and st["staged"] == 0
+            and st["queue_depth"] == 0):
+        break
+else:
+    print("NO_CONVERGENCE", st, flush=True)
+    sys.exit(3)
+st = svc.close()
+w = np.asarray(repo.download()["w"])
+n_q = len([f for f in os.listdir(svc.queue_dir) if f.endswith(".npz")])
+print(f"DONE it={st['iteration']} fused={st['fused_contributions']} "
+      f"w={w[0]:.6f} qfiles={n_q}", flush=True)
+'''
+
+
+def _assert_compressed_done(done):
+    assert done["it"] == "1", done       # ONE publish total — never two
+    assert done["fused"] == "4", done    # both kinds, each exactly once
+    # weighted mean (2·1 + 3 + 5 + 2·7) / 6, to int8-codec reconstruction
+    assert abs(float(done["w"]) - 4.0) < 1e-5, done
+    assert done["qfiles"] == "0", done   # queue fully GC'd
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("point", CRASH_POINTS)
+def test_compressed_exactly_once_fusion_across_crash_points(tmp_path, point):
+    """kill -9 the daemon at any crash window with a mixed compressed+dense
+    cohort staged, restart it: every submission of either kind fuses
+    exactly once and the base equals the uninterrupted run's."""
+    root = str(tmp_path / "repo")
+    run_child(_COMPRESSED_SCENARIO, [root, "prep"])
+    run_child(_COMPRESSED_SCENARIO, [root, "serve"], crash_at=point)
+    done = _done_line(run_child(_COMPRESSED_SCENARIO, [root, "serve"]))
+    _assert_compressed_done(done)
+
+
+@pytest.mark.slow
+def test_compressed_uninterrupted_reference_run(tmp_path):
+    """The oracle the mixed crash tests compare against."""
+    root = str(tmp_path / "repo")
+    run_child(_COMPRESSED_SCENARIO, [root, "prep"])
+    done = _done_line(run_child(_COMPRESSED_SCENARIO, [root, "serve"]))
+    _assert_compressed_done(done)
