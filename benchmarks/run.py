@@ -16,7 +16,7 @@ import sys
 import time
 import traceback
 
-_KERNEL_PREFIXES = ("kernel/", "fuse_e2e/", "service_loop/")
+_KERNEL_PREFIXES = ("kernel/", "fuse_e2e/", "service_loop/", "serve_load/")
 _BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_kernels.json")
 
 
@@ -53,12 +53,13 @@ def main() -> None:
     from benchmarks import (appE_scale, appF_fixed_examples, beyond_fusion_ops,
                             fig2_main, fig3_unseen, fig4_fewshot, fig5_contributors,
                             fig6_single_dataset, fuse_e2e, kernels_micro, roofline,
-                            service_loop, table1_per_task)
+                            serve_load, service_loop, table1_per_task)
 
     benches = {
         "kernels": kernels_micro.run,
         "fuse_e2e": fuse_e2e.run,
         "service_loop": service_loop.run,
+        "serve_load": serve_load.run,
         "fig2": fig2_main.run,
         "fig3": fig3_unseen.run,
         "fig4": fig4_fewshot.run,

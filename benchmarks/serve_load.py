@@ -1,0 +1,228 @@
+"""Fuse-to-serve load harness: concurrent inference + contribution traffic.
+
+The paper's synergistic loop closes only when publishes reach requests:
+this harness runs ONE repository with the full hot path live —
+
+* a ``ColdService`` daemon fusing queue submissions (cohort per round),
+* a ``ServingWorker`` (repro/serve/hot_swap.py) hot-swapping the engine
+  onto every published base,
+* N inference client threads generating continuously throughout,
+* a contributor thread submitting a finetune each round and waiting for
+  the worker to adopt the published result before the next round —
+
+and then *proves* the swap seam: every request's tokens are recomputed
+against the on-disk ``base_iterNNNN.npz`` of the iteration that served
+it (compaction off, so every published base is retained).  A request is
+**failed** if ``generate`` raised, and **version-torn** if its tokens
+disagree with its served version's oracle — i.e. any part of the decode
+ran against a different base than the one stamped on the result.  The
+acceptance bar is zero failed and zero torn requests across >=3 live
+swaps; only then does the ``serve_load/hot_swap`` row post
+(us/request with swap + pinning counters in the derived column).
+
+Run standalone (CI runs this at demo scale, forced 8-fake-device mesh):
+
+  PYTHONPATH=src python -m benchmarks.serve_load --rounds 4 --clients 2
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+      PYTHONPATH=src python -m benchmarks.serve_load --mesh 8
+"""
+import argparse
+import os
+import sys
+import tempfile
+import threading
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common as C
+from repro.checkpoint import io as ckpt
+from repro.configs import get_config, reduce_config
+from repro.core.repository import Repository
+from repro.models.transformer import init_lm
+from repro.serve.cold_service import AdmissionPolicy, ColdService, ContributorClient
+from repro.serve.engine import Engine
+from repro.serve.hot_swap import ServingWorker
+
+PROMPT_LEN = 4
+MAX_NEW = 4
+MAX_LEN = 16
+
+
+def _wait(pred, *, timeout: float, desc: str, interval: float = 0.01):
+    deadline = time.monotonic() + timeout
+    while not pred():
+        if time.monotonic() >= deadline:
+            raise TimeoutError(f"serve_load: timed out waiting for {desc}")
+        time.sleep(interval)
+
+
+def harness(*, arch: str = "gemma3-1b", rounds: int = 4, clients: int = 2,
+            mesh: int = 0, root: str = None, poll: float = 0.01,
+            timeout: float = 300.0) -> dict:
+    """Drive the loop; return stats (requests/failed/torn/swaps/...)."""
+    cfg = reduce_config(get_config(arch))
+    params = init_lm(cfg, jax.random.PRNGKey(0))
+    kw = {}
+    if mesh:
+        if jax.device_count() < mesh:
+            raise SystemExit(
+                f"--mesh {mesh} needs {mesh} devices, have "
+                f"{jax.device_count()} (set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={mesh})")
+        kw["mesh"] = jax.make_mesh((mesh,), ("model",))
+    tmp = None
+    if root is None:
+        tmp = tempfile.TemporaryDirectory(prefix="serve_load_")
+        root = tmp.name
+    repo = Repository(params, root=root, spill=True, screen=False, **kw)
+    svc = ColdService(repo, policy=AdmissionPolicy(min_cohort=1))
+    worker = ServingWorker(cfg, root, repo=repo, max_len=MAX_LEN)
+    worker.poll_once()  # adopt iteration 0 before traffic starts
+
+    prompts = np.arange(2, 2 + PROMPT_LEN, dtype=np.int32)[None, :]
+    stop = threading.Event()
+    lock = threading.Lock()
+    served = []    # (iteration, tokens) per completed request
+    failed = []    # exceptions out of generate()
+    lat_us = []
+
+    def infer_loop():
+        # warm start included: the first request compiles the engine
+        while not stop.is_set():
+            try:
+                r = worker.generate(prompts, max_new_tokens=MAX_NEW)
+            except Exception as err:  # noqa: BLE001 - the bar is zero of these
+                with lock:
+                    failed.append(f"{type(err).__name__}: {err}")
+                continue
+            with lock:
+                served.append((r.iteration, np.array(r.tokens)))
+                lat_us.append(r.latency_s * 1e6)
+
+    def service_loop():
+        while not stop.is_set():
+            try:
+                svc.run_once()
+            except Exception as err:  # noqa: BLE001
+                with lock:
+                    failed.append(f"service: {type(err).__name__}: {err}")
+            time.sleep(poll)
+
+    threads = [threading.Thread(target=service_loop, daemon=True)]
+    threads += [threading.Thread(target=infer_loop, daemon=True)
+                for _ in range(clients)]
+    for t in threads:
+        t.start()
+    worker.start(interval=poll)
+
+    # contributor: one finetune per round, each recycled from the previous
+    # published base; the next round starts only after the worker ADOPTED
+    # the publish, so every round is a live swap under open traffic
+    client = ContributorClient(root, name="bench")
+    t0 = time.time()
+    try:
+        for rnd in range(1, rounds + 1):
+            prev = ckpt.load(os.path.join(root, f"base_iter{rnd-1:04d}.npz"))
+            finetuned = jax.tree.map(lambda x, r=rnd: x + 0.003 * r, prev)
+            client.submit(finetuned, base_iteration=rnd - 1)
+            _wait(lambda r=rnd: worker.current_iteration == r,
+                  timeout=timeout / rounds,
+                  desc=f"worker adoption of iteration {rnd} "
+                       f"(failed={failed[:3]})")
+        # drain: every client sees at least one request on the final base
+        n_done = len(served)
+        _wait(lambda: len(served) >= n_done + clients or failed,
+              timeout=30.0, desc="post-swap requests")
+    finally:
+        stop.set()
+        for t in threads:
+            t.join(timeout=30.0)
+        wstate = worker.stop()
+        svc.close()
+    wall_s = time.time() - t0
+
+    # -- tear check: recompute every served version's oracle ------------
+    oracle = Engine(cfg, params, max_len=MAX_LEN)
+    expected = {}
+    for it in sorted({it for it, _ in served}):
+        base = ckpt.load(os.path.join(root, f"base_iter{it:04d}.npz"))
+        expected[it] = oracle.generate(prompts, max_new_tokens=MAX_NEW,
+                                       params=base).tokens
+    torn = sum(1 for it, toks in served
+               if not np.array_equal(toks, expected[it]))
+    stats = {
+        "requests": len(served),
+        "failed": len(failed),
+        "failures": failed[:5],
+        "torn": torn,
+        "swaps_total": wstate["swaps_total"],
+        "live_swaps": wstate["live_swaps"],
+        "requests_pinned_across_swaps": wstate["requests_pinned_across_swaps"],
+        "versions_served": wstate["versions_served"],
+        "iteration": wstate["iteration"],
+        "us_per_request": float(np.mean(lat_us)) if lat_us else 0.0,
+        "wall_s": wall_s,
+        "rounds": rounds,
+        "clients": clients,
+        "mesh": mesh,
+    }
+    if tmp is not None:
+        tmp.cleanup()
+    return stats
+
+
+def check(stats: dict) -> None:
+    """The acceptance bar: zero failed/torn requests across >=3 live
+    swaps with inference traffic actually flowing the whole time."""
+    assert stats["failed"] == 0, f"failed requests: {stats['failures']}"
+    assert stats["torn"] == 0, f"{stats['torn']} version-torn requests"
+    assert stats["live_swaps"] >= 3, f"only {stats['live_swaps']} live swaps"
+    assert stats["requests"] > 0, "no inference traffic was served"
+    assert stats["iteration"] == stats["rounds"], (
+        f"worker ended on iteration {stats['iteration']}, "
+        f"expected {stats['rounds']}")
+
+
+def run(rows: C.Rows):
+    """Bench entry (benchmarks/run.py): the hot-swap row posts only after
+    the zero-failed / zero-torn / >=3-live-swaps bar holds."""
+    rounds = {"quick": 4, "std": 5, "full": 8}[C.SCALE]
+    stats = harness(rounds=rounds, clients=2)
+    check(stats)
+    rows.add(
+        "serve_load/hot_swap", stats["us_per_request"],
+        f"requests={stats['requests']};torn=0;failed=0;"
+        f"live_swaps={stats['live_swaps']};"
+        f"pinned={stats['requests_pinned_across_swaps']};"
+        f"versions={len(stats['versions_served'])};"
+        f"clients={stats['clients']}")
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description="fuse-to-serve load harness")
+    p.add_argument("--arch", default="gemma3-1b")
+    p.add_argument("--rounds", type=int, default=4,
+                   help="publish rounds (= live swaps; must be >=3)")
+    p.add_argument("--clients", type=int, default=2,
+                   help="concurrent inference client threads")
+    p.add_argument("--mesh", type=int, default=0,
+                   help="run the daemon's repository on an N-device mesh")
+    p.add_argument("--root", default=None,
+                   help="repository root (default: fresh temp dir)")
+    args = p.parse_args(argv)
+    stats = harness(arch=args.arch, rounds=args.rounds, clients=args.clients,
+                    mesh=args.mesh, root=args.root)
+    check(stats)
+    print(f"[serve_load] OK: {stats['requests']} requests "
+          f"({stats['us_per_request']:.0f} us/req) across "
+          f"{stats['live_swaps']} live swaps, "
+          f"{stats['requests_pinned_across_swaps']} pinned across a swap, "
+          f"0 failed, 0 torn (versions={stats['versions_served']}, "
+          f"mesh={args.mesh or 'none'}, {stats['wall_s']:.1f}s)", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

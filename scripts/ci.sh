@@ -64,13 +64,24 @@ python -m pytest tests/test_cold_service.py -q -m slow
 python examples/cold_service_demo.py --contributors 2 --rounds 3 --mesh 8 \
     --regress 1
 
+# fuse-to-serve stage (docs/serving.md): the hot-swap load harness at
+# demo scale on a forced 8-fake-device mesh — concurrent inference +
+# contribution traffic against one repository; zero failed or
+# version-torn requests across >=3 live swaps is the bar — plus the
+# swap-seam kill -9 crash matrix (slow marker: a worker restarted from
+# any of the 3 kill windows must serve a published, uncorrupted base)
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python -m benchmarks.serve_load --rounds 4 --clients 2 --mesh 8
+python -m pytest tests/test_hot_swap.py -q -m slow
+
 # kernel + end-to-end fuse micro-benches (smoke scale); refreshes
 # BENCH_kernels.json (including the fuse_e2e/mesh8_sharded,
-# fuse_e2e/async_overlap, service_loop/throughput, and
-# service_loop/delta_compression rows — the latter asserts >=5x queue-bytes
-# reduction and codec parity before posting) so the perf trajectory stays
-# current
-REPRO_BENCH_SCALE=quick python -m benchmarks.run --only kernels,fuse_e2e,service_loop
+# fuse_e2e/async_overlap, service_loop/throughput,
+# service_loop/delta_compression, and serve_load/hot_swap rows — the
+# delta row asserts >=5x queue-bytes reduction and codec parity, the
+# hot-swap row asserts zero failed/torn requests across >=3 live swaps,
+# before posting) so the perf trajectory stays current
+REPRO_BENCH_SCALE=quick python -m benchmarks.run --only kernels,fuse_e2e,service_loop,serve_load
 
 # examples cannot silently rot: both must run end-to-end at dry-run scale
 python examples/cold_fusion_multitask.py --dry-run

@@ -249,6 +249,12 @@ class Repository:
         self._manifest_lock = threading.Lock()
         self._publish_lock = threading.Lock()
         self._persisted_iteration = -1
+        # in-process publish subscribers (the fuse-to-serve hot path,
+        # docs/serving.md): notified AFTER the iteration bump with a
+        # consistent (iteration, base, flat) snapshot — raw cross-thread
+        # polling of (iteration, _base) can pair iteration k with k+1's
+        # weights because _publish_flat installs the base first
+        self._publish_listeners: List[Any] = []
         # novelty admission state (docs/service_loop.md): None until the
         # service (or a caller) enables it via enable_cohort_sketch
         self.cohort_sketch: Optional[CohortSketch] = None
@@ -434,6 +440,23 @@ class Repository:
         row = self._sspec.unshard(fused) if self.mesh is not None else fused
         self._base = self._spec.unflatten(row)
         self._base_flat = fused
+
+    # -- publish subscription (fuse-to-serve hot path) ------------------
+    def add_publish_listener(self, fn) -> None:
+        """Register ``fn(iteration, base, flat)`` to run after every base
+        movement — cohort publish, async contribution, and ``rollback``
+        (where ``iteration`` moves *backwards*).  Called on whichever
+        thread published, after the iteration bump, with a consistent
+        snapshot: ``base`` is the immutable published pytree and ``flat``
+        its cached flat form (``None`` when the engine keeps no flat
+        cache, e.g. after a rollback restore).  Listeners must be cheap
+        and must not raise; a ``ServingWorker`` stores the snapshot and
+        does the device transfer on its own thread (docs/serving.md)."""
+        self._publish_listeners.append(fn)
+
+    def _notify_publish(self) -> None:
+        for fn in list(self._publish_listeners):
+            fn(self.iteration, self._base, self._base_flat)
 
     def _staging_iteration(self) -> int:
         """The iteration newly staged uploads belong to: one ahead of the
@@ -815,6 +838,7 @@ class Repository:
                 with self._manifest_lock:
                     self._write_manifest()
         self._refresh_base_sketch()  # async publishes move the base too
+        self._notify_publish()
         return rec
 
     # -- repository maintenance ----------------------------------------
@@ -1169,6 +1193,7 @@ class Repository:
         # because the sketch is advisory — a crash here costs at most one
         # stale-scale admission decision, never a double fuse
         self._refresh_base_sketch()
+        self._notify_publish()
 
     def _cohort_weights(self, K: int, staged_weights: Sequence[Any]) -> jnp.ndarray:
         """Per-contributor weights for the flat engine (average/damped)."""
@@ -1310,6 +1335,7 @@ class Repository:
             with self._manifest_lock:
                 self._write_manifest()
         self._refresh_base_sketch()  # the screen's normalizer moved too
+        self._notify_publish()
 
     def flat_base_host(self) -> np.ndarray:
         """The current base as a host ``[N]`` float row (the form probe

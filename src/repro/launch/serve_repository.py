@@ -17,6 +17,12 @@ finalized, final status published), by ``--max-iterations``, or by
 ``--mesh N`` opens the repository on an N-device mesh (the sharded fuse
 path); the device count must already be available — under CPU testing,
 export ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` first.
+
+``--serve-arch NAME`` additionally runs a fuse-to-serve hot-swap worker
+(docs/serving.md) in the same process: a ``ServingWorker`` subscribed to
+the repository's publishes keeps a serving ``Engine`` on the latest
+published base (reduced NAME config), persisting ``serving_state.json``
+and swap records alongside the daemon's status.
 """
 from __future__ import annotations
 
@@ -117,6 +123,12 @@ def main(argv=None) -> int:
                         "regression")
     p.add_argument("--probe-seed", type=int, default=0,
                    help="seed fixing the probe batches and readouts")
+    p.add_argument("--serve-arch", default=None, metavar="NAME",
+                   help="also serve the evolving base: run a hot-swap "
+                        "ServingWorker for this arch (reduced config; the "
+                        "repository base must be that arch's param tree)")
+    p.add_argument("--serve-max-len", type=int, default=64,
+                   help="serving engine KV-cache length (--serve-arch)")
     p.add_argument("--poll", type=float, default=0.02, metavar="S",
                    help="idle poll interval (seconds)")
     p.add_argument("--max-iterations", type=int, default=None,
@@ -127,6 +139,17 @@ def main(argv=None) -> int:
     args = p.parse_args(argv)
 
     svc = build_service(args)
+
+    worker = None
+    if args.serve_arch:
+        from repro.configs import get_config, reduce_config
+        from repro.serve.hot_swap import ServingWorker
+        cfg = reduce_config(get_config(args.serve_arch))
+        worker = ServingWorker(cfg, svc.repo.root, repo=svc.repo,
+                               max_len=args.serve_max_len)
+        worker.start(interval=args.poll)
+        print(f"[cold-service] hot-swap worker serving {args.serve_arch} "
+              f"(max_len={args.serve_max_len})", flush=True)
 
     def _stop(signum, frame):
         svc.request_stop()
@@ -140,6 +163,13 @@ def main(argv=None) -> int:
     st = svc.serve_forever(poll_interval=args.poll,
                            max_iterations=args.max_iterations,
                            idle_timeout=args.idle_timeout)
+    if worker is not None:
+        ws = worker.stop()
+        print(f"[cold-service] worker stopped at iteration "
+              f"{ws['iteration']}: {ws['swaps_total']} swaps "
+              f"({ws['live_swaps']} live), {ws['requests_total']} requests "
+              f"({ws['requests_pinned_across_swaps']} pinned across swaps)",
+              flush=True)
     print(f"[cold-service] stopped at iteration {st['iteration']}: "
           f"{st['fuses']} fuses, {st['fused_contributions']} contributions "
           f"fused, {st['rejected_total']} rejected "

@@ -92,6 +92,10 @@ STATUS_FILE = "service_status.json"
 QUARANTINE_DIR = "quarantine"
 GATE_STATE_FILE = "gate_state.json"
 METRICS_FILE = "metrics.jsonl"
+# owned by the ServingWorker (repro.serve.hot_swap), NOT the daemon: two
+# processes atomically rewriting one status file would clobber each other,
+# so the worker persists its own file and status() embeds it read-only
+SERVING_STATE_FILE = "serving_state.json"
 ERROR_RING = 16  # recent_errors entries kept (and persisted) per service
 
 
@@ -1147,7 +1151,17 @@ class ColdService:
             },
             "last_error": self._last_error,
             "recent_errors": list(self._recent_errors),
+            "serving": self._serving_state(),
             "pid": os.getpid(),
             "running": not self._stop,
             "updated_at": time.time(),
         }
+
+    def _serving_state(self) -> Optional[Dict[str, Any]]:
+        """The hot-swap worker's ``serving_state.json``, embedded
+        read-only (None when no worker ever served this root)."""
+        try:
+            return ckpt.load_json(
+                os.path.join(self.repo.root, SERVING_STATE_FILE))
+        except (FileNotFoundError, ValueError):
+            return None

@@ -43,16 +43,30 @@ class Engine:
 
         self._prefill = jax.jit(prefill)
 
-    def generate(self, prompts: np.ndarray, *, max_new_tokens: int = 16) -> GenerationResult:
-        """prompts: [B, P] int32 (fixed-length, packed by the caller)."""
+    def generate(self, prompts: np.ndarray, *, max_new_tokens: int = 16,
+                 params=None) -> GenerationResult:
+        """prompts: [B, P] int32 (fixed-length, packed by the caller).
+
+        ``params=`` serves this one request against a different (same-
+        shaped) parameter tree without retracing — the jitted prefill and
+        serve_step close over ``cfg`` only, so the hot-swap worker can pin
+        an in-flight request to the base version it started on while the
+        engine's default tree moves (docs/serving.md)."""
+        params = self.params if params is None else params
         B, P = prompts.shape
-        assert P + max_new_tokens <= self.max_len
+        if P + max_new_tokens > self.max_len:
+            # a real error, not an assert: asserts vanish under -O and a
+            # cache overrun would silently wrap the decode index instead
+            raise ValueError(
+                f"prompt_len={P} + max_new_tokens={max_new_tokens} exceeds "
+                f"max_len={self.max_len}; re-build the Engine with a larger "
+                "max_len or shorten the request")
         cache = init_cache(self.cfg, B, self.max_len)
-        logits, cache = self._prefill(self.params, jnp.asarray(prompts), cache)
+        logits, cache = self._prefill(params, jnp.asarray(prompts), cache)
         out = [jnp.argmax(logits, axis=-1)]
         for t in range(1, max_new_tokens):
             tok = out[-1][:, None]
-            logits, cache = self._serve(self.params, cache, tok,
+            logits, cache = self._serve(params, cache, tok,
                                         jnp.asarray(P + t - 1, jnp.int32))
             out.append(jnp.argmax(logits, axis=-1))
         gen = np.stack([np.asarray(o) for o in out], axis=1)

@@ -1,0 +1,308 @@
+"""Fuse-to-serve hot path: zero-downtime base hot-swap for the engine.
+
+The paper's synergistic loop (§1) only pays off when the continually
+improving base is actually *served*: contributors recycle finetunes into
+the repository and downstream users immediately generate against each
+newly published iteration.  ``ServingWorker`` is that wiring — it watches
+the repository's published iteration and swaps the engine onto every new
+base with zero downtime:
+
+* **double-buffered weights on device** — the next base is materialized
+  (in-process: adopted as the repository's own ``FlatSpec.unflatten``
+  device views; cross-process: per-leaf npz load) and made resident with
+  ``jax.block_until_ready`` while in-flight requests keep decoding
+  against the current tree.  No host-side dense ``[N]`` copy happens on
+  the swap path: the flat base was already unflattened straight into the
+  param tree by jitted slicing (``repro.utils.flat``), and the worker
+  adopts that tree by reference.
+* **atomic iteration pointer** — ``_current`` is a single Python
+  reference, flipped only AFTER the new tree is resident; readers either
+  see the old complete version or the new complete version, never a mix.
+* **version-pinned requests** — ``generate`` captures the current
+  ``BaseVersion`` once at entry and decodes every step against it, so a
+  request in flight across a swap completes on the base it started on.
+  The same holds across a gate ``rollback``, where the pointer moves
+  *backwards* (the target test is ``iteration != current``, not ``>``).
+
+Observability: the worker persists ``serving_state.json`` atomically
+(its own file — the daemon owns ``service_status.json`` and embeds this
+one as the ``"serving"`` block) and appends ``event="swap"`` records to
+the shared append-only ``metrics.jsonl``.
+
+Crash discipline (docs/serving.md crash matrix): the swap path carries
+three ``repro.utils.faults`` seams — ``worker.pre_transfer``,
+``worker.post_transfer_pre_flip``, ``worker.post_flip``.  The worker
+holds no durable state the repository does not already own; a restarted
+worker re-reads ``repository.json`` (written atomically, and the base
+npz is durable *before* the json names it) so it can only ever load a
+published, uncorrupted base — never a half-swapped one.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
+
+import jax
+import numpy as np
+
+from repro.checkpoint import io as ckpt
+from repro.serve.cold_service import METRICS_FILE, SERVING_STATE_FILE
+from repro.serve.engine import Engine
+from repro.utils import faults
+
+# module-level so the atomicity tests can spy on the residency barrier
+# (asserting it runs BEFORE the pointer flip)
+_block_until_ready = jax.block_until_ready
+
+
+class BaseVersion:
+    """One published base resident on device: the unit the pointer flips
+    between and the object a request pins at ``generate`` entry."""
+
+    __slots__ = ("iteration", "params")
+
+    def __init__(self, iteration: int, params: Any):
+        self.iteration = int(iteration)
+        self.params = params
+
+
+@dataclass
+class ServedGeneration:
+    """An Engine ``GenerationResult`` stamped with the base version that
+    served it (the pinned version — not necessarily the newest)."""
+
+    tokens: np.ndarray
+    prompt_len: int
+    steps: int
+    iteration: int
+    latency_s: float
+
+
+def _default_engine_factory(cfg, params, max_len: int) -> Engine:
+    return Engine(cfg, params, max_len=max_len)
+
+
+class ServingWorker:
+    """Serve the repository's latest published base, hot-swapping on
+    every publish/rollback with version-pinned in-flight requests.
+
+    Two watch modes share one swap path:
+
+    * **in-process** (``repo=``): subscribes via
+      ``Repository.add_publish_listener`` — the listener stores a
+      consistent ``(iteration, base, flat)`` snapshot taken *after* the
+      iteration bump, and the worker's own thread performs the swap.
+      (Raw polling of ``repo.iteration``/``repo._base`` from another
+      thread can pair iteration ``k`` with ``k+1``'s weights, because the
+      repository installs the base before bumping the counter.)
+    * **cross-process** (``root`` only): polls ``repository.json`` (an
+      atomic write) and loads ``base_iterNNNN.npz`` per leaf — durable
+      before the json names it, so the worker can never race into a
+      missing or torn base.
+
+    ``engine_factory(cfg, params, max_len)`` is pluggable so tests and
+    the interleaving property suite can swap in a fake engine; the real
+    ``Engine`` is built once (jit caches are keyed by shapes, so serving
+    a same-shaped new tree via ``generate(params=...)`` never retraces).
+    """
+
+    def __init__(self, cfg, root: Optional[str], *, repo=None,
+                 max_len: int = 256, name: str = "worker",
+                 engine_factory: Optional[Callable[..., Any]] = None):
+        if root is None and repo is None:
+            raise ValueError("ServingWorker needs a repository root, an "
+                             "attached Repository, or both")
+        self.cfg = cfg
+        self.root = root if root is not None else repo.root
+        self.max_len = int(max_len)
+        self.name = str(name)
+        self._engine_factory = engine_factory or _default_engine_factory
+        self._engine: Optional[Any] = None
+        self._current: Optional[BaseVersion] = None
+        self._announce: Optional[Tuple[int, Any, Any]] = None
+        self._repo = None
+        self._swap_lock = threading.Lock()
+        self._stats_lock = threading.Lock()
+        self.swaps_total = 0           # pointer flips, incl. initial adoption
+        self.live_swaps = 0            # flips while already serving a base
+        self.requests_total = 0
+        self.requests_pinned_across_swaps = 0
+        self.versions_served: Set[int] = set()
+        self.last_swap_latency_s: Optional[float] = None
+        self.last_swap: Optional[Dict[str, Any]] = None
+        self._swap_log: List[int] = []  # flip order, for the property suite
+        self._thread: Optional[threading.Thread] = None
+        self._stop_evt = threading.Event()
+        self.watch_error: Optional[str] = None
+        if repo is not None:
+            self.attach(repo)
+
+    # -- watch sources --------------------------------------------------
+    def attach(self, repo) -> None:
+        """Subscribe to an in-process Repository's publishes (and take an
+        initial snapshot of whatever it currently serves)."""
+        self._repo = repo
+        repo.add_publish_listener(self._on_publish)
+        self._announce = (repo.iteration, repo._base, repo._base_flat)
+
+    def _on_publish(self, iteration: int, base, flat) -> None:
+        # publisher's thread: store-only (one tuple assignment is atomic
+        # under the GIL); the worker thread does the transfer + flip
+        self._announce = (iteration, base, flat)
+
+    def _target(self) -> Optional[Tuple[int, Any]]:
+        """The published version to swap to, or None when current."""
+        cur = self._current
+        if self._repo is not None:
+            ann = self._announce
+            if ann is None:
+                return None
+            it, base, _flat = ann
+            if cur is not None and cur.iteration == int(it):
+                return None
+            return int(it), base
+        try:
+            meta = ckpt.load_json(os.path.join(self.root, "repository.json"))
+        except FileNotFoundError:
+            return None
+        it = int(meta["iteration"])
+        if cur is not None and cur.iteration == it:
+            return None
+        return it, None
+
+    # -- the swap -------------------------------------------------------
+    def poll_once(self) -> bool:
+        """Check for a newer (or rolled-back: *different*) published base
+        and hot-swap onto it.  Returns True when a swap happened."""
+        with self._swap_lock:
+            target = self._target()
+            if target is None:
+                return False
+            self._swap_to(*target)
+            return True
+
+    def _swap_to(self, iteration: int, base) -> None:
+        t0 = time.perf_counter()
+        faults.crash_point("worker.pre_transfer")
+        if base is None:
+            path = os.path.join(self.root, f"base_iter{iteration:04d}.npz")
+            base = ckpt.load(path)
+        # residency barrier: the new tree (lazy unflatten views in-process,
+        # fresh transfers cross-process) must be fully materialized on
+        # device BEFORE the flip — in-flight requests keep decoding against
+        # the current version the whole time (double-buffered weights)
+        _block_until_ready(base)
+        if self._engine is None:
+            self._engine = self._engine_factory(self.cfg, base, self.max_len)
+        faults.crash_point("worker.post_transfer_pre_flip")
+        prev = self._current
+        self._current = BaseVersion(iteration, base)   # the atomic flip
+        faults.crash_point("worker.post_flip")
+        dt = time.perf_counter() - t0
+        with self._stats_lock:
+            self.swaps_total += 1
+            if prev is not None:
+                self.live_swaps += 1
+            self.versions_served.add(iteration)
+            self.last_swap_latency_s = dt
+            self.last_swap = {
+                "from_iteration": None if prev is None else prev.iteration,
+                "to_iteration": iteration,
+                "swap_latency_s": dt,
+            }
+            self._swap_log.append(iteration)
+        self._persist_state()
+        ckpt.append_jsonl(os.path.join(self.root, METRICS_FILE), {
+            "t": time.time(), "event": "swap", "worker": self.name,
+            **self.last_swap,
+            "versions_served": len(self.versions_served),
+            "requests_total": self.requests_total,
+            "requests_pinned_across_swaps": self.requests_pinned_across_swaps,
+        })
+
+    # -- serving --------------------------------------------------------
+    @property
+    def current_iteration(self) -> Optional[int]:
+        cur = self._current
+        return None if cur is None else cur.iteration
+
+    def generate(self, prompts: np.ndarray, *, max_new_tokens: int = 16
+                 ) -> ServedGeneration:
+        """Version-pinned generation: the base version is captured ONCE
+        here, and every decode step runs against it — a swap (forward or
+        rollback) mid-request cannot tear the output across versions."""
+        version = self._current
+        if version is None:
+            raise RuntimeError(
+                "ServingWorker has no base resident yet — call poll_once() "
+                "(or start()) after the repository published")
+        t0 = time.perf_counter()
+        res = self._engine.generate(prompts, max_new_tokens=max_new_tokens,
+                                    params=version.params)
+        dt = time.perf_counter() - t0
+        with self._stats_lock:
+            self.requests_total += 1
+            if self._current is not version:
+                self.requests_pinned_across_swaps += 1
+        return ServedGeneration(tokens=res.tokens, prompt_len=res.prompt_len,
+                                steps=res.steps, iteration=version.iteration,
+                                latency_s=dt)
+
+    # -- observability --------------------------------------------------
+    def serve_state(self) -> Dict[str, Any]:
+        """The ``serving_state.json`` payload (also embedded by the
+        daemon's status endpoint as the ``"serving"`` block)."""
+        with self._stats_lock:
+            return {
+                "worker": self.name,
+                "iteration": self.current_iteration,
+                "swaps_total": self.swaps_total,
+                "live_swaps": self.live_swaps,
+                "versions_served": sorted(self.versions_served),
+                "last_swap": (None if self.last_swap is None
+                              else dict(self.last_swap)),
+                "last_swap_latency_s": self.last_swap_latency_s,
+                "requests_total": self.requests_total,
+                "requests_pinned_across_swaps":
+                    self.requests_pinned_across_swaps,
+                "watch_error": self.watch_error,
+                "pid": os.getpid(),
+                "updated_at": time.time(),
+            }
+
+    def _persist_state(self) -> None:
+        ckpt.save_json_atomic(
+            os.path.join(self.root, SERVING_STATE_FILE), self.serve_state())
+
+    # -- watch thread ---------------------------------------------------
+    def start(self, *, interval: float = 0.05) -> None:
+        """Run the watch loop on a daemon thread: poll/receive publishes
+        and hot-swap until ``stop``.  Swap errors are recorded (and the
+        current version keeps serving) rather than killing the loop."""
+        if self._thread is not None:
+            raise RuntimeError("worker already started")
+        self._stop_evt.clear()
+
+        def loop():
+            while not self._stop_evt.is_set():
+                try:
+                    self.poll_once()
+                except Exception as err:  # noqa: BLE001 - keep serving
+                    self.watch_error = f"{type(err).__name__}: {err}"
+                self._stop_evt.wait(interval)
+
+        self._thread = threading.Thread(
+            target=loop, name=f"serving-{self.name}", daemon=True)
+        self._thread.start()
+
+    def stop(self) -> Dict[str, Any]:
+        """Stop the watch thread and persist a final serving state."""
+        if self._thread is not None:
+            self._stop_evt.set()
+            self._thread.join(timeout=30.0)
+            self._thread = None
+        self._persist_state()
+        return self.serve_state()

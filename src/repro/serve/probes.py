@@ -38,14 +38,88 @@ so benign drift never accumulates into a false trip.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.data.synthetic import SyntheticSuite
 from repro.train.losses import accuracy, cls_loss
 from repro.utils.flat import FlatSpec
+
+
+class MultitaskEvals:
+    """REAL task evals for the regression gate: frozen
+    ``train/multitask``-format batches scored by running the actual model.
+
+    The synthetic linear-readout probes (below) are architecture-agnostic
+    but only measure that the base *moved*; this suite closes the ROADMAP
+    probe-quality gap — a gate trip means "task accuracy fell on held-out
+    data", because each probe is the model's own classification loss:
+    the flat ``[N]`` base is unflattened through the repository's
+    ``FlatSpec`` into the encoder body and scored with the same
+    ``classify``/``cls_loss`` the multitask trainer optimizes.
+
+    ``datasets`` uses the ``train_multitask`` format —
+    ``(task_id, x, y, n_cls)`` with ``x`` ``[n, T]`` int tokens and ``y``
+    ``[n]`` int labels; pass the held-out split, not training batches.
+    ``heads`` maps ``task_id -> cls head``; by default heads are
+    initialized with ``train_multitask``'s per-task seeding convention
+    (``seed * 997 + task_id``) so gate scores line up with a training run
+    that hands its trained heads in.  Everything is frozen at
+    construction: ``score`` is a pure deterministic function of the base,
+    which is what lets a restarted daemon replay a gate verdict
+    (docs/service_loop.md crash matrix).
+    """
+
+    def __init__(self, cfg, base_params, datasets: Sequence[Tuple[int, np.ndarray, np.ndarray, int]],
+                 *, seed: int = 0, heads: Optional[Dict[int, Any]] = None):
+        from repro.models import encoder as E  # heavyweight: local import
+        self._E = E
+        self.cfg = cfg
+        self.spec = FlatSpec.from_tree(base_params)
+        self.seed = int(seed)
+        if not datasets:
+            raise ValueError("MultitaskEvals needs at least one eval dataset")
+        self.heads: Dict[int, Any] = dict(heads) if heads else {}
+        self._batches: List[Tuple[str, int, np.ndarray, np.ndarray]] = []
+        for tid, x, y, n_cls in datasets:
+            tid = int(tid)
+            if tid not in self.heads:
+                self.heads[tid] = E.init_cls_head(
+                    cfg, jax.random.PRNGKey(self.seed * 997 + tid), n_cls)
+            self._batches.append((f"task{tid:02d}", tid,
+                                  np.asarray(x), np.asarray(y)))
+
+    @property
+    def size(self) -> int:
+        """Flat base length this suite scores (``FlatSpec.size``)."""
+        return self.spec.size
+
+    @property
+    def task_names(self) -> List[str]:
+        return [name for name, *_ in self._batches]
+
+    def _body(self, flat: np.ndarray):
+        return self.spec.unflatten(jnp.asarray(flat, self.spec.dtype))
+
+    def score(self, flat: np.ndarray) -> Dict[str, float]:
+        """Per-task eval losses of a flat ``[N]`` base."""
+        body = self._body(flat)
+        out: Dict[str, float] = {}
+        for name, tid, x, y in self._batches:
+            logits = self._E.classify(self.cfg, body, self.heads[tid], x)
+            out[name] = float(cls_loss(logits, jnp.asarray(y)))
+        return out
+
+    def accuracies(self, flat: np.ndarray) -> Dict[str, float]:
+        body = self._body(flat)
+        out: Dict[str, float] = {}
+        for name, tid, x, y in self._batches:
+            logits = self._E.classify(self.cfg, body, self.heads[tid], x)
+            out[name] = float(accuracy(logits, jnp.asarray(y)))
+        return out
 
 
 @dataclass
@@ -85,12 +159,30 @@ class ProbeSuite:
 
     def __init__(self, size: int, *, n_tasks: int = 4, n_examples: int = 32,
                  seq_len: int = 16, seed: int = 0,
-                 suite: Optional[SyntheticSuite] = None):
+                 suite: Optional[Any] = None):
         if size <= 0:
             raise ValueError(f"flat base size must be positive, got {size}")
         if n_tasks < 1:
             raise ValueError(f"need at least one probe task, got {n_tasks}")
         self.size = int(size)
+        # suite= accepts a MultitaskEvals: the gate then scores REAL task
+        # evals (model forward + cls_loss) instead of the synthetic linear
+        # readouts — a trip means "task accuracy fell" (docs/serving.md)
+        self._evals: Optional[MultitaskEvals] = None
+        if isinstance(suite, MultitaskEvals):
+            if suite.size != self.size:
+                raise ValueError(
+                    f"MultitaskEvals scores a flat base of size "
+                    f"{suite.size}, but the probe suite was asked for "
+                    f"size {self.size}")
+            self._evals = suite
+            self.suite = suite
+            self.n_tasks = len(suite.task_names)
+            self.n_examples = int(n_examples)
+            self.seq_len = int(seq_len)
+            self.seed = suite.seed
+            self._tasks = []
+            return
         self.n_tasks = int(n_tasks)
         self.n_examples = int(n_examples)
         self.seq_len = int(seq_len)
@@ -133,6 +225,8 @@ class ProbeSuite:
         """Per-task probe losses of a base (flat ``[N]`` row or pytree).
         Deterministic: the same base always produces the same scores."""
         flat = self._flat(base)
+        if self._evals is not None:
+            return self._evals.score(flat)
         out: Dict[str, float] = {}
         for name, feats, labels, idx, sign in self._tasks:
             m = feats.shape[1]
@@ -146,6 +240,8 @@ class ProbeSuite:
         """Per-task probe accuracies (observability only — the gate
         compares losses, which move smoothly under small drift)."""
         flat = self._flat(base)
+        if self._evals is not None:
+            return self._evals.accuracies(flat)
         out: Dict[str, float] = {}
         for name, feats, labels, idx, sign in self._tasks:
             m = feats.shape[1]

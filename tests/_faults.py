@@ -23,6 +23,17 @@ from repro.utils import faults
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+# the hot-swap worker's kill windows (repro/serve/hot_swap.py): before the
+# new base transfer, after transfer but before the pointer flip, and after
+# the flip but before the serving-state persist.  The crash matrix
+# (tests/test_hot_swap.py, docs/serving.md) proves a worker restarted from
+# any of them serves a published, uncorrupted base.
+SWAP_SEAMS = (
+    "worker.pre_transfer",
+    "worker.post_transfer_pre_flip",
+    "worker.post_flip",
+)
+
 
 def run_child(script: str, args: Sequence[str] = (), *,
               crash_at: Optional[str] = None,

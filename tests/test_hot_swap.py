@@ -1,0 +1,474 @@
+"""Fuse-to-serve hot path (repro/serve/hot_swap.py, docs/serving.md):
+swap atomicity units (residency-before-flip, version pinning across
+forward and rollback swaps), an interleaving property suite over
+publish/swap/generate/rollback, the real-eval regression-gate probes,
+and the swap-seam kill -9 crash matrix."""
+import os
+import shutil
+import tempfile
+import threading
+import types
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _faults import SWAP_SEAMS, run_child, wait_until
+from _hypothesis_compat import given, settings, st
+from repro.checkpoint import io as ckpt
+from repro.core.repository import Repository
+from repro.serve import hot_swap
+from repro.serve.cold_service import (METRICS_FILE, SERVING_STATE_FILE,
+                                      AdmissionPolicy, ColdService)
+from repro.serve.hot_swap import ServingWorker
+from repro.serve.probes import MultitaskEvals, ProbeSuite, RegressionGate
+
+PROMPTS = np.zeros((1, 2), np.int32)
+
+
+def _m(v, n=64):
+    return {"w": jnp.full((n,), float(v)), "b": jnp.full((5,), float(v))}
+
+
+def _repo(root, **kw):
+    kw.setdefault("screen", False)
+    return Repository(_m(0), root=str(root), spill=True, **kw)
+
+
+def _publish(repo, v) -> int:
+    """One single-row average fuse: the published base becomes _m(v)."""
+    repo.upload(_m(v))
+    repo.fuse_pending()
+    repo.flush()
+    return repo.iteration
+
+
+class _ValueEngine:
+    """Fake engine for the swap units: 'generation' returns the served
+    tree's scalar w value, so a token mismatch IS a version tear.  An
+    optional gate blocks mid-request to model an in-flight generate."""
+
+    def __init__(self, cfg, params, max_len):
+        self.params = params
+        self.max_len = max_len
+        self.gate = None
+
+    def generate(self, prompts, *, max_new_tokens=16, params=None):
+        p = self.params if params is None else params
+        if self.gate is not None:
+            self.gate["started"].set()
+            assert self.gate["release"].wait(10.0), "gate never released"
+        val = float(np.asarray(p["w"])[0])
+        toks = np.full((prompts.shape[0], prompts.shape[1] + max_new_tokens),
+                       val, np.float32)
+        return types.SimpleNamespace(tokens=toks,
+                                     prompt_len=int(prompts.shape[1]),
+                                     steps=int(max_new_tokens))
+
+
+def _fake(cfg, params, max_len):
+    return _ValueEngine(cfg, params, max_len)
+
+
+def _served_value(worker, **kw):
+    return float(worker.generate(PROMPTS, **kw).tokens[0, -1])
+
+
+# ---------------------------------------------------------------------------
+# swap atomicity units
+# ---------------------------------------------------------------------------
+
+
+def test_pointer_flips_only_after_residency(tmp_path, monkeypatch):
+    """The residency barrier must run BEFORE the pointer flip: while the
+    next base transfers, requests still see the old complete version."""
+    repo = _repo(tmp_path)
+    w = ServingWorker(None, str(tmp_path), repo=repo, engine_factory=_fake)
+    assert w.poll_once() and w.current_iteration == 0
+    at_barrier = []
+    real = hot_swap._block_until_ready
+    monkeypatch.setattr(
+        hot_swap, "_block_until_ready",
+        lambda tree: (at_barrier.append(w.current_iteration), real(tree))[1])
+    _publish(repo, 7.0)
+    assert w.poll_once()
+    assert at_barrier == [0], "barrier ran after (or without) the flip"
+    assert w.current_iteration == 1 and _served_value(w) == 7.0
+
+
+def test_generate_pinned_to_start_version_across_swap(tmp_path):
+    """An in-flight generate completes against the base it started on
+    even when the pointer flips mid-request."""
+    repo = _repo(tmp_path)
+    w = ServingWorker(None, str(tmp_path), repo=repo, engine_factory=_fake)
+    w.poll_once()
+    gate = {"started": threading.Event(), "release": threading.Event()}
+    w._engine.gate = gate
+    out = {}
+
+    def request():
+        out["res"] = w.generate(PROMPTS, max_new_tokens=3)
+
+    t = threading.Thread(target=request)
+    t.start()
+    assert gate["started"].wait(10.0)
+    w._engine.gate = None           # only the in-flight request blocks
+    _publish(repo, 9.0)
+    assert w.poll_once() and w.current_iteration == 1  # flip mid-request
+    gate["release"].set()
+    t.join(timeout=10.0)
+    res = out["res"]
+    assert res.iteration == 0, "request re-labelled across the swap"
+    assert float(res.tokens[0, -1]) == 0.0, "request decoded the new base"
+    assert w.requests_pinned_across_swaps == 1
+    assert _served_value(w) == 9.0  # the next request serves the new base
+
+
+def test_rollback_moves_pointer_backwards(tmp_path):
+    """A gate rollback publishes a SMALLER iteration; the worker must
+    swap backwards (target test is !=, not >) and serve the restored
+    base."""
+    repo = _repo(tmp_path)
+    w = ServingWorker(None, str(tmp_path), repo=repo, engine_factory=_fake)
+    w.poll_once()
+    _publish(repo, 3.0)
+    _publish(repo, 5.0)
+    assert w.poll_once() and w.current_iteration == 2
+    assert _served_value(w) == 5.0
+    repo.rollback(1)
+    assert w.poll_once(), "rollback publish was not observed"
+    assert w.current_iteration == 1
+    assert _served_value(w) == 3.0
+    assert w.last_swap == {"from_iteration": 2, "to_iteration": 1,
+                           "swap_latency_s": w.last_swap["swap_latency_s"]}
+    # the worker polled AFTER both publishes, so it jumped 0 -> 2 in one
+    # swap (a poll adopts the latest publish) and then rolled back to 1
+    assert w.live_swaps == 2 and w.versions_served == {0, 1, 2}
+
+
+def test_generate_before_first_swap_raises(tmp_path):
+    w = ServingWorker(None, str(tmp_path), engine_factory=_fake)
+    with pytest.raises(RuntimeError, match="no base resident"):
+        w.generate(PROMPTS)
+
+
+def test_cross_process_worker_and_status_embedding(tmp_path):
+    """A worker with only the root polls repository.json (atomic write;
+    base npz durable before the json names it) — and the daemon's status
+    embeds the worker's serving_state.json as the 'serving' block."""
+    repo = _repo(tmp_path)
+    _publish(repo, 4.0)
+    w = ServingWorker(None, str(tmp_path), engine_factory=_fake)  # no repo=
+    assert w.poll_once() and w.current_iteration == 1
+    assert _served_value(w) == 4.0
+    assert not w.poll_once(), "no new publish, no swap"
+    _publish(repo, 6.0)
+    assert w.poll_once() and w.current_iteration == 2
+    assert _served_value(w) == 6.0
+
+    state = ckpt.load_json(os.path.join(str(tmp_path), SERVING_STATE_FILE))
+    assert state["iteration"] == 2
+    assert state["versions_served"] == [1, 2]
+    assert state["swaps_total"] == 2 and state["live_swaps"] == 1
+    assert state["last_swap"]["swap_latency_s"] > 0.0
+
+    svc = ColdService(repo, policy=AdmissionPolicy())
+    st = svc.status()
+    assert st["serving"]["iteration"] == 2
+    assert st["serving"]["versions_served"] == [1, 2]
+    svc.close()
+
+    records = ckpt.read_jsonl(os.path.join(str(tmp_path), METRICS_FILE))
+    swaps = [r for r in records if r.get("event") == "swap"]
+    assert [s["to_iteration"] for s in swaps] == [1, 2]
+    assert all(s["swap_latency_s"] > 0 and "requests_pinned_across_swaps" in s
+               for s in swaps)
+
+
+def test_watch_thread_swaps_under_concurrent_traffic(tmp_path):
+    """Mini in-process load: client threads generate continuously while
+    publishes land; every response must carry exactly the value that was
+    published as its iteration — no torn or mixed versions."""
+    repo = _repo(tmp_path)
+    w = ServingWorker(None, str(tmp_path), repo=repo, engine_factory=_fake)
+    w.poll_once()
+    w.start(interval=0.001)
+    expected = {0: 0.0}
+    stop = threading.Event()
+    seen, errors = [], []
+
+    def client():
+        while not stop.is_set():
+            try:
+                r = w.generate(PROMPTS, max_new_tokens=2)
+                seen.append((r.iteration, float(r.tokens[0, -1])))
+            except Exception as err:  # noqa: BLE001
+                errors.append(err)
+
+    threads = [threading.Thread(target=client) for _ in range(3)]
+    for t in threads:
+        t.start()
+    try:
+        for k in range(1, 5):
+            expected[_publish(repo, 10.0 * k)] = 10.0 * k
+            wait_until(lambda k=k: w.current_iteration == k,
+                       desc=f"adoption of iteration {k}")
+    finally:
+        stop.set()
+        for t in threads:
+            t.join(timeout=10.0)
+        w.stop()
+    assert not errors
+    assert w.live_swaps >= 3
+    assert seen, "no traffic flowed"
+    torn = [(it, v) for it, v in seen if expected[it] != v]
+    assert not torn, f"version-torn responses: {torn[:5]}"
+    assert w.watch_error is None
+
+
+# ---------------------------------------------------------------------------
+# interleaving property suite
+# ---------------------------------------------------------------------------
+
+
+def _is_subsequence(sub, seq):
+    it = iter(seq)
+    return all(x in it for x in sub)  # `in` consumes the iterator
+
+
+@settings(max_examples=12)
+@given(st.data())
+def test_interleaving_serves_only_published_versions(data):
+    """Any interleaving of publish/swap/generate/rollback: every request
+    is served by exactly one published base version (the weights the
+    repository published AS that iteration when the worker adopted it),
+    and the served-version sequence is a subsequence of the
+    published-iteration sequence."""
+    ops = data.draw(st.lists(
+        st.sampled_from(["publish", "poll", "generate", "rollback"]),
+        min_size=4, max_size=14))
+    root = tempfile.mkdtemp(prefix="hot_swap_prop_")
+    try:
+        repo = _repo(root)
+        w = ServingWorker(None, root, repo=repo, engine_factory=_fake)
+        w.poll_once()
+        published_seq = [0]          # iteration stamps in publish order
+        live = {0: 0.0}              # iteration -> w published AS it (now)
+        served_seq = [0]             # worker flip order
+        swap_value = live[0]         # value captured at the last adoption
+        next_v = 1.0
+        for op in ops:
+            if op == "publish":
+                it = _publish(repo, next_v)
+                live[it] = next_v
+                published_seq.append(it)
+                next_v += 1.0
+            elif op == "rollback":
+                if repo.iteration == 0:
+                    continue
+                target = data.draw(st.integers(0, repo.iteration - 1))
+                repo.rollback(target)
+                live = {k: v for k, v in live.items() if k <= target}
+                published_seq.append(target)
+            elif op == "poll":
+                if w.poll_once():
+                    served_seq.append(w.current_iteration)
+                    swap_value = live[w.current_iteration]
+            else:
+                r = w.generate(PROMPTS, max_new_tokens=2)
+                assert r.iteration == w.current_iteration
+                assert float(r.tokens[0, -1]) == swap_value, (
+                    f"request served weights that were never published as "
+                    f"iteration {r.iteration}")
+        assert _is_subsequence(served_seq, published_seq), (
+            f"served {served_seq} is not a subsequence of published "
+            f"{published_seq}")
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+# ---------------------------------------------------------------------------
+# real task evals in the regression gate (ProbeSuite suite=)
+# ---------------------------------------------------------------------------
+
+
+def _eval_datasets(n_tasks=2, n_examples=12, seq_len=8):
+    from repro.data.synthetic import SyntheticSuite
+    suite = SyntheticSuite(num_tasks=n_tasks, seed=0)
+    out = []
+    for t in range(n_tasks):
+        ds = suite.dataset(t, 1, n_examples, seq_len, split_seed=0)
+        out.append((t, ds["x_test"], ds["y_test"],
+                    suite.tasks[t].num_classes))
+    return out
+
+
+def test_probe_suite_accepts_multitask_evals(tiny_cfg):
+    from repro.models import encoder as E
+    from repro.utils.flat import FlatSpec
+
+    body = E.init_encoder_body(tiny_cfg, jax.random.PRNGKey(0))
+    spec = FlatSpec.from_tree(body)
+    flat = np.asarray(spec.flatten(body), np.float32)
+    evals = MultitaskEvals(tiny_cfg, body, _eval_datasets(), seed=0)
+    probes = ProbeSuite(spec.size, suite=evals)
+    assert probes.n_tasks == 2
+
+    scores = probes.score(flat)
+    assert set(scores) == {"task00", "task01"}
+    assert scores == probes.score(flat), "real-eval probes must be pure"
+    accs = probes.accuracies(flat)
+    assert all(0.0 <= a <= 1.0 for a in accs.values())
+    # the pytree spelling scores identically to the flat row
+    assert probes.score(body) == scores
+
+    # a trashed base moves REAL task losses; the gate trips on it while
+    # the identical base stays clean
+    gate = RegressionGate(probes, tolerance=0.05)
+    assert gate.check(scores, flat).ok
+    harmful = flat + np.float32(50.0) * np.sign(flat)
+    report = gate.check(scores, harmful)
+    assert not report.ok and report.worst > 0.05
+
+    with pytest.raises(ValueError, match="size"):
+        ProbeSuite(spec.size + 1, suite=evals)
+
+
+def test_probe_suite_synthetic_path_unchanged():
+    """Regression: without suite=MultitaskEvals the synthetic linear-
+    readout probes behave exactly as before (same names, same scores)."""
+    flat = np.linspace(-1.0, 1.0, 501, dtype=np.float32)
+    a = ProbeSuite(flat.size, n_tasks=3, seed=0)
+    b = ProbeSuite(flat.size, n_tasks=3, seed=0)
+    assert a._evals is None
+    assert [t[0] for t in a._tasks] == [t[0] for t in b._tasks]
+    assert a.score(flat) == b.score(flat)
+    assert set(a.score(flat)) == {t[0] for t in a._tasks}
+    report = a.compare(a.score(flat), a.score(flat + 0.5), tolerance=1e-6)
+    assert isinstance(report.ok, bool)
+
+
+# ---------------------------------------------------------------------------
+# swap-seam kill -9 crash matrix
+# ---------------------------------------------------------------------------
+
+_SCENARIO = r'''
+import os, sys
+sys.path.insert(0, "src")
+import numpy as np, jax
+from repro.checkpoint import io as ckpt
+from repro.configs import get_config, reduce_config
+from repro.core.repository import Repository
+from repro.models.transformer import init_lm
+from repro.serve.cold_service import AdmissionPolicy, ColdService, ContributorClient
+from repro.serve.engine import Engine
+from repro.serve.hot_swap import ServingWorker
+
+root, phase = sys.argv[1], sys.argv[2]
+CFG = reduce_config(get_config("gemma3-1b"))
+PROMPT = np.arange(2, 6, dtype=np.int32)[None, :]
+
+if phase == "prep":
+    # iteration 0 exists, a worker has served it (serving_state at 0),
+    # and ONE finetune sits durably in the queue
+    params = init_lm(CFG, jax.random.PRNGKey(0))
+    repo = Repository(params, root=root, spill=True, screen=False)
+    w = ServingWorker(CFG, root, max_len=16)
+    w.poll_once()
+    r = w.generate(PROMPT, max_new_tokens=4)
+    assert r.iteration == 0, r.iteration
+    ft = jax.tree.map(lambda x: x + 0.01, params)
+    ContributorClient(root, name="c0").submit(ft, base_iteration=0)
+    print("PREP ok")
+
+elif phase == "fuse":
+    # the daemon fuses the queued contribution -> iteration 1 published
+    repo = Repository.open(root, spill=True)
+    svc = ColdService(repo, policy=AdmissionPolicy(min_cohort=1))
+    for _ in range(200):
+        stt = svc.run_once()
+        if (stt["iteration"] >= 1 and stt["queue_depth"] == 0
+                and stt["staged"] == 0 and not stt["inflight"]):
+            break
+    svc.close()
+    assert repo.iteration == 1, repo.iteration
+    print("FUSED it=1")
+
+elif phase == "swap":
+    # armed via REPRO_CRASH_POINT: dies at one of the 3 swap seams
+    w = ServingWorker(CFG, root, max_len=16)
+    w.poll_once()
+    print("SWAP survived")
+
+elif phase == "verify":
+    # a fresh worker must serve the PUBLISHED base bit-for-bit — never a
+    # half-swapped one — and the repository must show exactly-once fusion
+    w = ServingWorker(CFG, root, max_len=16)
+    w.poll_once()
+    r = w.generate(PROMPT, max_new_tokens=4)
+    meta = ckpt.load_json(os.path.join(root, "repository.json"))
+    it = int(meta["iteration"])
+    base = ckpt.load(os.path.join(root, "base_iter%04d.npz" % it))
+    oracle = Engine(CFG, base, max_len=16).generate(PROMPT, max_new_tokens=4)
+    assert r.iteration == it, (r.iteration, it)
+    assert np.array_equal(r.tokens, oracle.tokens), "half-swapped base served"
+    stt = ckpt.load_json(os.path.join(root, "serving_state.json"))
+    assert stt["iteration"] == it, stt
+    repo = Repository.open(root, spill=True)
+    assert repo.iteration == it, repo.iteration
+    assert len(repo.history) == it, "fusion replayed or lost"
+    qdir = os.path.join(root, "queue")
+    qfiles = [f for f in os.listdir(qdir)
+              if f.endswith(".npz")] if os.path.isdir(qdir) else []
+    print("DONE it=%d fused=%d qfiles=%d" % (it, len(repo.history), len(qfiles)))
+'''
+
+
+@pytest.fixture(scope="module")
+def _prepped_root(tmp_path_factory):
+    """iteration 1 published, worker state at iteration 0, queue GC'd —
+    the swap-crash phases never mutate the root, so one prep serves every
+    seam (each test clones it)."""
+    root = str(tmp_path_factory.mktemp("swap_crash") / "repo")
+    run_child(_SCENARIO, [root, "prep"])
+    run_child(_SCENARIO, [root, "fuse"])
+    return root
+
+
+def _clone(src, tmp_path):
+    dst = str(tmp_path / "repo")
+    shutil.copytree(src, dst)
+    return dst
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("point", SWAP_SEAMS)
+def test_swap_crash_matrix(tmp_path, _prepped_root, point):
+    """kill -9 at every swap seam: the restarted worker always serves a
+    published, uncorrupted base (token-identical to the on-disk npz the
+    atomic repository.json names) and fusion stays exactly-once."""
+    root = _clone(_prepped_root, tmp_path)
+    before = ckpt.load_json(os.path.join(root, SERVING_STATE_FILE))
+    assert before["iteration"] == 0
+    run_child(_SCENARIO, [root, "swap"], crash_at=point)
+    # whatever the kill window, serving_state is parseable (atomic write)
+    # and names only an iteration the worker FULLY adopted
+    after = ckpt.load_json(os.path.join(root, SERVING_STATE_FILE))
+    assert after["iteration"] == 0, (
+        "crashed worker persisted state for a swap it never completed")
+    out = run_child(_SCENARIO, [root, "verify"])
+    assert "DONE it=1 fused=1 qfiles=0" in out.stdout
+
+
+@pytest.mark.slow
+def test_swap_uninterrupted_reference(tmp_path, _prepped_root):
+    """The same scenario with no kill converges to the same state the
+    crash matrix demands — the matrix compares against a live bar."""
+    root = _clone(_prepped_root, tmp_path)
+    out = run_child(_SCENARIO, [root, "swap"])
+    assert "SWAP survived" in out.stdout
+    after = ckpt.load_json(os.path.join(root, SERVING_STATE_FILE))
+    assert after["iteration"] == 1
+    out = run_child(_SCENARIO, [root, "verify"])
+    assert "DONE it=1 fused=1 qfiles=0" in out.stdout

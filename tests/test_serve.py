@@ -2,6 +2,7 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs import get_config, reduce_config
 from repro.models.transformer import forward_lm, init_lm
@@ -23,6 +24,39 @@ def test_engine_matches_full_forward_greedy(key):
         nxt = jnp.argmax(logits[:, -1], axis=-1)
         toks = jnp.concatenate([toks, nxt[:, None]], axis=1)
     np.testing.assert_array_equal(res.tokens, np.asarray(toks))
+
+
+def test_generate_rejects_cache_overflow(key):
+    """A request past max_len must raise a real ValueError naming the
+    offending shapes — an assert would vanish under ``python -O`` and the
+    decode index would silently wrap the KV cache instead."""
+    cfg = reduce_config(get_config("gemma3-1b"))
+    eng = Engine(cfg, init_lm(cfg, key), max_len=8)
+    with pytest.raises(ValueError) as err:
+        eng.generate(np.zeros((1, 4), np.int32), max_new_tokens=16)
+    msg = str(err.value)
+    assert "prompt_len=4" in msg and "max_new_tokens=16" in msg
+    assert "max_len=8" in msg
+
+
+def test_generate_params_override_pins_a_version(key):
+    """generate(params=) serves a request against a caller-supplied tree
+    (the hot-swap worker's version pinning) without touching the engine's
+    default params."""
+    cfg = reduce_config(get_config("gemma3-1b"))
+    params = init_lm(cfg, key)
+    eng = Engine(cfg, params, max_len=24)
+    prompts = np.asarray(jax.random.randint(key, (1, 4), 3, cfg.vocab_size))
+    default = eng.generate(prompts, max_new_tokens=3)
+    pinned = eng.generate(prompts, max_new_tokens=3, params=params)
+    np.testing.assert_array_equal(default.tokens, pinned.tokens)
+    other = jax.tree.map(lambda x: x * 0.5, params)
+    moved = eng.generate(prompts, max_new_tokens=3, params=other)
+    oracle = Engine(cfg, other, max_len=24).generate(prompts, max_new_tokens=3)
+    np.testing.assert_array_equal(moved.tokens, oracle.tokens)
+    # the override is per-request: the default tree still serves
+    np.testing.assert_array_equal(
+        eng.generate(prompts, max_new_tokens=3).tokens, default.tokens)
 
 
 def test_engine_rwkv_stateful(key):
