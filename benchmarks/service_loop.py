@@ -36,6 +36,27 @@ scenario — a harmful cohort must trip exactly one rollback, land in
 quarantine, and leave the base bit-identical to the benign fixed point —
 so a gate that stopped gating can never post a (fast) number.
 
+The ``service_loop/routed_fusion`` row measures similarity-routed
+multi-base admission (docs/service_loop.md routing section): the same
+queue path served over a ``RepositoryFamily`` with ``max_bases > 1``, so
+every admission additionally pays the router's sketch-delta scoring and
+the atomic move into the routed member's queue directory.  The split
+rule is disarmed for the timed run (everything routes to ``main``), so
+the row isolates routing *overhead*.  The baseline is the sketch-armed
+single-base queue path (the ``novelty_screen`` run): routing's evidence
+IS the sketch window, so the sketch machinery's own cost — priced
+separately by the ``service_loop/novelty_screen`` row — is common to
+both sides and what remains is the router's scoring, the routes ring,
+and the family bookkeeping.  The bar is routed admission staying within
+1.3x of that sketch-armed single-base path (the unscreened ratio is
+reported alongside for context).  Before the row posts,
+``_routed_check`` asserts (1) parity — the routed-to-main fuse lands
+bit-close to the single-base fuse over the same rows — and (2)
+separation — two dissimilar patterned streams split onto two members,
+each publishing the closed-form fuse of only its own stream — so a
+router that stopped routing (or stopped separating) can never post a
+number.
+
 The ``service_loop/delta_compression`` row measures the delta-compressed
 submission path (docs/service_loop.md): K=24 sparse contributions enqueued
 as (top-k indices, int8 values, per-block scales) payloads vs the same
@@ -57,7 +78,9 @@ import numpy as np
 
 from benchmarks import common as C
 from benchmarks.fuse_e2e import K, _contributions, _model
-from repro.core.repository import Repository
+from repro.core.repository import (Repository, RepositoryFamily,
+                                   family_member_root)
+from repro.checkpoint import io as ckpt
 from repro.serve.cold_service import (QUEUE_DIR, AdmissionPolicy, ColdService,
                                       ContributorClient)
 from repro.serve.probes import ProbeSuite, RegressionGate
@@ -183,6 +206,106 @@ def _gate_rollback_check(base, contribs, gate):
             "rollback did not restore the benign fixed point"
 
 
+def _routed_serve(base, spec, submit, k, *, dispatch, split_threshold,
+                  max_bases=3):
+    """Drive the ROUTED queue path to quiescence: enqueue ``k`` rows via
+    ``submit(client)`` against a fresh ``RepositoryFamily``, admit with
+    the dispatch held back (min_cohort > k — routing and spawning happen
+    at admission, so the ingest split point still matches the single-base
+    path's), then publish every member.  Returns
+    ({member: fused_flat_row}, status, ingest_us, total_us)."""
+    with tempfile.TemporaryDirectory(prefix="svc_routed_") as root:
+        t0 = time.time()
+        family = RepositoryFamily.create(base, root=root, spill=True,
+                                         use_flat=True, screen=False)
+        svc = ColdService(family=family, policy=AdmissionPolicy(
+            min_cohort=k + 1, max_bases=max_bases,
+            split_threshold=split_threshold))
+        client = ContributorClient(root, name="bench")
+        submit(client)
+        for _ in range(64):
+            if svc.run_once()["staged"] == k:
+                break
+        t_ingest = time.time()
+        svc.policy.min_cohort = dispatch
+        for _ in range(128):
+            st = svc.run_once()
+            if (all(f["iteration"] >= 1 for f in st["families"].values())
+                    and not st["inflight"] and st["staged"] == 0
+                    and st["queue_depth"] == 0):
+                break
+        svc.close()
+        t_total = time.time()
+        # a run that rejected (or never published) a member must fail
+        # loudly, not get timed as if it had done the work
+        assert st["rejected_total"] == 0, st
+        assert all(f["iteration"] >= 1 for f in st["families"].values()), st
+        bases = {}
+        for name, f in st["families"].items():
+            tree = ckpt.load(os.path.join(
+                family_member_root(root, name),
+                f"base_iter{f['iteration']:04d}.npz"))
+            bases[name] = np.asarray(spec.flatten(tree))
+        return bases, st, (t_ingest - t0) * 1e6, (t_total - t0) * 1e6
+
+
+def _routed_check(base):
+    """The router's correctness scenarios, asserted before the perf row
+    is recorded: with the split rule disarmed every submission routes to
+    ``main`` and the fuse is bit-close to the single-base queue path;
+    with it armed, two dissimilar streams separate onto two members."""
+    spec = FlatSpec.from_tree(base)
+    base_row = np.asarray(spec.flatten(base))
+    n = base_row.size
+    nb = (n + LANE - 1) // LANE
+
+    def pat(t):
+        # per-LANE-tile constant signs: random per-element signs would
+        # cancel inside the sketch's bucket sums and blind the router
+        p = np.ones((nb * LANE,), np.float32)
+        for j in range(nb):
+            if (j + t) % 2:
+                p[j * LANE:(j + 1) * LANE] = -1.0
+        return p[:n]
+
+    rows_all = [base_row + (c + 1) * 0.1 * pat(t)
+                for t in (0, 1) for c in (0, 1)]
+
+    def submit_rows(client):
+        for r in rows_all:
+            client.submit(row=r, spec=spec, base_iteration=0)
+
+    with tempfile.TemporaryDirectory(prefix="svc_single_") as root:
+        _, _, single_fused = _serve_submissions(root, base, submit_rows, 4)
+    bases, st, _, _ = _routed_serve(base, spec, submit_rows, 4, dispatch=4,
+                                    split_threshold=1e6)
+    assert st["families_spawned_total"] == 0 and list(bases) == ["main"], st
+    err = float(np.max(np.abs(bases["main"] - single_fused)))
+    assert err < 1e-5, f"routed(main-only) fuse diverged from single-base " \
+                       f"fuse: max|diff|={err}"
+    bases, st, _, _ = _routed_serve(base, spec, submit_rows, 4, dispatch=2,
+                                    split_threshold=0.8)
+    assert st["families_spawned_total"] == 1 and len(bases) == 2, st
+    for t in (0, 1):
+        want = base_row + 0.15 * pat(t)  # mean of the stream's two deltas
+        hits = [nm for nm, row in bases.items()
+                if np.allclose(row, want, atol=1e-5)]
+        assert len(hits) == 1, (t, hits, sorted(bases))
+
+
+def _routed_once(base, spec, contribs):
+    """(ingest_us, total_us): the routed queue path over the standard
+    contribution set with the split rule disarmed — pure routing overhead
+    against ``_queue_once``, identical fuse outcome."""
+    def submit(client):
+        for c in contribs:
+            client.submit(c)
+    _, st, ingest_us, total_us = _routed_serve(
+        base, spec, submit, K, dispatch=K, split_threshold=1e6)
+    assert st["families_spawned_total"] == 0, st
+    return ingest_us, total_us
+
+
 CK = 24           # compression row: a bigger cohort, where queue bytes bite
 CKB = 64          # k_per_block — the codec's default sparsity budget
 
@@ -280,7 +403,7 @@ def _compression_rows(rows: C.Rows, reps: int = 2):
              f"params={n_params}")
 
 
-def run(rows: C.Rows, reps: int = 3):
+def run(rows: C.Rows, reps: int = 5):
     base = _model(jax.random.PRNGKey(0))
     contribs = _contributions(base, K)
     n_params = sum(x.size for x in jax.tree.leaves(base))
@@ -294,19 +417,24 @@ def run(rows: C.Rows, reps: int = 3):
     # one probe pool for every gated run: construction is service-start
     # cost, not per-cohort cost, so it stays outside the timed region
     gate = RegressionGate(ProbeSuite(FlatSpec.from_tree(base).size))
+    spec = FlatSpec.from_tree(base)
     _gate_rollback_check(base, contribs, gate)
+    _routed_check(base)
     _direct_once(base, contribs)  # warm the jit caches
     _queue_once(base, contribs)
     _queue_once(base, contribs, **novelty)
     _gate_once(base, contribs, gate)
+    _routed_once(base, spec, contribs)
     d = [_direct_once(base, contribs) for _ in range(reps)]
     q = [_queue_once(base, contribs) for _ in range(reps)]
     n = [_queue_once(base, contribs, **novelty) for _ in range(reps)]
     g = [_gate_once(base, contribs, gate) for _ in range(reps)]
+    r = [_routed_once(base, spec, contribs) for _ in range(reps)]
     di, dt = min(x[0] for x in d), min(x[1] for x in d)
     qi, qt = min(x[0] for x in q), min(x[1] for x in q)
     ni, nt = min(x[0] for x in n), min(x[1] for x in n)
     gi, gt = min(x[0] for x in g), min(x[1] for x in g)
+    ri, rt = min(x[0] for x in r), min(x[1] for x in r)
     rows.add("service_loop/throughput", qi,
              f"contribs_per_s={K / (qi / 1e6):.1f};direct_us={di:.1f};"
              f"vs_direct={qi / di:.2f}x;e2e_vs_direct={qt / dt:.2f}x;"
@@ -319,6 +447,12 @@ def run(rows: C.Rows, reps: int = 3):
              f"contribs_per_s={K / (gt / 1e6):.1f};ungated_us={qt:.1f};"
              f"e2e_vs_ungated={gt / qt:.2f}x;ingest_vs_ungated={gi / qi:.2f}x;"
              f"rollback_check=pass;K={K};params={n_params}")
+    rows.add("service_loop/routed_fusion", ri,
+             f"contribs_per_s={K / (ri / 1e6):.1f};screened_us={ni:.1f};"
+             f"vs_screened_single_base={ri / ni:.2f}x;"
+             f"vs_unscreened={ri / qi:.2f}x;"
+             f"e2e_vs_screened={rt / nt:.2f}x;"
+             f"separation_check=pass;K={K};params={n_params}")
     _compression_rows(rows)
 
 

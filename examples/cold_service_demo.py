@@ -41,6 +41,16 @@ harmful enough that the post-publish task probes trip.  The driver then
 verifies the gate rolled every harmful publish back on disk (the final
 base still matches the closed form), moved every planted row into
 ``<root>/quarantine/``, and logged the verdicts to ``metrics.jsonl``.
+
+``--tasks T`` runs T *dissimilar* contributor streams against a routed
+multi-base daemon (``--max-bases``, docs/service_loop.md): each task's
+finetune delta carries a distinct per-lane-tile sign pattern, every
+contributor declares ``family="main"`` in round 0 and then follows
+wherever the sketch router actually sent it (``route_of``).  The driver
+verifies the streams *separate*: exactly T family members at the end,
+each bit-close to the closed-form fuse of only its own task's stream,
+then runs one in-process ``cross_fuse`` and checks every member lands on
+the closed-form inter-family average.
 """
 import argparse
 import os
@@ -54,12 +64,26 @@ sys.path.insert(0, "src")
 import numpy as np
 
 W, B = 2048, 17  # tiny deterministic base: every element moves identically
+LANE = 1024      # repro.utils.flat.LANE — the sketch's bucket granularity
 
 
 def _expected_w(contributors: int, rounds: int) -> float:
     """w starts at 0; round r adds mean_c((c+1) * 0.1 * (r+1))."""
     mean_c = sum(c + 1 for c in range(contributors)) / contributors
     return sum(0.1 * (r + 1) * mean_c for r in range(rounds))
+
+
+def _task_pattern(t: int):
+    """Task t's finetune direction: alternating per-LANE-tile signs on w
+    (offset by t, so adjacent tasks are near-orthogonal in every sketch
+    bucket), all-positive b.  Signs must be constant per tile — random
+    per-element signs would cancel inside the sketch's bucket sums and
+    make every task look alike to the router."""
+    w = np.ones((W,), np.float32)
+    for j in range((W + LANE - 1) // LANE):
+        if (j + t) % 2:
+            w[j * LANE:(j + 1) * LANE] = -1.0
+    return {"w": w, "b": np.ones((B,), np.float32)}
 
 
 def contributor_main(args) -> int:
@@ -87,6 +111,44 @@ def contributor_main(args) -> int:
             print(f"[{name}] submitted harmful row {sub}", flush=True)
         return 0
 
+    if args.tasks > 1:
+        # a routed-stream contributor: round 0 declares main (the base is
+        # all-zeros, so the finetune IS the task-patterned delta) and then
+        # follows wherever the router actually sent it — the member name
+        # is discovered from the status routes ring, never assumed.
+        t, c = args.task, args.index
+        name = f"t{t}c{c}"
+        client = ContributorClient(args.root, name=name)
+        pat = _task_pattern(t)
+        home = "main"
+        for r in range(args.rounds):
+            delta = (c + 1) * 0.1 * (r + 1)
+            if r == 0:
+                client.wait_for_iteration(0, timeout=args.timeout)
+                finetuned = {k: delta * v for k, v in pat.items()}
+                sub = client.submit(finetuned, weight=1.0, base_iteration=0,
+                                    family="main")
+                deadline = time.time() + args.timeout
+                route = None
+                while route is None and time.time() < deadline:
+                    route = client.route_of(sub)
+                    if route is None:
+                        time.sleep(0.05)
+                if route is None:
+                    print(f"[{name}] round-0 route never landed", flush=True)
+                    return 1
+                home = route["family"]
+            else:
+                client.wait_for_family(home, r, timeout=args.timeout)
+                base = client.download_base(family=home)
+                finetuned = {k: np.asarray(base[k]) + delta * pat[k]
+                             for k in pat}
+                sub = client.submit(finetuned, weight=1.0, base_iteration=r,
+                                    family=home)
+            print(f"[{name}] round {r}: submitted {sub} -> {home} "
+                  f"(delta=+{delta:.2f})", flush=True)
+        return 0
+
     # a shadow contributor replays contributor --shadow-of's round-r
     # finetune under its own name: content the novelty screen must reject,
     # submission ids it must not.  The replay is rebuilt from the run's
@@ -98,7 +160,15 @@ def contributor_main(args) -> int:
     name = f"dup{args.index}" if shadow else f"c{args.index}"
     client = ContributorClient(args.root, name=name)
     for r in range(args.rounds):
-        st = client.wait_for_iteration(r, timeout=args.timeout)
+        # a shadow replays round r only once round r has FUSED (iteration
+        # r+1 published): the original's row is then guaranteed to be in
+        # the novelty screen's window, so the replay is deterministically
+        # the duplicate.  Replaying as soon as round r opens can win the
+        # race instead — the replay is admitted as novel and the original
+        # rejected, and the original's NEXT round then re-finetunes a
+        # newer base, leaving a genuinely-novel row staged forever.
+        st = client.wait_for_iteration(r + 1 if shadow else r,
+                                       timeout=args.timeout)
         delta = (index + 1) * 0.1 * (r + 1)
         if shadow:
             val = _expected_w(args.contributors, r) + delta
@@ -121,6 +191,72 @@ def contributor_main(args) -> int:
               f"{' COMPRESSED' if args.compress and not shadow else ''})",
               flush=True)
     return 0
+
+
+def _routed_checks(args, root, st, elapsed) -> int:
+    """Verify the routed run separated: exactly --tasks members, each
+    bit-close to the closed-form fuse of only its own task's stream
+    (membership decided by CONTENT, not by name — which stream ends up on
+    'main' depends on arrival order), then one in-process cross-fuse
+    round landing every member on the inter-family average."""
+    from repro.checkpoint import io as ckpt
+    from repro.core.repository import RepositoryFamily, family_member_root
+
+    fams = st.get("families") or {}
+    want_w = _expected_w(args.contributors, args.rounds)
+    per_member = args.contributors * args.rounds
+    ok = len(fams) == args.tasks
+    if not ok:
+        print(f"[demo] expected {args.tasks} members, have {sorted(fams)}",
+              flush=True)
+    got = {}
+    for n, f in sorted(fams.items()):
+        ok = ok and (f["iteration"] == args.rounds
+                     and f["fused_contributions"] == per_member)
+        got[n] = ckpt.load(os.path.join(
+            family_member_root(root, n),
+            f"base_iter{f['iteration']:04d}.npz"), as_jax=False)
+    matched = {}
+    for t in range(args.tasks):
+        want = {k: want_w * v for k, v in _task_pattern(t).items()}
+        hits = [n for n, bb in got.items()
+                if all(np.allclose(np.asarray(bb[k]), want[k], atol=1e-5)
+                       for k in want)]
+        if len(hits) == 1:
+            matched[t] = hits[0]
+        else:
+            print(f"[demo] task {t}: want exactly one member at closed "
+                  f"form, matched {hits}", flush=True)
+            ok = False
+    ok = ok and len(set(matched.values())) == args.tasks
+    cross_ok = False
+    if ok:
+        # one inter-cluster merge round: every member must land exactly on
+        # the mean of the pre-cross bases (closed form of cross_fuse at
+        # alpha=1), one iteration further on
+        pre = {n: {k: np.asarray(v) for k, v in bb.items()}
+               for n, bb in got.items()}
+        RepositoryFamily.open(root).cross_fuse()
+        mean = {k: np.mean([bb[k] for bb in pre.values()], axis=0)
+                for k in ("w", "b")}
+        cross_ok = True
+        for n in fams:
+            bb = ckpt.load(os.path.join(
+                family_member_root(root, n),
+                f"base_iter{args.rounds + 1:04d}.npz"), as_jax=False)
+            cross_ok = cross_ok and all(
+                np.allclose(np.asarray(bb[k]), mean[k], atol=1e-5)
+                for k in mean)
+        ok = ok and cross_ok
+    print(f"[demo] {args.tasks} tasks x {args.contributors} contributors x "
+          f"{args.rounds} rounds -> members {sorted(fams)} "
+          f"({st.get('families_spawned_total', 0)} spawned), "
+          f"task->member {matched}, "
+          f"{st['fused_contributions']} contributions fused in "
+          f"{elapsed:.1f}s", flush=True)
+    print(f"[demo] separation + cross-fuse -> "
+          f"{'OK' if ok else 'MISMATCH'}", flush=True)
+    return 0 if ok else 1
 
 
 def driver_main(args) -> int:
@@ -146,6 +282,16 @@ def driver_main(args) -> int:
         "--root", root, "--init-npz", base_npz,
         "--min-cohort", str(args.contributors), "--poll", "0.02",
     ]
+    routed = args.tasks > 1
+    # drain-driver mode: the daemon gets NO --max-iterations, because a
+    # counter the driver asserts on can land *after* the stop condition —
+    # the --duplicates flake was exactly that race (the replayer's last
+    # planted near-duplicate raced the final round's publish, so the
+    # daemon quiesced with novelty_rejected_total one short).  Instead
+    # the driver polls status until every asserted counter reaches its
+    # closed form AND the queue is fully drained, then asks for a clean
+    # shutdown; the idle timeout is only a backstop.
+    drain = not args.regress and (routed or args.duplicates > 0)
     if args.regress:
         # no --max-iterations: the daemon would quiesce at the benign fixed
         # point (iteration == rounds, empty queue) before the saboteurs'
@@ -153,9 +299,15 @@ def driver_main(args) -> int:
         # driver watches status for the gate verdict and asks for a clean
         # shutdown; the idle timeout is only a backstop.
         daemon_cmd += ["--gate", "--idle-timeout", str(args.timeout)]
+    elif drain:
+        daemon_cmd += ["--idle-timeout", str(args.timeout)]
     else:
         daemon_cmd += ["--max-iterations", str(args.rounds),
                        "--idle-timeout", "30"]
+    if routed:
+        max_bases = (args.max_bases if args.max_bases is not None
+                     else args.tasks + 1)
+        daemon_cmd += ["--max-bases", str(max_bases)]
     if args.mesh:
         daemon_cmd += ["--mesh", str(args.mesh)]
     if args.duplicates:
@@ -165,7 +317,7 @@ def driver_main(args) -> int:
                        "--sketch-window",
                        str(4 * (args.contributors + args.duplicates))]
 
-    def _spawn(i, shadow_of=None, regressor=False):
+    def _spawn(i, shadow_of=None, regressor=False, task=None):
         cmd = [sys.executable, os.path.abspath(__file__),
                "--role", "contributor", "--root", root, "--index", str(i),
                "--contributors", str(args.contributors),
@@ -176,6 +328,8 @@ def driver_main(args) -> int:
             cmd += ["--regressor"]
         if args.compress:
             cmd += ["--compress"]
+        if task is not None:
+            cmd += ["--tasks", str(args.tasks), "--task", str(task)]
         return subprocess.Popen(cmd, env=env)
 
     def _wait(name, proc):
@@ -190,12 +344,44 @@ def driver_main(args) -> int:
 
     t0 = time.time()
     daemon = subprocess.Popen(daemon_cmd, env=daemon_env)
-    workers = [(f"c{i}", _spawn(i)) for i in range(args.contributors)]
-    workers += [(f"dup{i}", _spawn(i, shadow_of=i % args.contributors))
-                for i in range(args.duplicates)]
-    workers += [(f"bad{i}", _spawn(i, regressor=True))
-                for i in range(args.regress)]
+    if routed:
+        workers = [(f"t{t}c{i}", _spawn(i, task=t))
+                   for t in range(args.tasks)
+                   for i in range(args.contributors)]
+    else:
+        workers = [(f"c{i}", _spawn(i)) for i in range(args.contributors)]
+        workers += [(f"dup{i}", _spawn(i, shadow_of=i % args.contributors))
+                    for i in range(args.duplicates)]
+        workers += [(f"bad{i}", _spawn(i, regressor=True))
+                    for i in range(args.regress)]
     failed = any([_wait(name, proc) for name, proc in workers])
+    if drain:
+        # every submission is on the queue; wait for the daemon to have
+        # fully processed them — every member at its final iteration,
+        # every planted replay rejected, nothing queued/staged/in flight —
+        # before asking it to quiesce (the closed-form checks below only
+        # hold once the drain condition does)
+        client = ContributorClient(root)
+        n_dup = args.duplicates * args.rounds
+        deadline = time.time() + args.timeout
+        while not failed and time.time() < deadline:
+            st = client.status()
+            if st is not None:
+                fams = st.get("families") or {}
+                settled = (len(fams) == args.tasks
+                           and all(f["iteration"] >= args.rounds
+                                   for f in fams.values())
+                           if routed else st["iteration"] >= args.rounds)
+                if (settled and st["queue_depth"] == 0 and st["staged"] == 0
+                        and not st["inflight"]
+                        and st["novelty_rejected_total"] == n_dup):
+                    break
+            time.sleep(0.1)
+        else:
+            if not failed:
+                print("[demo] daemon never drained", flush=True)
+                failed = True
+        daemon.terminate()
     if args.regress:
         # every saboteur row is in the queue; wait for the gate to finish
         # quarantining them all, then ask the daemon to quiesce
@@ -220,6 +406,8 @@ def driver_main(args) -> int:
         return 1
 
     st = ContributorClient(root).status()
+    if routed:
+        return _routed_checks(args, root, st, elapsed)
     want_w = _expected_w(args.contributors, args.rounds)
     got = ckpt.load(os.path.join(
         root, f"base_iter{st['iteration']:04d}.npz"), as_jax=False)
@@ -281,14 +469,26 @@ def main() -> int:
                    help="contributors enqueue delta-compressed submissions "
                         "(top-k int8 vs their downloaded base) instead of "
                         "dense rows")
+    p.add_argument("--tasks", type=int, default=1,
+                   help="run this many dissimilar contributor streams "
+                        "against a routed multi-base daemon and verify "
+                        "they separate (1 = the single-base demo)")
+    p.add_argument("--max-bases", type=int, default=None,
+                   help="family member cap for the routed daemon "
+                        "(default: --tasks + 1)")
     p.add_argument("--timeout", type=float, default=180.0)
     p.add_argument("--index", type=int, default=0, help="(contributor role)")
+    p.add_argument("--task", type=int, default=0,
+                   help="(contributor role) task stream index")
     p.add_argument("--shadow-of", type=int, default=None,
                    help="(contributor role) replay this index's submissions")
     p.add_argument("--regressor", action="store_true",
                    help="(contributor role) submit a harmful cohort after "
                         "the benign rounds finish")
     args = p.parse_args()
+    if args.tasks > 1 and (args.duplicates or args.regress or args.compress):
+        p.error("--tasks > 1 does not combine with "
+                "--duplicates/--regress/--compress")
     if args.role == "contributor":
         return contributor_main(args)
     return driver_main(args)

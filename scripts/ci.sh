@@ -53,7 +53,17 @@ python examples/cold_service_demo.py --contributors 2 --rounds 3 --mesh 8 \
 # inside the fused kernel and the same closed form must come out
 python examples/cold_service_demo.py --contributors 2 --rounds 3 --mesh 8 \
     --compress
+# ... and the similarity-routed round (docs/service_loop.md): two
+# dissimilar contributor streams against one daemon with --max-bases 3 —
+# the family must separate into exactly two members (each matching its
+# own stream's closed form, never the blend) and cross-fuse to the mean
+python examples/cold_service_demo.py --contributors 2 --rounds 3 --mesh 8 \
+    --tasks 2 --max-bases 3
 python -m pytest tests/test_cold_service.py -q -m slow
+# routing crash matrix + gate-isolation matrix + the 20-consecutive-run
+# duplicates-demo soak (the novelty-count race regression test — runs
+# WITHOUT retries by design: one flaky exit fails the stage)
+python -m pytest tests/test_routing.py -q -m slow
 
 # regression-gate stage: the forgetting gate end-to-end on the same forced
 # 8-fake-device mesh — a planted saboteur's harmful cohort must publish,
@@ -77,10 +87,12 @@ python -m pytest tests/test_hot_swap.py -q -m slow
 # kernel + end-to-end fuse micro-benches (smoke scale); refreshes
 # BENCH_kernels.json (including the fuse_e2e/mesh8_sharded,
 # fuse_e2e/async_overlap, service_loop/throughput,
-# service_loop/delta_compression, and serve_load/hot_swap rows — the
-# delta row asserts >=5x queue-bytes reduction and codec parity, the
-# hot-swap row asserts zero failed/torn requests across >=3 live swaps,
-# before posting) so the perf trajectory stays current
+# service_loop/delta_compression, service_loop/routed_fusion, and
+# serve_load/hot_swap rows — the delta row asserts >=5x queue-bytes
+# reduction and codec parity, the routed row asserts single-base fuse
+# parity AND two-stream separation, the hot-swap row asserts zero
+# failed/torn requests across >=3 live swaps, before posting) so the
+# perf trajectory stays current
 REPRO_BENCH_SCALE=quick python -m benchmarks.run --only kernels,fuse_e2e,service_loop,serve_load
 
 # examples cannot silently rot: both must run end-to-end at dry-run scale

@@ -186,6 +186,17 @@ def load_json(path: str) -> Any:
         return json.load(f)
 
 
+def move_atomic(src: str, dst: str) -> None:
+    """Move a file with ``os.replace`` semantics, creating the destination
+    directory first.  Same-filesystem renames are atomic: an observer sees
+    the file at exactly one of the two paths, never torn or at both — the
+    discipline the routed admission path relies on when it re-homes a
+    queue file into a family member's queue."""
+    dst = os.path.abspath(dst)
+    os.makedirs(os.path.dirname(dst), exist_ok=True)
+    os.replace(src, dst)
+
+
 # -- append-only JSONL (service metrics time series) ------------------------
 #
 # The atomic tmp+replace discipline above is wrong for a *time series*: a

@@ -119,6 +119,11 @@ class PendingFusion:
     k: int
     t0: float
     record: Optional[FusionRecord] = None
+    # per-fusion overrides (fuse_pending(buffer=..., alpha=/screen=/op=));
+    # None defers to the repository's configuration
+    alpha: Optional[float] = None
+    use_screen: Optional[bool] = None
+    op: Optional[str] = None
 
     @property
     def done(self) -> bool:
@@ -258,6 +263,12 @@ class Repository:
         # novelty admission state (docs/service_loop.md): None until the
         # service (or a caller) enables it via enable_cohort_sketch
         self.cohort_sketch: Optional[CohortSketch] = None
+        # base-family membership (docs/service_loop.md): set by
+        # RepositoryFamily; None for a standalone repository.  extra_meta
+        # rides along in repository.json verbatim — the family manifest
+        # lives there, and a plain open+publish must never drop it.
+        self.family_name: Optional[str] = None
+        self.extra_meta: Dict[str, Any] = {}
         if root:
             os.makedirs(root, exist_ok=True)
             self._persist_base()
@@ -634,9 +645,24 @@ class Repository:
             # base it was computed from — docs/service_loop.md).
             entry["compressed"] = True
             entry["codec"] = meta.get("delta_spec")
-            bi = (meta.get("extra") or {}).get("base_iteration")
+            extra = meta.get("extra") or {}
+            bi = extra.get("base_iteration")
             if bi is not None:
                 entry["base_iteration"] = int(bi)
+            # family-vintage backstop: a delta is only decodable against
+            # the exact base it was encoded from, and under a base family
+            # that base is named.  The service's routed admission rejects
+            # cross-family deltas before ingest; this guard makes the
+            # invariant unconditional for direct callers too.
+            if self.family_name is not None:
+                declared = str(extra.get("family") or "main")
+                if declared != self.family_name:
+                    raise ValueError(
+                        f"stale: delta encoded against family "
+                        f"{declared!r}, but this member is "
+                        f"{self.family_name!r} — refusing to decode "
+                        "against the wrong base")
+                entry["family"] = declared
         side.rows.append(path)
         side.fishers.append(None)
         side.weights.append(weight)
@@ -715,7 +741,8 @@ class Repository:
         if self.cohort_sketch is None or not self.use_flat:
             return
         self._ensure_flat_base()  # rebuilt lazily after publish/rollback
-        self.cohort_sketch.set_base(self._sketch_of_staged(self._base_flat))
+        self.cohort_sketch.set_base(self._sketch_of_staged(self._base_flat),
+                                    iteration=self.iteration)
         self.save_cohort_sketch()
 
     def sketch_row_file(self, path: str, *, meta: Optional[Dict[str, Any]] = None
@@ -847,6 +874,9 @@ class Repository:
         buffer: Optional[Union[StagedBuffer, jax.Array]] = None,
         *,
         wait: bool = True,
+        alpha: Optional[float] = None,
+        screen: Optional[bool] = None,
+        op: Optional[str] = None,
     ) -> Union[FusionRecord, PendingFusion]:
         """Screen + fuse a cohort into the new base (Fig. 1, step 4).
 
@@ -861,10 +891,17 @@ class Repository:
         ``buffer=`` fuses an explicit staged operand instead — a
         ``StagedBuffer`` handle (or raw ``[K, N]`` / sharded
         ``[K, S, shard_len]`` array) prepared by the caller; the front
-        staging buffer is left untouched."""
+        staging buffer is left untouched.  ``alpha=`` overrides the
+        per-op step size, ``screen=`` overrides the §9 screen, and
+        ``op=`` relabels the FusionRecord — the family cross-fuse uses
+        all three (member bases are not a contributor cohort); they are
+        only meaningful with ``buffer=``."""
         self._finalize_inflight()
         if buffer is not None:
-            return self._fuse_buffer(buffer, wait=wait)
+            return self._fuse_buffer(buffer, wait=wait, alpha=alpha,
+                                     screen=screen, op=op)
+        if alpha is not None or screen is not None or op is not None:
+            raise ValueError("alpha=/screen=/op= overrides require buffer=")
         if not self._pending:
             raise RuntimeError("no contributions to fuse")
         t0 = time.time()
@@ -1042,7 +1079,8 @@ class Repository:
         fused = pf.fused
         report: Optional[ScreenReport] = None
         n_accepted = pf.k
-        if self.screen:
+        use_screen = self.screen if pf.use_screen is None else pf.use_screen
+        if use_screen:
             norms = norms_from_sq(jax.device_get(pf.sq))
             report = screen_norms(norms, mad_threshold=self.mad_threshold)
             n_accepted = len(report.accepted)
@@ -1051,7 +1089,8 @@ class Repository:
             if report.rejected:
                 w2 = np.asarray(jax.device_get(pf.weights), np.float32).copy()
                 w2[report.rejected] = 0.0
-                alpha = self._flat_alpha(n_accepted)
+                alpha = (self._flat_alpha(n_accepted) if pf.alpha is None
+                         else pf.alpha)
                 fused, _ = self._fuse_flat(
                     pf.stage, jnp.asarray(w2), alpha, donate=True)
         fused.block_until_ready()
@@ -1059,7 +1098,7 @@ class Repository:
             iteration=self.iteration,
             n_contributions=pf.k,
             n_accepted=n_accepted,
-            op=self.fusion_op,
+            op=pf.op or self.fusion_op,
             diff_norms=report.diff_norms if report else [],
             wall_time=time.time() - pf.t0,
         )
@@ -1069,7 +1108,11 @@ class Repository:
         pf.record = rec
         return rec
 
-    def _fuse_buffer(self, buffer, *, wait: bool) -> Union[FusionRecord, PendingFusion]:
+    def _fuse_buffer(self, buffer, *, wait: bool,
+                     alpha: Optional[float] = None,
+                     screen: Optional[bool] = None,
+                     op: Optional[str] = None,
+                     ) -> Union[FusionRecord, PendingFusion]:
         """Fuse an explicit staged operand (``fuse_pending(buffer=...)``)."""
         if not self.use_flat:
             raise ValueError("fuse_pending(buffer=...) requires the flat engine")
@@ -1089,13 +1132,16 @@ class Repository:
         t0 = time.time()
         K = buffer.k
         w = self._cohort_weights(K, [])
-        alpha = self._flat_alpha(K)
+        use_screen = self.screen if screen is None else bool(screen)
+        a = self._flat_alpha(K) if alpha is None else float(alpha)
         # never donate here: the operand belongs to the CALLER (unlike the
         # freshly stacked buffer in _dispatch_flat) and must stay valid
-        fused, sq = self._fuse_flat(buffer, w, alpha, donate=False)
+        fused, sq = self._fuse_flat(buffer, w, a, donate=False)
         pf = PendingFusion(
-            stage=buffer if self.screen else None,
-            fused=fused, sq=sq, weights=w, k=K, t0=t0)
+            stage=buffer if use_screen else None,
+            fused=fused, sq=sq, weights=w, k=K, t0=t0,
+            alpha=None if alpha is None else float(alpha),
+            use_screen=None if screen is None else use_screen, op=op)
         if not wait:
             self._inflight = pf
             return pf
@@ -1413,6 +1459,11 @@ class Repository:
             if it < self._persisted_iteration:
                 return  # a newer publish already landed
             ckpt.save(os.path.join(self.root, f"base_iter{it:04d}.npz"), base)
+            if self.extra_meta:
+                # re-merge LIVE extra_meta: a publish task captured before
+                # a family spawn must not clobber the manifest entry the
+                # spawn just recorded
+                meta = {**meta, **self.extra_meta}
             # atomic like every other publish artifact: a crash mid-write
             # must not brick Repository.open with truncated repository.json
             ckpt.save_json_atomic(os.path.join(self.root, "repository.json"),
@@ -1421,7 +1472,7 @@ class Repository:
 
     def _render_meta(self) -> Dict[str, Any]:
         spec = self._spec if self._spec is not None else FlatSpec.from_tree(self._base)
-        return {
+        meta = {
             "iteration": self.iteration,
             "fusion_op": self.fusion_op,
             "fusion_kwargs": self.fusion_kwargs,
@@ -1443,6 +1494,10 @@ class Repository:
                 for r in self.history
             ],
         }
+        # opaque rider keys (e.g. the family manifest) survive every
+        # publish of this repository verbatim
+        meta.update(self.extra_meta)
+        return meta
 
     # -- crash recovery ---------------------------------------------------
     def _recover_staged(self, manifest: Dict[str, Any], spec: FlatSpec) -> int:
@@ -1569,6 +1624,10 @@ class Repository:
         repo.iteration = it
         repo.root = root
         repo._persisted_iteration = it
+        if "families" in meta:
+            # the family manifest rides repository.json (RepositoryFamily
+            # owns its content); a plain open+publish must carry it forward
+            repo.extra_meta["families"] = meta["families"]
         if spill and not repo.use_flat:
             warnings.warn(
                 "spill=True requested but the repository reopened on the "
@@ -1611,3 +1670,184 @@ class Repository:
                         f"cohort sketch was built for N={sk.size} rows but "
                         f"the base is N={spec.size} — ignoring it")
         return repo
+
+
+# ---------------------------------------------------------------------------
+# RepositoryFamily — a model zoo of named bases under one root
+# ---------------------------------------------------------------------------
+
+FAMILY_DIR = "families"
+
+
+def family_member_root(root: str, name: str) -> str:
+    """Filesystem root of a family member.  ``main`` IS the top-level root
+    — a single-base repository and a one-member family share a byte-
+    identical layout — and every spawned member owns a complete repository
+    layout (queue, spill manifest, sketch, gate state, bases) under
+    ``<root>/families/<name>/``."""
+    return root if name == "main" else os.path.join(root, FAMILY_DIR, name)
+
+
+class RepositoryFamily:
+    """A named family of Repository members sharing one on-disk root — the
+    model-zoo layer of similarity-routed fusion (docs/service_loop.md).
+
+    The **family manifest** is a ``"families"`` key riding the top-level
+    ``repository.json`` (the main member's meta): a map of member name →
+    ``{root, seeded_from, seed_iteration, created_at}``.  ``open`` on a
+    pre-family single-base layout migrates it in place by writing the
+    implicit ``{"main": {"root": "."}}`` manifest — no file moves, so
+    every existing repository (and ``Repository.open`` caller) keeps
+    working; ``Repository.open`` itself carries an existing manifest
+    through publishes untouched via ``extra_meta``.
+
+    ``spawn`` creates a new member seeded from an existing member's base
+    at a declared vintage.  The member directory is persisted durably
+    BEFORE the manifest entry (crash between the two leaves an orphan
+    directory that the next same-named spawn adopts idempotently — the
+    ``repo.post_family_spawn`` fault seam pins this in the crash matrix).
+
+    ``cross_fuse`` is the inter-cluster merge: every member fuses the
+    OTHER members' bases through the ordinary flat fuse path
+    (``fuse_pending(buffer=...)``) with step size ``alpha·(M−1)/M``, so
+    at ``alpha=1`` each member lands exactly on the simultaneous mean of
+    all pre-cross bases (the closed form the routed demo asserts)."""
+
+    def __init__(self, main: Repository, *, member_kw: Optional[Dict[str, Any]] = None):
+        if not main.root:
+            raise ValueError("RepositoryFamily requires an on-disk root")
+        self.root = main.root
+        self.member_kw = dict(member_kw or {})
+        main.family_name = "main"
+        self.members: Dict[str, Repository] = {"main": main}
+        self._meta: Dict[str, Dict[str, Any]] = {"main": {"root": "."}}
+
+    @classmethod
+    def create(cls, base_params, *, root: str, **kw) -> "RepositoryFamily":
+        """Initialize a NEW family: a main member at ``root`` plus the
+        manifest.  ``kw`` goes to the Repository constructor and is
+        remembered for spawned members."""
+        main = Repository(base_params, root=root, **kw)
+        fam = cls(main, member_kw=kw)
+        fam._write_family_manifest()
+        return fam
+
+    @classmethod
+    def open(cls, root: str, **kw) -> "RepositoryFamily":
+        """Open an on-disk family (or migrate a single-base layout in
+        place).  ``kw`` is applied to every member's ``Repository.open``
+        and remembered for spawns."""
+        main = Repository.open(root, **kw)
+        fam = cls(main, member_kw=kw)
+        meta = main.extra_meta.get("families")
+        if meta is None:
+            # single-base layout: migrate by writing the implicit manifest
+            fam._write_family_manifest()
+            return fam
+        fam._meta = {str(n): dict(e) for n, e in meta.items()}
+        fam._meta.setdefault("main", {"root": "."})
+        for name in sorted(fam._meta):
+            if name == "main":
+                continue
+            mroot = os.path.join(root, fam._meta[name]["root"])
+            member = Repository.open(mroot, **kw)
+            member.family_name = name
+            fam.members[name] = member
+        main.extra_meta["families"] = fam._meta
+        return fam
+
+    def __len__(self) -> int:
+        return len(self.members)
+
+    def member_root(self, name: str) -> str:
+        return family_member_root(self.root, name)
+
+    def _write_family_manifest(self) -> None:
+        """Persist the manifest into the top-level repository.json under
+        the main member's publish lock (publish tasks write the same file;
+        ``_persist_base`` re-merges live ``extra_meta``, so a captured
+        older publish can never clobber a newer manifest)."""
+        main = self.members["main"]
+        main.extra_meta["families"] = self._meta
+        with main._publish_lock:
+            ckpt.save_json_atomic(
+                os.path.join(self.root, "repository.json"),
+                main._render_meta(), default=_json_default)
+
+    def spawn(self, *, seed_family: str = "main",
+              seed_iteration: Optional[int] = None,
+              name: Optional[str] = None) -> str:
+        """Create (or crash-adopt) a new member seeded from
+        ``seed_family``'s base at ``seed_iteration`` (its current base
+        when None, or when that vintage's npz is no longer on disk).
+        Names are deterministic (``f1``, ``f2``, … smallest free), so a
+        spawn replayed after a crash converges on the same member."""
+        src = self.members[seed_family]
+        if name is None:
+            k = 1
+            while f"f{k}" in self._meta or f"f{k}" in self.members:
+                k += 1
+            name = f"f{k}"
+        if name in self.members:
+            raise ValueError(f"family member {name!r} already exists")
+        mroot = self.member_root(name)
+        it = src.iteration if seed_iteration is None else int(seed_iteration)
+        if os.path.exists(os.path.join(mroot, "repository.json")):
+            # a previous spawn persisted the member but crashed before the
+            # manifest entry: adopt it as-is
+            member = Repository.open(mroot, **self.member_kw)
+        else:
+            seed_path = os.path.join(src.root, f"base_iter{it:04d}.npz")
+            if not os.path.exists(seed_path):
+                # declared vintage compacted away (or not yet durable):
+                # seed from the source's current base instead
+                src.flush()
+                it = src.iteration
+                src._persist_base()
+                seed_path = os.path.join(src.root, f"base_iter{it:04d}.npz")
+            seed = ckpt.load(seed_path)
+            spawn_kw: Dict[str, Any] = dict(
+                fusion_op=src.fusion_op, fusion_kwargs=src.fusion_kwargs,
+                screen=src.screen, mad_threshold=src.mad_threshold)
+            spawn_kw.update(self.member_kw)
+            member = Repository(seed, root=mroot, **spawn_kw)
+        member.family_name = name
+        self.members[name] = member
+        faults.crash_point("repo.post_family_spawn")
+        self._meta[name] = {
+            "root": f"{FAMILY_DIR}/{name}",
+            "seeded_from": seed_family,
+            "seed_iteration": it,
+            "created_at": time.time(),
+        }
+        self._write_family_manifest()
+        return name
+
+    def cross_fuse(self, *, alpha: float = 1.0) -> Dict[str, FusionRecord]:
+        """Inter-cluster merge: fuse every member toward the mean of the
+        OTHER members' bases through the ordinary flat fuse path.  All
+        pre-cross bases are snapshotted first, so the update is
+        simultaneous; with the default ``alpha=1.0`` every member lands
+        exactly on the mean of all pre-cross bases, and smaller ``alpha``
+        interpolates toward it.  Each member's publish runs the full
+        pipeline (history record, iteration bump, persist, listeners) with
+        the §9 screen bypassed — member bases are not a contributor
+        cohort.  No-op (empty dict) for a family of one."""
+        names = sorted(self.members)
+        if len(names) < 2:
+            return {}
+        for n in names:
+            m = self.members[n]
+            m.flush()
+            m._ensure_flat_base()
+        bases = {n: self.members[n]._base_flat for n in names}
+        ak = float(alpha) * (len(names) - 1) / len(names)
+        recs: Dict[str, FusionRecord] = {}
+        for n in names:
+            m = self.members[n]
+            others = [bases[o] for o in names if o != n]
+            stage = StagedBuffer(m._stack_stage(others))
+            recs[n] = m.fuse_pending(buffer=stage, wait=True, alpha=ak,
+                                     screen=False,
+                                     op=f"cross_fuse(alpha={alpha:g})")
+        return recs

@@ -32,7 +32,7 @@ import signal
 import sys
 
 from repro.checkpoint import io as ckpt
-from repro.core.repository import Repository
+from repro.core.repository import Repository, RepositoryFamily
 from repro.serve.cold_service import AdmissionPolicy, ColdService
 from repro.serve.probes import ProbeSuite, RegressionGate
 
@@ -50,7 +50,22 @@ def build_service(args) -> ColdService:
     kw = dict(spill=True, spill_workers=args.spill_workers)
     if mesh is not None:
         kw["mesh"] = mesh
-    if os.path.exists(os.path.join(args.root, "repository.json")):
+    routed = args.max_bases > 1
+    family = None
+    if routed:
+        if os.path.exists(os.path.join(args.root, "repository.json")):
+            family = RepositoryFamily.open(args.root, **kw)
+        else:
+            if not args.init_npz:
+                raise SystemExit(f"{args.root} holds no repository.json — "
+                                 "pass --init-npz to initialize a new "
+                                 "repository")
+            base = ckpt.load(args.init_npz)
+            family = RepositoryFamily.create(
+                base, root=args.root, screen=not args.no_screen,
+                fusion_op=args.fusion_op, **kw)
+        repo = family.members["main"]
+    elif os.path.exists(os.path.join(args.root, "repository.json")):
         repo = Repository.open(args.root, **kw)
     else:
         if not args.init_npz:
@@ -68,6 +83,9 @@ def build_service(args) -> ColdService:
         novelty_threshold=args.novelty_threshold,
         sketch_window=args.sketch_window,
         compact_keep_bases=args.compact_keep,
+        max_bases=args.max_bases,
+        split_threshold=args.split_threshold,
+        cross_fuse_every=args.cross_fuse_every,
     )
     gate = None
     if args.gate:
@@ -77,6 +95,8 @@ def build_service(args) -> ColdService:
                        n_examples=args.probe_examples,
                        seed=args.probe_seed),
             tolerance=args.probe_tolerance)
+    if routed:
+        return ColdService(family=family, policy=policy, gate=gate)
     return ColdService(repo, policy=policy, gate=gate)
 
 
@@ -109,6 +129,19 @@ def main(argv=None) -> int:
                    help="recent admissions the novelty screen remembers")
     p.add_argument("--compact-keep", type=int, default=None, metavar="M",
                    help="compact after each publish, keeping M bases")
+    p.add_argument("--max-bases", type=int, default=1, metavar="B",
+                   help="serve a base FAMILY of up to B members, routing "
+                        "each submission to its nearest base by sketch "
+                        "distance and spawning a new member when nothing "
+                        "is near (docs/service_loop.md; default 1 = the "
+                        "single-base loop)")
+    p.add_argument("--split-threshold", type=float, default=0.8, metavar="D",
+                   help="relative sketch distance beyond which a "
+                        "submission founds a new family member "
+                        "(--max-bases > 1)")
+    p.add_argument("--cross-fuse-every", type=int, default=0, metavar="K",
+                   help="after every K publishes, fuse the family members "
+                        "into each other (inter-cluster merge; 0 = never)")
     p.add_argument("--gate", action="store_true",
                    help="arm the forgetting regression gate: probe every "
                         "publish against the pre-fuse baseline; on a "
@@ -170,6 +203,13 @@ def main(argv=None) -> int:
               f"({ws['live_swaps']} live), {ws['requests_total']} requests "
               f"({ws['requests_pinned_across_swaps']} pinned across swaps)",
               flush=True)
+    fams = st.get("families")
+    if fams:
+        detail = ", ".join(f"{n}@it{f['iteration']}"
+                           for n, f in sorted(fams.items()))
+        print(f"[cold-service] family: {detail} "
+              f"({st['families_spawned_total']} spawned, "
+              f"{st['cross_fuses_total']} cross-fuses)", flush=True)
     print(f"[cold-service] stopped at iteration {st['iteration']}: "
           f"{st['fuses']} fuses, {st['fused_contributions']} contributions "
           f"fused, {st['rejected_total']} rejected "

@@ -49,6 +49,7 @@ import jax
 import numpy as np
 
 from repro.checkpoint import io as ckpt
+from repro.core.repository import family_member_root
 from repro.serve.cold_service import METRICS_FILE, SERVING_STATE_FILE
 from repro.serve.engine import Engine
 from repro.utils import faults
@@ -101,7 +102,10 @@ class ServingWorker:
     * **cross-process** (``root`` only): polls ``repository.json`` (an
       atomic write) and loads ``base_iterNNNN.npz`` per leaf — durable
       before the json names it, so the worker can never race into a
-      missing or torn base.
+      missing or torn base.  Pass ``family="f1"`` to follow a named
+      member of a multi-base family: the worker resolves that member's
+      root (a full repository layout of its own) and everything else —
+      polling, swap, rollback handling — is identical.
 
     ``engine_factory(cfg, params, max_len)`` is pluggable so tests and
     the interleaving property suite can swap in a fake engine; the real
@@ -110,11 +114,22 @@ class ServingWorker:
     """
 
     def __init__(self, cfg, root: Optional[str], *, repo=None,
+                 family: Optional[str] = None,
                  max_len: int = 256, name: str = "worker",
                  engine_factory: Optional[Callable[..., Any]] = None):
         if root is None and repo is None:
             raise ValueError("ServingWorker needs a repository root, an "
                              "attached Repository, or both")
+        if family is not None and repo is not None:
+            raise ValueError(
+                "family= selects a member under a family root in "
+                "cross-process watch mode; when attaching in-process, pass "
+                "that member's Repository directly as repo=")
+        self.family = None if family is None else str(family)
+        if self.family is not None:
+            # a member root is a full repository layout, so the whole
+            # watch/swap path below works against it unchanged
+            root = family_member_root(root, self.family)
         self.cfg = cfg
         self.root = root if root is not None else repo.root
         self.max_len = int(max_len)
@@ -258,6 +273,7 @@ class ServingWorker:
         with self._stats_lock:
             return {
                 "worker": self.name,
+                "family": self.family,
                 "iteration": self.current_iteration,
                 "swaps_total": self.swaps_total,
                 "live_swaps": self.live_swaps,

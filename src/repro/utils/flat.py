@@ -299,8 +299,15 @@ class CohortSketch:
         self.n_buckets = int(n_buckets)
         self.window = int(window)
         self.base: Optional[np.ndarray] = None
-        # (id, originating queue file, sketch), oldest first
-        self.entries: List[Tuple[str, Optional[str], np.ndarray]] = []
+        self.base_iteration: Optional[int] = None
+        # recent base sketches by iteration — the router diffs a rider
+        # against the base vintage its contributor actually finetuned from,
+        # which may already have been superseded by the time the row admits
+        self.bases: Dict[int, np.ndarray] = {}
+        # (id, originating queue file, sketch, delta projections or None),
+        # oldest first
+        self.entries: List[Tuple[str, Optional[str], np.ndarray,
+                                 Optional[np.ndarray]]] = []
 
     def __len__(self) -> int:
         return len(self.entries)
@@ -344,13 +351,30 @@ class CohortSketch:
         return d / scale
 
     # -- window maintenance ---------------------------------------------
-    def set_base(self, sketch) -> None:
-        self.base = self._check(sketch)
+    BASE_HISTORY = 8
 
-    def add(self, sub_id: str, sketch, *, file: Optional[str] = None) -> None:
+    def set_base(self, sketch, iteration: Optional[int] = None) -> None:
+        self.base = self._check(sketch)
+        if iteration is not None:
+            self.base_iteration = int(iteration)
+            self.bases[int(iteration)] = self.base
+            for it in sorted(self.bases)[: -self.BASE_HISTORY]:
+                del self.bases[it]
+
+    def base_at(self, iteration: Optional[int] = None
+                ) -> Optional[np.ndarray]:
+        """The base sketch at a given iteration (falling back to the
+        current base when that vintage is unknown or unspecified)."""
+        if iteration is not None and int(iteration) in self.bases:
+            return self.bases[int(iteration)]
+        return self.base
+
+    def add(self, sub_id: str, sketch, *, file: Optional[str] = None,
+            delta: Optional[Any] = None) -> None:
         arr = self._check(sketch)
+        d = None if delta is None else np.asarray(delta, np.float64)
         self.entries = [e for e in self.entries if e[0] != sub_id]
-        self.entries.append((str(sub_id), file, arr))
+        self.entries.append((str(sub_id), file, arr, d))
         del self.entries[: -self.window]
 
     def discard(self, sub_id: str) -> None:
@@ -367,7 +391,7 @@ class CohortSketch:
         — the submission's own pre-crash entry, never a forged-id replay
         under a different queue file."""
         best: Optional[Tuple[str, float]] = None
-        for sub_id, file, s in self.entries:
+        for sub_id, file, s, _d in self.entries:
             if (skip_id is not None and sub_id == skip_id
                     and file is not None and file == skip_file):
                 continue
@@ -395,19 +419,153 @@ class CohortSketch:
             "n_buckets": self.n_buckets,
             "window": self.window,
             "base": None if self.base is None else self.base.tolist(),
-            "entries": [{"id": i, "file": f, "sketch": s.tolist()}
-                        for i, f, s in self.entries],
+            "base_iteration": self.base_iteration,
+            "bases": {str(it): s.tolist() for it, s in self.bases.items()},
+            "entries": [{"id": i, "file": f, "sketch": s.tolist(),
+                         "delta": None if d is None else d.tolist()}
+                        for i, f, s, d in self.entries],
         }
 
     @classmethod
     def from_json(cls, meta: Dict[str, Any]) -> "CohortSketch":
         sk = cls(int(meta["size"]), int(meta["n_buckets"]),
                  int(meta["window"]))
+        for it, s in meta.get("bases", {}).items():
+            sk.bases[int(it)] = sk._check(s)
         if meta.get("base") is not None:
-            sk.set_base(meta["base"])
+            sk.set_base(meta["base"], iteration=meta.get("base_iteration"))
         for e in meta.get("entries", []):
-            sk.add(e["id"], e["sketch"], file=e.get("file"))
+            sk.add(e["id"], e["sketch"], file=e.get("file"),
+                   delta=e.get("delta"))
         return sk
+
+
+# ---------------------------------------------------------------------------
+# FamilyRouter — sketch-distance routing over a family of bases
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class RouteDecision:
+    """Outcome of routing one submission against the base family.
+
+    ``family`` is the member to fuse into (None when ``spawn`` — the
+    service creates the new member and routes there); ``distance`` is the
+    winning relative lower-bound distance (None when the decision was a
+    bootstrap fallback); ``scores`` maps every scored member to its
+    distance; ``delta`` is the rider's base-relative projection delta, the
+    evidence recorded in the routed member's sketch window."""
+
+    family: Optional[str]
+    spawn: bool
+    distance: Optional[float]
+    scores: Dict[str, float]
+    delta: Optional[np.ndarray]
+    reason: str
+
+
+class FamilyRouter:
+    """Route submissions to their nearest base-family member by sketch
+    distance (docs/service_loop.md).
+
+    The unit of comparison is the **delta projection**: bucket projections
+    are linear in the row, so ``rider_sketch[0] − base_sketch[0]`` is
+    exactly the sketch of the contributor's finetune delta — the task
+    direction, with the shared base subtracted out.  Two submissions from
+    the same task stream have near-colinear deltas; streams from different
+    tasks point elsewhere.  The router scores a rider against member ``m``
+    as the minimum over
+
+    * ``lb(rider, base_m) / ‖δ‖``  — how close the full row sits to
+      ``m``'s base itself (catches resubmissions of a member's own base),
+      using the same two-sided lower bound as the novelty screen; and
+    * ``lb_p(δ − δ_e) / max(‖δ‖, ‖δ_e‖)`` over ``m``'s windowed delta
+      entries ``δ_e`` — the base-relative distance between finetune
+      directions (projection bound only: norms of deltas are not
+      recoverable from row sq-norm sketches).
+
+    Colinear same-stream deltas of magnitudes ``m1 ≤ m2`` score
+    ``1 − m1/m2`` (small within a cohort window); independent task
+    directions score O(1) or above.  Decision rules:
+
+    * no member holds any delta evidence yet → route to the declared
+      family (bootstrap: the first stream claims its declared base);
+    * a vanishing rider delta (the row IS its declared base) → declared;
+    * nearest distance ≤ ``split_threshold`` → route to the argmin
+      (ties prefer the declared member);
+    * nearest distance > ``split_threshold`` and the family is below
+      ``max_bases`` → spawn a new member seeded from the declared base;
+      at the cap, route to the argmin anyway (graceful saturation).
+    """
+
+    def __init__(self, *, split_threshold: float = 0.8, max_bases: int = 4):
+        if split_threshold <= 0:
+            raise ValueError(
+                f"split_threshold must be > 0, got {split_threshold}")
+        self.split_threshold = float(split_threshold)
+        self.max_bases = int(max_bases)
+
+    @staticmethod
+    def _delta_norm(delta: np.ndarray, seg_elems: int) -> float:
+        return float(np.sqrt(np.sum(np.asarray(delta, np.float64) ** 2)
+                             / seg_elems))
+
+    def route(self, sketch, sketches: Dict[str, CohortSketch], *,
+              declared: str = "main",
+              base_iteration: Optional[int] = None) -> RouteDecision:
+        """Score ``sketch`` against every family member and decide.
+
+        ``sketches`` maps member name → that member's ``CohortSketch``
+        (base sketch + windowed delta evidence); ``declared`` /
+        ``base_iteration`` identify the base vintage the rider claims it
+        finetuned from, which anchors the delta."""
+        if declared not in sketches:
+            raise KeyError(f"unknown declared family {declared!r}")
+        ref = sketches[declared]
+        arr = ref._check(sketch)
+        b0 = ref.base_at(base_iteration)
+        if b0 is None:
+            return RouteDecision(declared, False, None, {}, None,
+                                 "declared member holds no base sketch yet")
+        delta = arr[0] - np.asarray(b0, np.float64)[0]
+        dn = self._delta_norm(delta, ref.seg_elems)
+        if dn <= CohortSketch.EPS:
+            return RouteDecision(declared, False, 0.0, {}, delta,
+                                 "rider sits on its declared base")
+        if not any(e[3] is not None for sk in sketches.values()
+                   for e in sk.entries):
+            return RouteDecision(declared, False, None, {}, delta,
+                                 "bootstrap: no routing evidence yet")
+        scores: Dict[str, float] = {}
+        for name, sk in sketches.items():
+            terms: List[float] = []
+            if sk.base is not None:
+                terms.append(ref._lb(arr, np.asarray(sk.base, np.float64))
+                             / dn)
+            for e in sk.entries:
+                de = e[3]
+                if de is None:
+                    continue
+                den = max(dn, self._delta_norm(de, ref.seg_elems),
+                          CohortSketch.EPS)
+                terms.append(
+                    float(np.sqrt(np.sum((delta - de) ** 2)
+                                  / ref.seg_elems)) / den)
+            if terms:
+                scores[name] = min(terms)
+        nearest = min(scores, key=lambda n: (scores[n], n != declared, n))
+        best = scores[nearest]
+        if best > self.split_threshold and len(sketches) < self.max_bases:
+            return RouteDecision(
+                None, True, best, scores, delta,
+                f"nearest member {nearest} at {best:.3f} > "
+                f"split_threshold {self.split_threshold:g}")
+        if best > self.split_threshold:
+            reason = (f"at max_bases={self.max_bases}: routed to nearest "
+                      f"{nearest} despite {best:.3f} > split_threshold")
+        else:
+            reason = f"nearest member {nearest} at {best:.3f}"
+        return RouteDecision(nearest, False, best, scores, delta, reason)
 
 
 # ---------------------------------------------------------------------------

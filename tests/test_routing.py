@@ -1,0 +1,728 @@
+"""Similarity-routed multi-base fusion (docs/service_loop.md routing
+section): admission routing + spawn/cap semantics, per-family compressed
+vintage pinning, per-member gate isolation, the routing kill -9 crash
+matrix (new seams ``service.post_route`` / ``repo.post_family_spawn``
+plus the original five windows), a seeded interleaving property suite
+over mixed-task streams, and the 20-run deflake proof for the
+``--duplicates`` demo."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from _faults import run_child
+from repro.checkpoint import io as ckpt
+from repro.core.repository import (Repository, RepositoryFamily,
+                                   family_member_root)
+from repro.serve.cold_service import (QUEUE_DIR, AdmissionPolicy,
+                                      ColdService, ContributorClient)
+from repro.serve.probes import ProbeSuite, RegressionGate
+from repro.utils.flat import LANE, FlatSpec, delta_encode
+
+W, B = 2048, 17  # >= 2 full LANE tiles on w, so tile-sign patterns exist
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _pat(t, mod=2):
+    """Task t's finetune direction: per-LANE-tile constant signs (random
+    per-element signs would cancel inside the sketch's bucket sums and
+    make every task look identical to the router)."""
+    w = np.ones((W,), np.float32)
+    for j in range(W // LANE):
+        if (j + t) % mod == (0 if mod == 3 else 1):
+            w[j * LANE:(j + 1) * LANE] = -1.0
+    return {"w": w, "b": np.ones((B,), np.float32)}
+
+
+def _zeros():
+    return {"w": np.zeros((W,), np.float32),
+            "b": np.zeros((B,), np.float32)}
+
+
+def _fam(root, **kw):
+    kw.setdefault("screen", False)
+    kw.setdefault("spill", True)
+    return RepositoryFamily.create(_zeros(), root=str(root), **kw)
+
+
+def _svc(root, **pol):
+    pol.setdefault("min_cohort", 2)
+    pol.setdefault("max_bases", 3)
+    return ColdService(family=_fam(root), policy=AdmissionPolicy(**pol))
+
+
+def _drain(svc, max_cycles=200):
+    for _ in range(max_cycles):
+        st = svc.run_once()
+        if (st["queue_depth"] == 0 and st["staged"] == 0
+                and not st["inflight"]):
+            return st
+    raise AssertionError(f"service did not drain in {max_cycles} cycles: {st}")
+
+
+def _member_base(root, name, iteration):
+    bb = ckpt.load(os.path.join(family_member_root(str(root), name),
+                                f"base_iter{iteration:04d}.npz"),
+                   as_jax=False)
+    return {k: np.asarray(v) for k, v in bb.items()}
+
+
+def _match_members(root, st, tasks, want_w, *, mod=2):
+    """Content-determined task->member matching: which member's base is
+    the closed-form fuse of task t's stream (name assignment depends on
+    arrival order, so tests must never assume 'main' == task 0)."""
+    fams = st["families"]
+    matched = {}
+    for t in range(tasks):
+        want = {k: want_w * v for k, v in _pat(t, mod=mod).items()}
+        hits = [n for n, f in fams.items()
+                if all(np.allclose(_member_base(root, n, f["iteration"])[k],
+                                   want[k], atol=1e-5) for k in want)]
+        assert len(hits) == 1, (t, hits, sorted(fams))
+        matched[t] = hits[0]
+    assert len(set(matched.values())) == tasks, matched
+    return matched
+
+
+def _submit_round(root, t, c, r, home="main", base=None):
+    delta = (c + 1) * 0.1 * (r + 1)
+    pat = _pat(t)
+    if base is None:
+        base = _zeros()
+    fin = {k: np.asarray(base[k]) + delta * pat[k] for k in pat}
+    return ContributorClient(root, name=f"t{t}c{c}").submit(
+        fin, weight=1.0, base_iteration=r, family=home)
+
+
+# ---------------------------------------------------------------------------
+# separation: two dissimilar streams end up on two members, closed form
+# ---------------------------------------------------------------------------
+
+
+def test_two_streams_separate_closed_form(tmp_path):
+    """Round 0 declared against main routes task 0 and task 1 onto two
+    different members, each publishing the closed-form fuse of only its
+    own stream; round 1 follows the routed member and stays separated."""
+    root = str(tmp_path / "repo")
+    svc = _svc(root)
+    for t in range(2):
+        for c in range(2):
+            _submit_round(root, t, c, 0)
+    st = _drain(svc)
+    assert sorted(st["families"]) == ["f1", "main"]
+    assert st["families_spawned_total"] == 1
+    for f in st["families"].values():
+        assert f["iteration"] == 1 and f["fused_contributions"] == 2
+    matched = _match_members(root, st, 2, 0.15)
+    # round 1: each stream follows its routed home member
+    for t in range(2):
+        home = matched[t]
+        base = _member_base(root, home, 1)
+        for c in range(2):
+            _submit_round(root, t, c, 1, home=home, base=base)
+    st = _drain(svc)
+    assert sorted(st["families"]) == ["f1", "main"]
+    for f in st["families"].values():
+        assert f["iteration"] == 2 and f["fused_contributions"] == 4
+    assert _match_members(root, st, 2, 0.45) == matched
+    svc.close()
+
+
+def test_routes_ring_and_route_of(tmp_path):
+    """Every routed admission lands in the status routes ring with its
+    decision; ``ContributorClient.route_of`` finds it by submission id."""
+    root = str(tmp_path / "repo")
+    svc = _svc(root)
+    subs = [_submit_round(root, t, c, 0) for t in range(2) for c in range(2)]
+    st = _drain(svc)
+    routes = {r["id"]: r for r in st["routes"]}
+    assert set(routes) == set(subs)
+    assert "bootstrap" in routes[subs[0]]["reason"]
+    assert sum(1 for r in routes.values() if r["spawned"]) == 1
+    client = ContributorClient(root)
+    for sub in subs:
+        r = client.route_of(sub)
+        assert r is not None and r["family"] in st["families"]
+    # same-stream rows landed together, cross-stream rows apart
+    assert routes[subs[0]]["family"] == routes[subs[1]]["family"]
+    assert routes[subs[2]]["family"] == routes[subs[3]]["family"]
+    assert routes[subs[0]]["family"] != routes[subs[2]]["family"]
+    svc.close()
+
+
+def test_spawn_cap_routes_to_nearest(tmp_path):
+    """At ``max_bases`` the router stops minting members: a third
+    dissimilar stream fuses into its nearest existing member instead of
+    spawning, and nothing is dropped."""
+    root = str(tmp_path / "repo")
+    svc = _svc(root, min_cohort=1, max_bases=2)
+    for t in range(3):
+        for c in range(2):
+            _submit_round(root, t, c, 0)
+    st = _drain(svc)
+    assert len(st["families"]) == 2
+    assert st["families_spawned_total"] == 1
+    assert sum(f["fused_contributions"]
+               for f in st["families"].values()) == 6
+    assert st["rejected_total"] == 0
+    svc.close()
+
+
+def test_unknown_declared_family_is_malformed(tmp_path):
+    """A rider declaring a family the manifest has never heard of is a
+    per-file rejection, not a crash and not a silent reroute."""
+    root = str(tmp_path / "repo")
+    svc = _svc(root, min_cohort=1)
+    ContributorClient(root, name="c0").submit(
+        {k: 0.1 * v for k, v in _pat(0).items()}, base_iteration=0,
+        family="nope")
+    st = _drain(svc)
+    assert st["rejected_total"] == 1
+    assert "unknown family" in st["recent_rejects"][0]["reason"]
+    assert st["fused_contributions"] == 0
+    svc.close()
+
+
+# ---------------------------------------------------------------------------
+# compressed submissions pin their vintage to (family, base_iteration)
+# ---------------------------------------------------------------------------
+
+
+def _two_member_family(root, svc):
+    """Build a 2-member family: one benign round of two streams."""
+    for t in range(2):
+        for c in range(2):
+            _submit_round(root, t, c, 0)
+    st = _drain(svc)
+    assert len(st["families"]) == 2
+    return _match_members(root, st, 2, 0.15)
+
+
+def test_compressed_cross_family_route_is_stale_reject(tmp_path):
+    """Satellite bugfix: a delta encoded against family A's base whose
+    content routes to family B must be a per-file 'stale' rejection —
+    decoding it against B's base would silently corrupt B's cohort."""
+    root = str(tmp_path / "repo")
+    svc = _svc(root)
+    matched = _two_member_family(root, svc)
+    a, b = matched[0], matched[1]
+    base_a = _member_base(root, a, 1)
+    # hand-forge the cross-family rider: encoded against A's CURRENT
+    # base (so the vintage itself is fresh), but the content moves in
+    # task 1's direction, so the router sends it to B
+    fin = {k: base_a[k] + 0.3 * _pat(1)[k] for k in base_a}
+    sub = ContributorClient(root, name="forger").submit(
+        fin, weight=1.0, base_iteration=svc._lanes[a].repo.iteration,
+        compress=True, base=base_a, family=a)
+    st = _drain(svc)
+    rej = [r for r in st["recent_rejects"] if r["file"] == sub + ".npz"]
+    assert len(rej) == 1, st["recent_rejects"]
+    assert "stale" in rej[0]["reason"] and a in rej[0]["reason"]
+    # nothing decoded, nothing fused, both members untouched
+    for f in st["families"].values():
+        assert f["iteration"] == 1 and f["fused_contributions"] == 2
+    svc.close()
+
+
+def test_compressed_spawn_decision_is_stale_reject(tmp_path):
+    """A compressed rider whose content would FOUND a new member is
+    equally unfusable (the new member's base is not the encoding base):
+    rejected before any member is minted."""
+    root = str(tmp_path / "repo")
+    svc = _svc(root, min_cohort=1)
+    # seed main with task-0 evidence so a task-1 row scores a spawn
+    _submit_round(root, 0, 0, 0)
+    st = _drain(svc)
+    assert st["families_spawned_total"] == 0
+    base = _member_base(root, "main", 1)
+    fin = {k: base[k] + 0.3 * _pat(1)[k] for k in base}
+    sub = ContributorClient(root, name="forger").submit(
+        fin, weight=1.0, base_iteration=1, compress=True, base=base,
+        family="main")
+    st = _drain(svc)
+    rej = [r for r in st["recent_rejects"] if r["file"] == sub + ".npz"]
+    assert len(rej) == 1 and "stale" in rej[0]["reason"]
+    assert st["families_spawned_total"] == 0  # no member minted for it
+    assert len(st["families"]) == 1
+    svc.close()
+
+
+def test_ingest_spilled_cross_family_backstop(tmp_path):
+    """Defense in depth under the service: a member Repository refuses
+    outright to decode a delta declared against another family member,
+    even if a (buggy) caller hands it one directly."""
+    root = str(tmp_path / "repo")
+    fam = _fam(root)
+    fam.spawn(name="f1")
+    main = fam.members["main"]
+    spec = FlatSpec.from_tree(_zeros())
+    base = np.zeros((spec.size,), np.float32)
+    row = 0.1 * np.asarray(spec.flatten(_pat(0)), np.float32)
+    pay = delta_encode(row, base, k_per_block=LANE)
+    path = os.path.join(root, QUEUE_DIR, "forged.npz")
+    ckpt.save_flat_delta(path, pay, spec, extra={
+        "id": "x-000000", "base_iteration": 0, "family": "f1"})
+    with pytest.raises(ValueError, match="stale.*family 'f1'"):
+        main.ingest_spilled(path, weight=1.0)
+
+
+# ---------------------------------------------------------------------------
+# per-member gate isolation
+# ---------------------------------------------------------------------------
+
+
+def _gate(size):
+    return RegressionGate(ProbeSuite(size, seed=0), tolerance=0.5)
+
+
+def test_gate_trip_quarantines_only_one_member(tmp_path):
+    """Satellite bugfix: a harmful cohort routed to one family member
+    trips only that member's gate — it alone rolls back, the victim rows
+    alone are quarantined, and the other member's base, iteration, and
+    gate baseline never move."""
+    root = str(tmp_path / "repo")
+    fam = _fam(root)
+    spec_size = FlatSpec.from_tree(_zeros()).size
+    svc = ColdService(family=fam, policy=AdmissionPolicy(
+        min_cohort=2, max_bases=2), gate=_gate(spec_size))
+    matched = _two_member_family(root, svc)
+    victim, bystander = matched[0], matched[1]
+    pre_victim = _member_base(root, victim, 1)
+    pre_bystander = _member_base(root, bystander, 1)
+    # harmful cohort: colinear 40x-magnitude rows in the victim's task
+    # direction — at the member cap they route to the victim (nearest),
+    # pass the (disabled) screen, and wreck its probes
+    for j in range(2):
+        fin = {k: pre_victim[k] + (40.0 + j) * _pat(0)[k]
+               for k in pre_victim}
+        ContributorClient(root, name=f"bad{j}").submit(
+            fin, weight=1.0, base_iteration=1, family=victim)
+    st = _drain(svc)
+    assert st["rollbacks_total"] == 1
+    assert st["quarantined_total"] == 2
+    vf, bf = st["families"][victim], st["families"][bystander]
+    assert vf["iteration"] == 1          # rolled back to the benign base
+    assert vf["last_gate"]["regressed"]  # the tripped tasks, per member
+    np.testing.assert_allclose(
+        _member_base(root, victim, 1)["w"], pre_victim["w"], atol=1e-6)
+    # the bystander never noticed
+    assert bf["iteration"] == 1 and bf["fused_contributions"] == 2
+    assert bf["last_gate"] is None or not bf["last_gate"]["regressed"]
+    np.testing.assert_allclose(
+        _member_base(root, bystander, 1)["w"], pre_bystander["w"],
+        atol=1e-6)
+    svc.close()
+
+
+# ---------------------------------------------------------------------------
+# service-driven cross-fuse
+# ---------------------------------------------------------------------------
+
+
+def test_cross_fuse_every_blends_members_closed_form(tmp_path):
+    """With ``cross_fuse_every`` armed, a quiescent family blends: every
+    member lands exactly on the mean of the pre-cross bases, one
+    iteration on, and the counter persists."""
+    root = str(tmp_path / "repo")
+    svc = _svc(root, cross_fuse_every=2)
+    for t in range(2):
+        for c in range(2):
+            _submit_round(root, t, c, 0)
+    st = _drain(svc)
+    # the two round-0 publishes hit the schedule, so the blend already
+    # fired inside the drain — on the quiescent cycle after the second
+    assert st["cross_fuses_total"] == 1
+    assert len(st["families"]) == 2
+    # pre-cross bases (iteration 1) are the per-task closed forms ...
+    pre = {n: _member_base(root, n, 1) for n in st["families"]}
+    for t in range(2):
+        want = {k: 0.15 * v for k, v in _pat(t).items()}
+        assert sum(all(np.allclose(pre[n][k], want[k], atol=1e-5)
+                       for k in want) for n in pre) == 1
+    # ... and the blend (iteration 2) lands every member on their mean
+    mean = {k: np.mean([bb[k] for bb in pre.values()], axis=0)
+            for k in ("w", "b")}
+    for n, f in st["families"].items():
+        assert f["iteration"] == 2
+        got = _member_base(root, n, 2)
+        for k in mean:
+            np.testing.assert_allclose(got[k], mean[k], atol=1e-5)
+    svc.close()
+
+
+# ---------------------------------------------------------------------------
+# seeded interleaving property suite: streams never cross-contaminate
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_mixed_task_interleavings_never_cross_contaminate(tmp_path, seed):
+    """Shuffle three dissimilar streams' submissions into an arbitrary
+    arrival order with service cycles interleaved at random points: the
+    family always converges to exactly three members, each the closed
+    form of one task's stream — a row never fuses into a foreign member
+    and never fuses twice."""
+    rng = np.random.default_rng(seed)
+    root = str(tmp_path / "repo")
+    svc = _svc(root, min_cohort=2, max_bases=3)
+    subs = [(t, c) for t in range(3) for c in range(2)]
+    rng.shuffle(subs)
+    for t, c in subs:
+        pat = _pat(t, mod=3)
+        fin = {k: (c + 1) * 0.1 * v for k, v in pat.items()}
+        ContributorClient(root, name=f"t{t}c{c}").submit(
+            fin, weight=1.0, base_iteration=0, family="main")
+        for _ in range(int(rng.integers(0, 3))):
+            svc.run_once()
+    st = _drain(svc)
+    assert len(st["families"]) == 3
+    assert st["families_spawned_total"] == 2
+    for f in st["families"].values():
+        assert f["iteration"] == 1 and f["fused_contributions"] == 2
+    _match_members(root, st, 3, 0.15, mod=3)
+    svc.close()
+
+
+# ---------------------------------------------------------------------------
+# routing crash matrix: kill -9 at every seam converges to the same states
+# ---------------------------------------------------------------------------
+
+_ROUTE_SCENARIO = '''
+import os, sys
+sys.path.insert(0, "src")
+import numpy as np
+from repro.checkpoint import io as ckpt
+from repro.core.repository import RepositoryFamily, family_member_root
+from repro.serve.cold_service import AdmissionPolicy, ColdService, ContributorClient
+
+root, phase = sys.argv[1], sys.argv[2]
+W, B, LANE = 2048, 17, 1024
+
+def pat(t):
+    w = np.ones((W,), np.float32)
+    for j in range(W // LANE):
+        if (j + t) % 2:
+            w[j*LANE:(j+1)*LANE] = -1.0
+    return {"w": w, "b": np.ones((B,), np.float32)}
+
+def zeros():
+    return {"w": np.zeros((W,), np.float32), "b": np.zeros((B,), np.float32)}
+
+if phase == "prep":
+    RepositoryFamily.create(zeros(), root=root, spill=True, screen=False)
+    for t in range(2):
+        for c in range(2):
+            fin = {k: (c + 1) * 0.1 * v for k, v in pat(t).items()}
+            ContributorClient(root, name=f"t{t}c{c}").submit(
+                fin, weight=1.0, base_iteration=0, family="main")
+    print("PREP_OK", flush=True)
+    sys.exit(0)
+
+# phase == "serve": poll to quiescence (or die at the armed crash point)
+fam = RepositoryFamily.open(root, spill=True)
+svc = ColdService(family=fam,
+                  policy=AdmissionPolicy(min_cohort=2, max_bases=3))
+for _ in range(300):
+    st = svc.run_once()
+    fams = st.get("families") or {}
+    if (st["queue_depth"] == 0 and st["staged"] == 0 and not st["inflight"]
+            and len(fams) == 2
+            and all(f["iteration"] >= 1 for f in fams.values())):
+        break
+else:
+    print("NO_CONVERGENCE", st, flush=True)
+    sys.exit(3)
+st = svc.close()
+fams = st["families"]
+match = []
+for t in range(2):
+    want = {k: 0.15 * np.asarray(v) for k, v in pat(t).items()}
+    hits = []
+    for n, f in fams.items():
+        mr = family_member_root(root, n)
+        bb = ckpt.load(os.path.join(mr, f"base_iter{f['iteration']:04d}.npz"),
+                       as_jax=False)
+        if all(np.allclose(np.asarray(bb[k]), want[k], atol=1e-5)
+               for k in want):
+            hits.append(n)
+    match.append(len(hits))
+fused = sorted(f["fused_contributions"] for f in fams.values())
+its = sorted(f["iteration"] for f in fams.values())
+n_q = sum(len([f for f in os.listdir(l.queue_dir) if f.endswith(".npz")])
+          for l in svc._lanes.values())
+print(f"DONE members={len(fams)} match={match[0]}{match[1]} "
+      f"fused={fused[0]}{fused[1]} its={its[0]}{its[1]} qfiles={n_q}",
+      flush=True)
+'''
+
+# every window a routed submission's lifecycle crosses, in order: the
+# routing move itself, the member mint, sketch persist, staging, fuse
+# dispatch, the publish windows, and queue GC
+ROUTE_CRASH_POINTS = [
+    "service.post_route",
+    "repo.post_family_spawn",
+    "service.post_sketch",
+    "service.post_ingest",
+    "service.post_dispatch",
+    "repo.post_publish_pre_manifest",
+    "service.post_publish",
+    "service.mid_gc",
+]
+
+_ROUTE_DONE = {"members": "2", "match": "11", "fused": "22", "its": "11",
+               "qfiles": "0"}
+
+
+def _done_line(res):
+    line = [l for l in res.stdout.splitlines() if l.startswith("DONE")][0]
+    return dict(kv.split("=") for kv in line.split()[1:])
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("point", ROUTE_CRASH_POINTS)
+def test_routing_exactly_once_across_crash_points(tmp_path, point):
+    """kill -9 the routed daemon at any seam, restart it: the family
+    converges to the same two members as the uninterrupted run, every
+    row fused exactly once into exactly one member (each member's base
+    is the closed form of one task's stream), queues fully GC'd —
+    never a third member, never a double-fuse, never a lost row."""
+    root = str(tmp_path / "repo")
+    run_child(_ROUTE_SCENARIO, [root, "prep"])
+    run_child(_ROUTE_SCENARIO, [root, "serve"], crash_at=point)
+    done = _done_line(run_child(_ROUTE_SCENARIO, [root, "serve"]))
+    assert done == _ROUTE_DONE, (point, done)
+
+
+@pytest.mark.slow
+def test_routing_uninterrupted_reference_run(tmp_path):
+    """The oracle the routing crash matrix compares against."""
+    root = str(tmp_path / "repo")
+    run_child(_ROUTE_SCENARIO, [root, "prep"])
+    done = _done_line(run_child(_ROUTE_SCENARIO, [root, "serve"]))
+    assert done == _ROUTE_DONE, done
+
+
+# ---------------------------------------------------------------------------
+# gate seams under a 2-member family: the trip replays onto ONE member
+# ---------------------------------------------------------------------------
+
+_ROUTE_GATE_SCENARIO = '''
+import os, sys
+sys.path.insert(0, "src")
+import numpy as np
+from repro.checkpoint import io as ckpt
+from repro.core.repository import RepositoryFamily, family_member_root
+from repro.serve.cold_service import AdmissionPolicy, ColdService, ContributorClient
+from repro.serve.probes import ProbeSuite, RegressionGate
+from repro.utils.flat import FlatSpec
+
+root, phase = sys.argv[1], sys.argv[2]
+W, B, LANE = 2048, 17, 1024
+
+def pat(t):
+    w = np.ones((W,), np.float32)
+    for j in range(W // LANE):
+        if (j + t) % 2:
+            w[j*LANE:(j+1)*LANE] = -1.0
+    return {"w": w, "b": np.ones((B,), np.float32)}
+
+def zeros():
+    return {"w": np.zeros((W,), np.float32), "b": np.zeros((B,), np.float32)}
+
+def gate():
+    return RegressionGate(ProbeSuite(W + B, seed=0), tolerance=0.5)
+
+def member_base(n, it):
+    mr = family_member_root(root, n)
+    bb = ckpt.load(os.path.join(mr, f"base_iter{it:04d}.npz"), as_jax=False)
+    return {k: np.asarray(v) for k, v in bb.items()}
+
+def victim_name(fams):
+    # content-determined: the member whose benign base is task 0's
+    want = 0.15 * pat(0)["w"]
+    for n in fams:
+        if np.allclose(member_base(n, 1)["w"], want, atol=1e-5):
+            return n
+    raise AssertionError("no member matches task 0")
+
+def serve(stop):
+    fam = RepositoryFamily.open(root, spill=True)
+    svc = ColdService(family=fam, policy=AdmissionPolicy(
+        min_cohort=2, max_bases=2), gate=gate())
+    for _ in range(300):
+        st = svc.run_once()
+        if stop(st):
+            break
+    else:
+        print("NO_CONVERGENCE", st, flush=True)
+        sys.exit(3)
+    st = svc.close()
+    return st
+
+if phase == "prep":
+    RepositoryFamily.create(zeros(), root=root, spill=True, screen=False)
+    for t in range(2):
+        for c in range(2):
+            fin = {k: (c + 1) * 0.1 * v for k, v in pat(t).items()}
+            ContributorClient(root, name=f"t{t}c{c}").submit(
+                fin, weight=1.0, base_iteration=0, family="main")
+    print("PREP_OK", flush=True)
+    sys.exit(0)
+
+if phase == "serve_clean":
+    serve(lambda st: len(st.get("families") or {}) == 2
+          and all(f["iteration"] >= 1
+                  for f in st["families"].values())
+          and not st["inflight"] and st["staged"] == 0
+          and st["queue_depth"] == 0)
+    sys.exit(0)
+
+if phase == "plant":
+    fam = RepositoryFamily.open(root, spill=True)
+    victim = victim_name(list(fam.members))
+    vb = member_base(victim, 1)
+    for j in range(2):
+        fin = {k: vb[k] + (40.0 + j) * pat(0)[k] for k in vb}
+        ContributorClient(root, name=f"bad{j}").submit(
+            fin, weight=1.0, base_iteration=1, family=victim)
+    print("PLANT_OK", flush=True)
+    sys.exit(0)
+
+# phase == "serve": drive the harmful cohort through
+# route -> publish -> probe -> quarantine -> rollback on ONE member
+st = serve(lambda st: st["rollbacks_total"] >= 1
+           and not st["inflight"] and st["staged"] == 0
+           and st["queue_depth"] == 0)
+fams = st["families"]
+victim = victim_name(list(fams))
+bystander = [n for n in fams if n != victim][0]
+v_ok = (fams[victim]["iteration"] == 1
+        and np.allclose(member_base(victim, 1)["w"],
+                        0.15 * pat(0)["w"], atol=1e-5))
+b_ok = (fams[bystander]["iteration"] == 1
+        and fams[bystander]["fused_contributions"] == 2
+        and np.allclose(member_base(bystander, 1)["w"],
+                        0.15 * pat(1)["w"], atol=1e-5))
+qdir = os.path.join(root, "quarantine")
+n_quar = (len([f for f in os.listdir(qdir) if f.endswith(".npz")])
+          if os.path.isdir(qdir) else 0)
+print(f"DONE members={len(fams)} rb={st['rollbacks_total']} "
+      f"quarc={st['quarantined_total']} quar={n_quar} "
+      f"victim_ok={v_ok} bystander_ok={b_ok}", flush=True)
+'''
+
+ROUTE_GATE_POINTS = [
+    "service.post_route",
+    "service.post_probe",
+    "service.post_quarantine",
+    "repo.mid_rollback",
+]
+
+_ROUTE_GATE_DONE = {"members": "2", "rb": "1", "quarc": "2", "quar": "2",
+                    "victim_ok": "True", "bystander_ok": "True"}
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("point", ROUTE_GATE_POINTS)
+def test_gate_isolation_across_crash_points(tmp_path, point):
+    """kill -9 anywhere in a routed member's gate-trip path and restart:
+    exactly one rollback on the harmful member, the harmful rows alone
+    quarantined, and the bystander member's base and counters bit-equal
+    to the benign closed form."""
+    root = str(tmp_path / "repo")
+    run_child(_ROUTE_GATE_SCENARIO, [root, "prep"])
+    run_child(_ROUTE_GATE_SCENARIO, [root, "serve_clean"])
+    run_child(_ROUTE_GATE_SCENARIO, [root, "plant"])
+    run_child(_ROUTE_GATE_SCENARIO, [root, "serve"], crash_at=point)
+    done = _done_line(run_child(_ROUTE_GATE_SCENARIO, [root, "serve"]))
+    assert done == _ROUTE_GATE_DONE, (point, done)
+
+
+@pytest.mark.slow
+def test_gate_isolation_uninterrupted_reference_run(tmp_path):
+    root = str(tmp_path / "repo")
+    run_child(_ROUTE_GATE_SCENARIO, [root, "prep"])
+    run_child(_ROUTE_GATE_SCENARIO, [root, "serve_clean"])
+    run_child(_ROUTE_GATE_SCENARIO, [root, "plant"])
+    done = _done_line(run_child(_ROUTE_GATE_SCENARIO, [root, "serve"]))
+    assert done == _ROUTE_GATE_DONE, done
+
+
+# ---------------------------------------------------------------------------
+# migration + worker-follows-member + the demo deflake proof
+# ---------------------------------------------------------------------------
+
+
+def test_single_base_layout_migrates_in_place(tmp_path):
+    """A pre-family repository.json opens as a one-member family ('main'
+    = the old layout, in place) and serves routed admission from there."""
+    root = str(tmp_path / "repo")
+    Repository(_zeros(), root=root, spill=True, screen=False)
+    fam = RepositoryFamily.open(root, spill=True)
+    assert list(fam.members) == ["main"]
+    assert fam.members["main"].root == root
+    svc = ColdService(family=fam, policy=AdmissionPolicy(
+        min_cohort=1, max_bases=2))
+    _submit_round(root, 0, 0, 0)
+    st = _drain(svc)
+    assert st["families"]["main"]["iteration"] == 1
+    svc.close()
+
+
+def test_serving_worker_follows_named_member(tmp_path):
+    """``ServingWorker(cfg, root, family=...)`` watches that member's own
+    repository.json: it swaps on the member's publishes and never on the
+    other members'."""
+    from repro.serve.hot_swap import ServingWorker
+
+    root = str(tmp_path / "repo")
+    svc = _svc(root)
+    matched = _two_member_family(root, svc)
+    follow = matched[1]
+
+    class _Noop:
+        def __init__(self, cfg, params, max_len):
+            pass
+
+        def generate(self, prompts, *, max_new_tokens=16, params=None):
+            raise NotImplementedError
+
+    worker = ServingWorker(None, root, family=follow,
+                           engine_factory=_Noop)
+    assert worker.root == family_member_root(root, follow)
+    assert worker.poll_once() is True
+    assert worker.current_iteration == 1
+    # another publish on the OTHER member must not move this worker
+    other = matched[0]
+    base = _member_base(root, other, 1)
+    for c in range(2):
+        _submit_round(root, 0, c, 1, home=other, base=base)
+    st = _drain(svc)
+    assert st["families"][other]["iteration"] == 2
+    assert worker.poll_once() is False
+    assert worker.current_iteration == 1
+    assert worker.serve_state()["family"] == follow
+    svc.close()
+    with pytest.raises(ValueError, match="family="):
+        ServingWorker(None, None, repo=svc._lanes["main"].repo,
+                      family="f1", engine_factory=_Noop)
+
+
+@pytest.mark.slow
+def test_duplicates_demo_exits_zero_20_consecutive_runs():
+    """The deflake proof for the --duplicates demo (was ~50-80% flaky:
+    the replayer's last planted near-duplicate raced the daemon's
+    --max-iterations stop).  Twenty back-to-back runs, zero retries."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    cmd = [sys.executable, "examples/cold_service_demo.py",
+           "--contributors", "2", "--rounds", "2", "--duplicates", "1",
+           "--timeout", "120"]
+    for i in range(20):
+        res = subprocess.run(cmd, cwd=_REPO_ROOT, env=env,
+                             capture_output=True, text=True, timeout=180)
+        assert res.returncode == 0, (i, res.stdout[-2000:],
+                                     res.stderr[-2000:])
