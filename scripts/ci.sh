@@ -12,6 +12,17 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 
+# opt-in host-throughput tuning (ROADMAP "Host-throughput tuning"):
+# REPRO_HOST_TUNING=1 preloads tcmalloc for every stage below when the
+# library is installed (existence-gated — containers without it run
+# identically), and benchmarks/serve_load.py additionally sweeps
+# --xla_force_host_platform_device_count, recording the winning setting
+# in its bench row notes.
+if [[ "${REPRO_HOST_TUNING:-}" == "1" ]]; then
+    eval "$(python -m repro.launch.host_tuning)"
+    echo "[ci] REPRO_HOST_TUNING=1: LD_PRELOAD=${LD_PRELOAD:-<tcmalloc absent>}"
+fi
+
 python -m pytest -q
 
 # docs suite: every docs/*.md reachable from README, no dead relative
@@ -83,6 +94,24 @@ python examples/cold_service_demo.py --contributors 2 --rounds 3 --mesh 8 \
 XLA_FLAGS=--xla_force_host_platform_device_count=8 \
     python -m benchmarks.serve_load --rounds 4 --clients 2 --mesh 8
 python -m pytest tests/test_hot_swap.py -q -m slow
+
+# serving scale-out stage (docs/serving.md): 2 worker PROCESSES behind
+# the least-loaded router with the batched scheduler coalescing client
+# requests, daemon on the forced 8-fake-device mesh — swaps land
+# mid-load and every routed response is closed-form verified against
+# its pinned iteration's on-disk base at the executed batch shape
+# (zero failed, zero torn), then the run's metrics.jsonl is charted
+# (latency / swap / load series) so the plotting path cannot rot.
+# The pool kill -9 matrix (worker death mid-swap, router converging to
+# zero failed requests) runs with the slow suite.
+SCALE_ROOT=$(mktemp -d)
+XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    python -m benchmarks.serve_load --workers 2 --batch --clients 4 \
+    --rounds 3 --measure 2 --root "$SCALE_ROOT"
+python scripts/plot_metrics.py "$SCALE_ROOT" --out "$SCALE_ROOT/metrics.png"
+test -s "$SCALE_ROOT/metrics.png"
+rm -rf "$SCALE_ROOT"
+python -m pytest tests/test_worker_pool.py -q -m slow
 
 # kernel + end-to-end fuse micro-benches (smoke scale); refreshes
 # BENCH_kernels.json (including the fuse_e2e/mesh8_sharded,

@@ -1,0 +1,140 @@
+#!/usr/bin/env python
+"""Chart the service's ``metrics.jsonl`` time series (run by scripts/ci.sh).
+
+Reads the append-only metrics series a repository root accumulates
+(``repro.serve.cold_service._emit_metrics`` plus the serving workers'
+swap records; the rotation slot ``metrics.jsonl.1`` is merged in) and
+renders one PNG with three aligned panels over wall-clock time:
+
+1. **latency** — per-swap ``swap_latency_s`` (one marker per hot-swap,
+   colored per worker) and the daemon's ``fuse_latency_s`` cycle series,
+   on a log axis (fuses are orders of magnitude slower than flips);
+2. **iterations** — the published iteration (cycle events) as a step
+   line, each worker's adopted iteration (swap events) as steps on top,
+   rollbacks flagged with a marker: divergence between the lines is
+   exactly the adoption lag the router drains around;
+3. **load** — queue depth and admitted-per-cycle from the cycle series.
+
+Usage::
+
+    python scripts/plot_metrics.py <root-or-metrics.jsonl> [--out m.png]
+
+Exit code 0 = chart written; 1 = no metrics found (an empty series in CI
+means the stage that should have produced it silently did nothing).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+import matplotlib  # noqa: E402
+
+matplotlib.use("Agg")   # headless: CI has no display
+import matplotlib.pyplot as plt  # noqa: E402
+
+from repro.checkpoint import io as ckpt  # noqa: E402
+
+
+def load_series(path: str) -> list:
+    """The retained series in time order (rotated slot merged, torn tail
+    skipped silently — a mid-append reader must not fail the plot)."""
+    if os.path.isdir(path):
+        path = os.path.join(path, "metrics.jsonl")
+    return ckpt.read_jsonl(path, warn=False, include_rotated=True)
+
+
+def plot(records: list, out: str) -> dict:
+    """Render the three panels; returns the per-event counts plotted."""
+    t0 = min(r["t"] for r in records if "t" in r)
+    by_event: dict = {}
+    for r in records:
+        if "t" in r:
+            by_event.setdefault(r.get("event", "?"), []).append(r)
+    cycles = by_event.get("cycle", [])
+    swaps = by_event.get("swap", [])
+    rollbacks = by_event.get("rollback", [])
+
+    fig, (ax_lat, ax_it, ax_load) = plt.subplots(
+        3, 1, figsize=(9, 8), sharex=True, constrained_layout=True)
+    fig.suptitle("ColD Fusion service metrics", fontsize=12)
+
+    # -- panel 1: latencies (log scale: fuse >> swap) -------------------
+    workers = sorted({s.get("worker", "worker") for s in swaps})
+    for w in workers:
+        pts = [(s["t"] - t0, s["swap_latency_s"] * 1e3) for s in swaps
+               if s.get("worker", "worker") == w and "swap_latency_s" in s]
+        if pts:
+            ax_lat.plot(*zip(*pts), marker="o", ms=4, lw=1.0,
+                        label=f"swap {w}")
+    fuse = [(c["t"] - t0, c["fuse_latency_s"] * 1e3) for c in cycles
+            if c.get("fuse_latency_s")]
+    if fuse:
+        ax_lat.plot(*zip(*fuse), color="0.3", lw=1.2, label="fuse")
+    ax_lat.set_yscale("log")
+    ax_lat.set_ylabel("latency (ms)")
+    if swaps or fuse:
+        ax_lat.legend(loc="upper right", fontsize=8, ncols=2)
+
+    # -- panel 2: published vs adopted iteration ------------------------
+    pub = [(c["t"] - t0, c["iteration"]) for c in cycles
+           if c.get("iteration") is not None]
+    if pub:
+        ax_it.step(*zip(*pub), where="post", color="0.3", lw=1.8,
+                   label="published")
+    for w in workers:
+        pts = [(s["t"] - t0, s["to_iteration"]) for s in swaps
+               if s.get("worker", "worker") == w and "to_iteration" in s]
+        if pts:
+            ax_it.step(*zip(*pts), where="post", lw=1.0,
+                       label=f"adopted {w}")
+    for r in rollbacks:
+        ax_it.plot(r["t"] - t0, r["to_iteration"], marker="v", ms=8,
+                   color="tab:red", ls="none",
+                   label="rollback" if r is rollbacks[0] else None)
+    ax_it.set_ylabel("iteration")
+    if pub or swaps:
+        ax_it.legend(loc="upper left", fontsize=8, ncols=2)
+
+    # -- panel 3: daemon load -------------------------------------------
+    depth = [(c["t"] - t0, c.get("queue_depth", 0)) for c in cycles]
+    if depth:
+        ax_load.step(*zip(*depth), where="post", lw=1.2,
+                     label="queue depth")
+        adm = [(c["t"] - t0, c.get("admitted_this_cycle", 0))
+               for c in cycles]
+        ax_load.step(*zip(*adm), where="post", lw=1.0, color="tab:green",
+                     label="admitted/cycle")
+        ax_load.legend(loc="upper right", fontsize=8)
+    ax_load.set_ylabel("count")
+    ax_load.set_xlabel("seconds since first record")
+
+    fig.savefig(out, dpi=110)
+    plt.close(fig)
+    return {k: len(v) for k, v in sorted(by_event.items())}
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        description="chart a repository root's metrics.jsonl")
+    p.add_argument("path", help="repository root or metrics.jsonl path")
+    p.add_argument("--out", default="metrics.png",
+                   help="output PNG (default: metrics.png)")
+    args = p.parse_args(argv)
+    records = load_series(args.path)
+    if not records:
+        print(f"plot_metrics: no records under {args.path}",
+              file=sys.stderr)
+        return 1
+    counts = plot(records, args.out)
+    print(f"plot_metrics: wrote {args.out} "
+          f"({sum(counts.values())} records: "
+          + ", ".join(f"{k}={v}" for k, v in counts.items()) + ")")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -207,18 +207,48 @@ def move_atomic(src: str, dst: str) -> None:
 # tear, because every earlier append completed before the next began).
 
 
-def append_jsonl(path: str, obj: Any, *, default=None) -> None:
+def append_jsonl(path: str, obj: Any, *, default=None,
+                 rotate_bytes: int | None = None) -> None:
     """Append one record to a JSONL file as a single ``\\n``-terminated
     line.  The line is built before the file is touched, so a serialization
     error appends nothing; a crash mid-``write`` leaves at most a torn
-    final line, which ``read_jsonl``/``repair_jsonl_tail`` skip."""
+    final line, which ``read_jsonl``/``repair_jsonl_tail`` skip.
+
+    ``rotate_bytes`` caps the active file: when it already holds at least
+    that many bytes, it is rotated to ``<path>.1`` (replacing any previous
+    rotation) before the append, so the active file never grows unboundedly
+    under sustained load.  Rotation must have a SINGLE rotator — concurrent
+    appenders are safe (O_APPEND), concurrent rotators are not; in the
+    serving stack only the daemon rotates, pool workers plain-append."""
     line = json.dumps(obj, default=default)
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    if rotate_bytes is not None:
+        rotate_jsonl(path, rotate_bytes)
     with open(path, "a") as f:
         f.write(line + "\n")
 
 
-def read_jsonl(path: str, *, warn: bool = True) -> list:
+def rotate_jsonl(path: str, max_bytes: int) -> bool:
+    """Rotate ``path`` to ``path.1`` if it holds >= ``max_bytes`` bytes
+    (single rotation slot: a previous ``path.1`` is replaced).  The rename
+    is atomic, so a concurrent O_APPEND writer loses no records — a write
+    racing the rename lands whole in exactly one of the two files; the
+    next append recreates the active file.  Torn-tail repair and the
+    read-side skip still apply to the ACTIVE file only: rotation moves a
+    complete-records prefix (the torn tail, if any, is always the newest
+    write, which postdates the size check).  Returns True if rotated."""
+    try:
+        size = os.path.getsize(path)
+    except OSError:
+        return False
+    if size < max_bytes:
+        return False
+    os.replace(path, path + ".1")
+    return True
+
+
+def read_jsonl(path: str, *, warn: bool = True,
+               include_rotated: bool = False) -> list:
     """Parse a JSONL file, returning the records in order.  A torn tail —
     an unterminated or unparseable FINAL line, the only damage an
     append-only writer's death can cause — is skipped (with a warning by
@@ -226,7 +256,12 @@ def read_jsonl(path: str, *, warn: bool = True) -> list:
     or the operator.  A malformed line anywhere *else* raises ``ValueError``
     — that is corruption, not a crash artifact.  A missing file is an
     empty series, not an error (the reader may start before the first
-    append)."""
+    append).  ``include_rotated=True`` prepends the records of the
+    rotation slot ``<path>.1`` (see ``rotate_jsonl``), yielding the full
+    retained series in time order."""
+    if include_rotated:
+        return (read_jsonl(path + ".1", warn=warn)
+                + read_jsonl(path, warn=warn))
     out = []
     try:
         with open(path) as f:

@@ -1,0 +1,121 @@
+"""Opt-in host-throughput tuning for CPU serving/fusion processes.
+
+Two host-level knobs move serving throughput without touching model
+code (ROADMAP "Host-throughput tuning"; the recipe follows the
+published JAX-on-CPU serving setups):
+
+* **tcmalloc** — glibc malloc serializes the large short-lived
+  allocations a serving host makes (activation buffers, codec
+  scratch); preloading tcmalloc when it is installed removes that
+  contention.  ``TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD`` is raised so
+  steady-state large allocations don't spam stderr.
+* **--xla_force_host_platform_device_count=N** — splits the host CPU
+  into N XLA devices.  More devices can help a multi-worker serving
+  host (each worker's streams stop contending for one device's
+  executor) or hurt (oversubscription on few cores) — which is why
+  ``benchmarks/serve_load.py`` *sweeps* it rather than hardcoding, and
+  records the best setting in the bench row notes.
+
+Everything here is opt-in behind ``REPRO_HOST_TUNING=1`` and degrades
+to a no-op when the library is absent — CI containers without tcmalloc
+run identically to before.
+
+``LD_PRELOAD`` and ``XLA_FLAGS`` only act at process start (the loader
+and jax import read them once), so the helpers produce *environments
+for child processes* (``host_tuning_env``); ``maybe_reexec`` applies
+them to the CURRENT process by re-execing once when tuning is enabled
+and something would actually change.
+"""
+from __future__ import annotations
+
+import os
+import sys
+from typing import Dict, Optional
+
+ENV_FLAG = "REPRO_HOST_TUNING"
+_APPLIED_MARKER = "REPRO_HOST_TUNING_APPLIED"
+
+# well-known install paths, most specific first (SNIPPETS.md recipe)
+TCMALLOC_CANDIDATES = (
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4",
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4",
+    "/usr/lib/libtcmalloc.so.4",
+)
+LARGE_ALLOC_THRESHOLD = "60000000000"
+
+
+def enabled(environ: Optional[Dict[str, str]] = None) -> bool:
+    env = os.environ if environ is None else environ
+    return env.get(ENV_FLAG, "") == "1"
+
+
+def tcmalloc_path() -> Optional[str]:
+    """The installed tcmalloc shared object, or None (gate, don't fail:
+    the container may not ship it)."""
+    for path in TCMALLOC_CANDIDATES:
+        if os.path.exists(path):
+            return path
+    return None
+
+
+def host_tuning_env(*, device_count: Optional[int] = None
+                    ) -> Dict[str, str]:
+    """Environment overrides for a child process: tcmalloc preload when
+    present, plus an optional forced host device count.  Returns {} when
+    there is nothing to apply — callers can pass it straight to a
+    subprocess env unconditionally."""
+    env: Dict[str, str] = {}
+    lib = tcmalloc_path()
+    if lib is not None:
+        prior = os.environ.get("LD_PRELOAD", "")
+        if lib not in prior.split(":"):
+            env["LD_PRELOAD"] = f"{prior}:{lib}".strip(":")
+        env["TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD"] = LARGE_ALLOC_THRESHOLD
+    if device_count is not None:
+        env["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={int(device_count)}")
+    return env
+
+
+def maybe_reexec() -> None:
+    """Apply the tuning to the CURRENT process (``REPRO_HOST_TUNING=1``
+    only) by re-execing argv once with the updated environment.  Must be
+    called before jax import; the applied-marker guarantees exactly one
+    re-exec.  No-op when tuning is off or nothing would change."""
+    if not enabled() or os.environ.get(_APPLIED_MARKER) == "1":
+        return
+    env = host_tuning_env()
+    if not env:
+        return
+    os.environ.update(env)
+    os.environ[_APPLIED_MARKER] = "1"
+    sys.stdout.flush()
+    sys.stderr.flush()
+    os.execve(sys.executable, [sys.executable] + sys.argv, os.environ)
+
+
+def _main(argv=None) -> int:
+    """Print ``export KEY=VALUE`` lines for the tuning environment —
+    ``scripts/ci.sh`` evals this so its serving stages honor
+    ``REPRO_HOST_TUNING=1`` without duplicating the tcmalloc candidate
+    list in shell.  Prints nothing (exit 0) when tuning is off or there
+    is nothing to apply."""
+    import argparse
+    import shlex
+
+    p = argparse.ArgumentParser(
+        description="emit shell exports for the opt-in host tuning")
+    p.add_argument("--device-count", type=int, default=None,
+                   help="also force this XLA host device count")
+    p.add_argument("--force", action="store_true",
+                   help="emit even when REPRO_HOST_TUNING is unset")
+    args = p.parse_args(argv)
+    if not (enabled() or args.force):
+        return 0
+    for key, val in host_tuning_env(device_count=args.device_count).items():
+        print(f"export {key}={shlex.quote(val)}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(_main())

@@ -22,7 +22,18 @@ export ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` first.
 (docs/serving.md) in the same process: a ``ServingWorker`` subscribed to
 the repository's publishes keeps a serving ``Engine`` on the latest
 published base (reduced NAME config), persisting ``serving_state.json``
-and swap records alongside the daemon's status.
+and swap records alongside the daemon's status.  ``--serve-workers N``
+scales that out instead: N worker PROCESSES (``serve/worker_pool.py``,
+each with its own namespaced ``serving_state-<id>.json``) follow the
+repository cross-process; ``--serve-batch`` enables the per-worker
+``BatchScheduler``; ``--serve-queue-depth`` bounds each worker's
+request queue (overload sheds explicitly instead of collapsing
+latency).  ``status()`` aggregates the whole worker namespace.
+
+``REPRO_HOST_TUNING=1`` applies the opt-in host-throughput recipe
+(``repro/launch/host_tuning.py``): tcmalloc ``LD_PRELOAD`` when
+installed (the daemon re-execs itself once to pick it up, and pool
+children inherit it).
 """
 from __future__ import annotations
 
@@ -30,6 +41,12 @@ import argparse
 import os
 import signal
 import sys
+
+from repro.launch import host_tuning
+
+# before jax (via the repro imports below) loads: LD_PRELOAD and
+# XLA_FLAGS are read once at process/import start
+host_tuning.maybe_reexec()
 
 from repro.checkpoint import io as ckpt
 from repro.core.repository import Repository, RepositoryFamily
@@ -162,6 +179,17 @@ def main(argv=None) -> int:
                         "repository base must be that arch's param tree)")
     p.add_argument("--serve-max-len", type=int, default=64,
                    help="serving engine KV-cache length (--serve-arch)")
+    p.add_argument("--serve-workers", type=int, default=0, metavar="N",
+                   help="scale the serving side out to N worker "
+                        "PROCESSES behind namespaced state files "
+                        "(requires --serve-arch; 0 = one in-process "
+                        "worker)")
+    p.add_argument("--serve-batch", action="store_true",
+                   help="coalesce compatible requests per worker via "
+                        "the BatchScheduler (--serve-workers)")
+    p.add_argument("--serve-queue-depth", type=int, default=64,
+                   help="bounded per-worker request queue; overflow is "
+                        "shed as rejected:queue_full (--serve-workers)")
     p.add_argument("--poll", type=float, default=0.02, metavar="S",
                    help="idle poll interval (seconds)")
     p.add_argument("--max-iterations", type=int, default=None,
@@ -174,7 +202,23 @@ def main(argv=None) -> int:
     svc = build_service(args)
 
     worker = None
-    if args.serve_arch:
+    pool = None
+    if args.serve_workers and not args.serve_arch:
+        raise SystemExit("--serve-workers requires --serve-arch")
+    if args.serve_workers:
+        from repro.serve.worker_pool import WorkerPool
+        env = host_tuning.host_tuning_env() if host_tuning.enabled() else {}
+        pool = WorkerPool(svc.repo.root, args.serve_workers,
+                          arch=args.serve_arch,
+                          max_len=args.serve_max_len, poll=args.poll,
+                          batch=args.serve_batch,
+                          queue_depth=args.serve_queue_depth, env=env)
+        pool.start()
+        print(f"[cold-service] {args.serve_workers} pool workers serving "
+              f"{args.serve_arch} (max_len={args.serve_max_len}, "
+              f"batch={args.serve_batch}, "
+              f"queue_depth={args.serve_queue_depth})", flush=True)
+    elif args.serve_arch:
         from repro.configs import get_config, reduce_config
         from repro.serve.hot_swap import ServingWorker
         cfg = reduce_config(get_config(args.serve_arch))
@@ -202,6 +246,15 @@ def main(argv=None) -> int:
               f"{ws['iteration']}: {ws['swaps_total']} swaps "
               f"({ws['live_swaps']} live), {ws['requests_total']} requests "
               f"({ws['requests_pinned_across_swaps']} pinned across swaps)",
+              flush=True)
+    if pool is not None:
+        states = pool.states()
+        codes = pool.stop()
+        detail = ", ".join(
+            f"{wid}@it{(s or {}).get('iteration')}"
+            f"({(s or {}).get('requests_total', 0)} req)"
+            for wid, s in sorted(states.items()))
+        print(f"[cold-service] pool stopped (exit={codes}): {detail}",
               flush=True)
     fams = st.get("families")
     if fams:

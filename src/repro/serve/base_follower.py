@@ -1,0 +1,290 @@
+"""BaseFollower: reusable publish-watching with double-buffered residency.
+
+The PR 8 ``ServingWorker`` fused four responsibilities into one class:
+following the repository's published iteration, owning the engine,
+executing requests, and publishing serving state.  The first of those —
+the *swap machinery* — is the piece everything in the serving stack
+needs (workers, probers, benches, health checkers), so it lives here on
+its own:
+
+* **two watch modes, one swap path** — in-process (``repo=``) the
+  follower subscribes via ``Repository.add_publish_listener`` and
+  receives a consistent ``(iteration, base, flat)`` snapshot taken
+  *after* the iteration bump (raw cross-thread polling can pair
+  iteration ``k`` with ``k+1``'s weights); cross-process (``root``) it
+  polls ``repository.json`` — an atomic write, and the base npz is
+  durable *before* the json names it, so a reader can never load a
+  missing or torn base.  ``family=`` resolves a named family member's
+  root (a full repository layout) and everything else is identical.
+* **double-buffered residency** — the next base is materialized and made
+  resident (``jax.block_until_ready``) while readers keep using the
+  current version; only then does the pointer flip.  The flip is a
+  single Python reference assignment: a reader sees the old complete
+  version or the new complete version, never a mix.
+* **version-pinned handles** — ``current()`` returns the ``BaseVersion``
+  the pointer names *now*; a consumer that captures it once works
+  against those exact weights for as long as it holds the handle,
+  across any number of forward or backward (rollback) swaps.
+
+Crash discipline: the swap path carries the three ``repro.utils.faults``
+seams the docs/serving.md crash matrix kills at —
+``worker.pre_transfer``, ``worker.post_transfer_pre_flip``,
+``worker.post_flip``.  The follower holds no durable state the
+repository does not already own, so a crashed follower can only ever
+re-adopt a published, uncorrupted base.
+
+Hooks (all optional) let a composer attach behavior at the exact seams
+the old monolith hard-coded:
+
+* ``on_swap_begin(target_iteration)`` — entering a *live* swap (a
+  current version is already being served); the hot-swap worker uses it
+  to mark itself ``swapping`` so a router can drain it;
+* ``on_resident(version)`` — the new tree is resident but the pointer
+  has NOT flipped; the worker builds/validates its engine here so no
+  reader can observe a version the engine cannot serve;
+* ``on_swap(record, version, prev)`` — the pointer flipped; the worker
+  persists serving state and appends the metrics swap record.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Set, Tuple
+
+import jax
+
+from repro.checkpoint import io as ckpt
+from repro.core.repository import family_member_root
+from repro.utils import faults
+
+# module-level so the atomicity tests can spy on the residency barrier
+# (asserting it runs BEFORE the pointer flip)
+_block_until_ready = jax.block_until_ready
+
+
+class BaseVersion:
+    """One published base resident on device: the unit the pointer flips
+    between and the object a request pins at ``generate`` entry."""
+
+    __slots__ = ("iteration", "params")
+
+    def __init__(self, iteration: int, params: Any):
+        self.iteration = int(iteration)
+        self.params = params
+
+
+def _default_loader(root: str, iteration: int):
+    """Cross-process materialization: per-leaf load of the published npz
+    (durable before ``repository.json`` named it)."""
+    return ckpt.load(os.path.join(root, f"base_iter{iteration:04d}.npz"))
+
+
+class BaseFollower:
+    """Follow a repository's published base with atomic hot-swaps.
+
+    ``poll_once()`` checks for a *different* published iteration (a gate
+    rollback moves the pointer backwards — the target test is ``!=``,
+    never ``>``) and swaps onto it: materialize, residency barrier,
+    flip.  ``current()`` hands out the version-pinned handle.
+
+    ``loader(root, iteration)`` overrides cross-process materialization
+    (tests substitute cheap fakes); in-process the announced snapshot's
+    own device views are adopted by reference — no host round trip.
+    """
+
+    def __init__(self, root: Optional[str] = None, *, repo=None,
+                 family: Optional[str] = None,
+                 loader: Optional[Callable[[str, int], Any]] = None,
+                 on_swap_begin: Optional[Callable[[int], None]] = None,
+                 on_resident: Optional[Callable[[BaseVersion], None]] = None,
+                 on_swap: Optional[Callable[..., None]] = None,
+                 name: str = "follower"):
+        if root is None and repo is None:
+            raise ValueError("BaseFollower needs a repository root, an "
+                             "attached Repository, or both")
+        if family is not None and repo is not None:
+            raise ValueError(
+                "family= selects a member under a family root in "
+                "cross-process watch mode; when attaching in-process, pass "
+                "that member's Repository directly as repo=")
+        self.family = None if family is None else str(family)
+        if self.family is not None:
+            # a member root is a full repository layout, so the whole
+            # watch/swap path below works against it unchanged
+            root = family_member_root(root, self.family)
+        self.root = root if root is not None else repo.root
+        self.name = str(name)
+        self._loader = loader or _default_loader
+        self._on_swap_begin = on_swap_begin
+        self._on_resident = on_resident
+        self._on_swap = on_swap
+        self._current: Optional[BaseVersion] = None
+        self._announce: Optional[Tuple[int, Any, Any]] = None
+        self._repo = None
+        self._swap_lock = threading.Lock()
+        self._stats_lock = threading.Lock()
+        self.swapping = False          # inside a live swap (drain signal)
+        self.swaps_total = 0           # pointer flips, incl. initial adoption
+        self.live_swaps = 0            # flips while already serving a base
+        self.versions_served: Set[int] = set()
+        self.last_swap_latency_s: Optional[float] = None
+        self.last_swap: Optional[Dict[str, Any]] = None
+        self._swap_log: List[int] = []  # flip order, for the property suite
+        self._thread: Optional[threading.Thread] = None
+        self._stop_evt = threading.Event()
+        self.watch_error: Optional[str] = None
+        if repo is not None:
+            self.attach(repo)
+
+    # -- watch sources --------------------------------------------------
+    def attach(self, repo) -> None:
+        """Subscribe to an in-process Repository's publishes (and take an
+        initial snapshot of whatever it currently serves)."""
+        self._repo = repo
+        repo.add_publish_listener(self._on_publish)
+        self._announce = (repo.iteration, repo._base, repo._base_flat)
+
+    def _on_publish(self, iteration: int, base, flat) -> None:
+        # publisher's thread: store-only (one tuple assignment is atomic
+        # under the GIL); the follower's thread does the transfer + flip
+        self._announce = (iteration, base, flat)
+
+    def _target(self) -> Optional[Tuple[int, Any]]:
+        """The published version to swap to, or None when current."""
+        cur = self._current
+        if self._repo is not None:
+            ann = self._announce
+            if ann is None:
+                return None
+            it, base, _flat = ann
+            if cur is not None and cur.iteration == int(it):
+                return None
+            return int(it), base
+        try:
+            meta = ckpt.load_json(os.path.join(self.root, "repository.json"))
+        except FileNotFoundError:
+            return None
+        it = int(meta["iteration"])
+        if cur is not None and cur.iteration == it:
+            return None
+        return it, None
+
+    # -- the swap -------------------------------------------------------
+    def poll_once(self) -> bool:
+        """Check for a newer (or rolled-back: *different*) published base
+        and hot-swap onto it.  Returns True when a swap happened."""
+        with self._swap_lock:
+            target = self._target()
+            if target is None:
+                return False
+            self._swap_to(*target)
+            return True
+
+    def _swap_to(self, iteration: int, base) -> None:
+        t0 = time.perf_counter()
+        live = self._current is not None
+        try:
+            if live:
+                # a live swap is drainable: routers deprioritize a worker
+                # whose begin-hook marked it swapping.  Initial adoption
+                # skips the hook — there is nothing to drain yet, and a
+                # begin-persist would overwrite a pre-crash worker's state
+                # with an empty one (the crash matrix pins this).
+                self.swapping = True
+                if self._on_swap_begin is not None:
+                    self._on_swap_begin(iteration)
+            faults.crash_point("worker.pre_transfer")
+            if base is None:
+                base = self._loader(self.root, iteration)
+            # residency barrier: the new tree (lazy unflatten views
+            # in-process, fresh transfers cross-process) must be fully
+            # materialized on device BEFORE the flip — in-flight readers
+            # keep decoding against the current version the whole time
+            # (double-buffered weights)
+            _block_until_ready(base)
+            version = BaseVersion(iteration, base)
+            if self._on_resident is not None:
+                self._on_resident(version)
+            faults.crash_point("worker.post_transfer_pre_flip")
+            prev = self._current
+            self._current = version   # the atomic flip
+        finally:
+            self.swapping = False
+        faults.crash_point("worker.post_flip")
+        dt = time.perf_counter() - t0
+        with self._stats_lock:
+            self.swaps_total += 1
+            if prev is not None:
+                self.live_swaps += 1
+            self.versions_served.add(iteration)
+            self.last_swap_latency_s = dt
+            self.last_swap = {
+                "from_iteration": None if prev is None else prev.iteration,
+                "to_iteration": iteration,
+                "swap_latency_s": dt,
+            }
+            self._swap_log.append(iteration)
+        if self._on_swap is not None:
+            self._on_swap(dict(self.last_swap), version, prev)
+
+    # -- handles --------------------------------------------------------
+    def current(self) -> Optional[BaseVersion]:
+        """The version-pinned handle: capture once, decode every step
+        against it — a swap mid-request cannot tear the output."""
+        return self._current
+
+    @property
+    def current_iteration(self) -> Optional[int]:
+        cur = self._current
+        return None if cur is None else cur.iteration
+
+    def swap_stats(self) -> Dict[str, Any]:
+        """The follower's slice of serving state (merged by composers)."""
+        with self._stats_lock:
+            return {
+                "iteration": self.current_iteration,
+                "swapping": self.swapping,
+                "swaps_total": self.swaps_total,
+                "live_swaps": self.live_swaps,
+                "versions_served": sorted(self.versions_served),
+                "last_swap": (None if self.last_swap is None
+                              else dict(self.last_swap)),
+                "last_swap_latency_s": self.last_swap_latency_s,
+                "watch_error": self.watch_error,
+            }
+
+    # -- watch thread ---------------------------------------------------
+    def start(self, *, interval: float = 0.05,
+              on_tick: Optional[Callable[[], None]] = None) -> None:
+        """Run the watch loop on a daemon thread: poll/receive publishes
+        and hot-swap until ``stop``.  Swap errors are recorded (and the
+        current version keeps serving) rather than killing the loop.
+        ``on_tick`` runs once per loop iteration after the poll — the
+        worker hangs its state heartbeat there."""
+        if self._thread is not None:
+            raise RuntimeError("follower already started")
+        self._stop_evt.clear()
+
+        def loop():
+            while not self._stop_evt.is_set():
+                try:
+                    self.poll_once()
+                except Exception as err:  # noqa: BLE001 - keep serving
+                    self.watch_error = f"{type(err).__name__}: {err}"
+                if on_tick is not None:
+                    try:
+                        on_tick()
+                    except Exception as err:  # noqa: BLE001
+                        self.watch_error = f"{type(err).__name__}: {err}"
+                self._stop_evt.wait(interval)
+
+        self._thread = threading.Thread(
+            target=loop, name=f"follow-{self.name}", daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        if self._thread is not None:
+            self._stop_evt.set()
+            self._thread.join(timeout=30.0)
+            self._thread = None

@@ -94,10 +94,27 @@ STATUS_FILE = "service_status.json"
 QUARANTINE_DIR = "quarantine"
 GATE_STATE_FILE = "gate_state.json"
 METRICS_FILE = "metrics.jsonl"
+# rotation cap for the active metrics file (docs/observability.md): at or
+# past this size the daemon renames it to metrics.jsonl.1 before its next
+# append.  The daemon is the SINGLE rotator — pool workers only O_APPEND.
+METRICS_ROTATE_BYTES = 4 * 1024 * 1024
 # owned by the ServingWorker (repro.serve.hot_swap), NOT the daemon: two
 # processes atomically rewriting one status file would clobber each other,
 # so the worker persists its own file and status() embeds it read-only
 SERVING_STATE_FILE = "serving_state.json"
+
+
+def serving_state_filename(worker_id: Optional[str] = None) -> str:
+    """The serving-state file for one worker: the solo ``ServingWorker``
+    keeps the historical ``serving_state.json``; pool members namespace
+    theirs as ``serving_state-<id>.json`` so N workers under one root
+    never clobber each other (``status()`` aggregates the namespace)."""
+    if worker_id is None:
+        return SERVING_STATE_FILE
+    wid = str(worker_id)
+    if not wid or any(c in wid for c in "/\\."):
+        raise ValueError(f"invalid worker_id for state file: {worker_id!r}")
+    return f"serving_state-{wid}.json"
 ERROR_RING = 16  # recent_errors entries kept (and persisted) per service
 ROUTE_RING = 64  # recent routing decisions surfaced in the status endpoint
 
@@ -1417,9 +1434,14 @@ class ColdService:
         """One record onto the append-only ``metrics.jsonl`` time series
         (docs/observability.md).  Advisory state: appends happen after the
         durability-critical writes of their cycle, so a crash can lose a
-        record but the series never disagrees with the repository."""
+        record but the series never disagrees with the repository.  The
+        daemon is the series' single rotator: once the active file
+        reaches ``METRICS_ROTATE_BYTES`` it rolls to ``metrics.jsonl.1``
+        (concurrent worker appends are rename-safe; see
+        ``repro.checkpoint.io.rotate_jsonl``)."""
         ckpt.append_jsonl(self._metrics_path,
-                          {"t": time.time(), **record})
+                          {"t": time.time(), **record},
+                          rotate_bytes=METRICS_ROTATE_BYTES)
 
     def _emit_cycle_metrics(self, st: Dict[str, Any],
                             gate_event: Optional[Dict[str, Any]]) -> None:
@@ -1427,7 +1449,9 @@ class ColdService:
         anything (publish, admission, rejection, error, gate event) plus
         the first cycle.  Idle polls repeat the previous mark and are
         skipped, so a long-lived daemon's series grows with events, not
-        wall time."""
+        wall time — and under sustained serve load the daemon (as the
+        single rotator) caps the active file via ``METRICS_ROTATE_BYTES``
+        in ``_emit_metrics``."""
         mark = (st["iteration"], st["staged"], st["admitted"],
                 st["fused_queue_submissions"], st["rejected_total"],
                 st["quarantined_total"], st["rollbacks_total"],
@@ -1602,10 +1626,50 @@ class ColdService:
         return st
 
     def _serving_state(self) -> Optional[Dict[str, Any]]:
-        """The hot-swap worker's ``serving_state.json``, embedded
-        read-only (None when no worker ever served this root)."""
+        """The hot-swap worker-state namespace, embedded read-only (None
+        when no worker ever served this root).
+
+        A solo worker's ``serving_state.json`` passes through unchanged
+        (the historical status shape).  When namespaced pool files
+        (``serving_state-<id>.json``) exist, the block becomes an
+        aggregate: the per-worker map plus rollups — summed request/swap
+        counters, summed inflight, and ``iteration`` set only when every
+        worker agrees (mid-swap divergence surfaces as ``None`` rather
+        than a misleading single number)."""
+        root = self.repo.root
+        workers: Dict[str, Dict[str, Any]] = {}
         try:
-            return ckpt.load_json(
-                os.path.join(self.repo.root, SERVING_STATE_FILE))
+            names = sorted(os.listdir(root))
+        except FileNotFoundError:
+            names = []
+        for fn in names:
+            if (fn.startswith("serving_state-") and fn.endswith(".json")):
+                try:
+                    workers[fn[len("serving_state-"):-len(".json")]] = \
+                        ckpt.load_json(os.path.join(root, fn))
+                except (FileNotFoundError, ValueError):
+                    continue  # mid-replace or torn: skip, not fatal
+        solo = None
+        try:
+            solo = ckpt.load_json(os.path.join(root, SERVING_STATE_FILE))
         except (FileNotFoundError, ValueError):
-            return None
+            pass
+        if not workers:
+            return solo   # legacy single-worker shape (or None)
+        if solo is not None:
+            workers.setdefault(solo.get("worker", "solo"), solo)
+        iters = {w.get("iteration") for w in workers.values()}
+        agg: Dict[str, Any] = {
+            "workers": workers,
+            "n_workers": len(workers),
+            "iteration": iters.pop() if len(iters) == 1 else None,
+            "swapping": any(w.get("swapping") for w in workers.values()),
+        }
+        for key in ("swaps_total", "live_swaps", "requests_total",
+                    "requests_pinned_across_swaps", "requests_batched",
+                    "inflight"):
+            agg[key] = sum(int(w.get(key) or 0) for w in workers.values())
+        agg["versions_served"] = sorted(
+            {v for w in workers.values()
+             for v in (w.get("versions_served") or [])})
+        return agg

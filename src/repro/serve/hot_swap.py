@@ -3,39 +3,44 @@
 The paper's synergistic loop (§1) only pays off when the continually
 improving base is actually *served*: contributors recycle finetunes into
 the repository and downstream users immediately generate against each
-newly published iteration.  ``ServingWorker`` is that wiring — it watches
-the repository's published iteration and swaps the engine onto every new
-base with zero downtime:
+newly published iteration.  ``ServingWorker`` is that wiring, built as a
+thin composition of the serve layer's parts (docs/serving.md):
 
-* **double-buffered weights on device** — the next base is materialized
-  (in-process: adopted as the repository's own ``FlatSpec.unflatten``
-  device views; cross-process: per-leaf npz load) and made resident with
-  ``jax.block_until_ready`` while in-flight requests keep decoding
-  against the current tree.  No host-side dense ``[N]`` copy happens on
-  the swap path: the flat base was already unflattened straight into the
-  param tree by jitted slicing (``repro.utils.flat``), and the worker
-  adopts that tree by reference.
-* **atomic iteration pointer** — ``_current`` is a single Python
-  reference, flipped only AFTER the new tree is resident; readers either
-  see the old complete version or the new complete version, never a mix.
-* **version-pinned requests** — ``generate`` captures the current
-  ``BaseVersion`` once at entry and decodes every step against it, so a
-  request in flight across a swap completes on the base it started on.
-  The same holds across a gate ``rollback``, where the pointer moves
-  *backwards* (the target test is ``iteration != current``, not ``>``).
+* a ``BaseFollower`` (``serve/base_follower.py``) watches the published
+  iteration and performs the double-buffered residency + atomic-flip
+  swap — forward publishes and gate rollbacks alike;
+* an optional ``BatchScheduler`` (``serve/scheduler.py``) coalesces
+  compatible single-row requests into shared ``[B, T]`` batches in
+  front of the engine (``batch_requests=True``);
+* the worker itself owns the ``Engine``, executes requests against
+  version-pinned ``BaseVersion`` handles, and publishes its serving
+  state.
 
-Observability: the worker persists ``serving_state.json`` atomically
-(its own file — the daemon owns ``service_status.json`` and embeds this
-one as the ``"serving"`` block) and appends ``event="swap"`` records to
-the shared append-only ``metrics.jsonl``.
+**Version-pinned requests**: ``generate`` captures the follower's
+current ``BaseVersion`` once at entry and decodes every step against
+it, so a request in flight across a swap completes on the base it
+started on.  The same holds across a gate ``rollback``, where the
+pointer moves *backwards* (the follower's target test is
+``iteration != current``, not ``>``).
 
-Crash discipline (docs/serving.md crash matrix): the swap path carries
-three ``repro.utils.faults`` seams — ``worker.pre_transfer``,
-``worker.post_transfer_pre_flip``, ``worker.post_flip``.  The worker
-holds no durable state the repository does not already own; a restarted
-worker re-reads ``repository.json`` (written atomically, and the base
-npz is durable *before* the json names it) so it can only ever load a
-published, uncorrupted base — never a half-swapped one.
+Observability: the worker persists its state file atomically —
+``serving_state.json`` for the default solo worker, or the namespaced
+``serving_state-<id>.json`` when constructed with ``worker_id=`` (one
+file per pool member; the daemon owns ``service_status.json`` and
+aggregates the whole namespace as the ``"serving"`` block) — and
+appends ``event="swap"`` records to the shared append-only
+``metrics.jsonl``.  While ``start()``ed it also heartbeats the state
+file (throttled) so the router's health checks see a fresh
+``updated_at`` even between swaps.
+
+Crash discipline (docs/serving.md crash matrix): the follower's swap
+path carries the three ``repro.utils.faults`` seams —
+``worker.pre_transfer``, ``worker.post_transfer_pre_flip``,
+``worker.post_flip``.  The worker holds no durable state the repository
+does not already own; a restarted worker re-reads ``repository.json``
+(written atomically, and the base npz is durable *before* the json
+names it) so it can only ever load a published, uncorrupted base —
+never a half-swapped one.
 """
 from __future__ import annotations
 
@@ -43,43 +48,31 @@ import os
 import threading
 import time
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, List, Optional, Set, Tuple
+from typing import Any, Callable, Dict, List, Optional
 
-import jax
 import numpy as np
 
 from repro.checkpoint import io as ckpt
-from repro.core.repository import family_member_root
-from repro.serve.cold_service import METRICS_FILE, SERVING_STATE_FILE
+from repro.serve.base_follower import BaseFollower, BaseVersion
+from repro.serve.cold_service import METRICS_FILE, serving_state_filename
 from repro.serve.engine import Engine
-from repro.utils import faults
 
-# module-level so the atomicity tests can spy on the residency barrier
-# (asserting it runs BEFORE the pointer flip)
-_block_until_ready = jax.block_until_ready
-
-
-class BaseVersion:
-    """One published base resident on device: the unit the pointer flips
-    between and the object a request pins at ``generate`` entry."""
-
-    __slots__ = ("iteration", "params")
-
-    def __init__(self, iteration: int, params: Any):
-        self.iteration = int(iteration)
-        self.params = params
+__all__ = ["BaseVersion", "ServedGeneration", "ServingWorker"]
 
 
 @dataclass
 class ServedGeneration:
     """An Engine ``GenerationResult`` stamped with the base version that
-    served it (the pinned version — not necessarily the newest)."""
+    served it (the pinned version — not necessarily the newest) and the
+    executed batch size (>1 when the scheduler coalesced the request
+    with others)."""
 
     tokens: np.ndarray
     prompt_len: int
     steps: int
     iteration: int
     latency_s: float
+    batch_size: int = 1
 
 
 def _default_engine_factory(cfg, params, max_len: int) -> Engine:
@@ -90,235 +83,252 @@ class ServingWorker:
     """Serve the repository's latest published base, hot-swapping on
     every publish/rollback with version-pinned in-flight requests.
 
-    Two watch modes share one swap path:
-
-    * **in-process** (``repo=``): subscribes via
-      ``Repository.add_publish_listener`` — the listener stores a
-      consistent ``(iteration, base, flat)`` snapshot taken *after* the
-      iteration bump, and the worker's own thread performs the swap.
-      (Raw polling of ``repo.iteration``/``repo._base`` from another
-      thread can pair iteration ``k`` with ``k+1``'s weights, because the
-      repository installs the base before bumping the counter.)
-    * **cross-process** (``root`` only): polls ``repository.json`` (an
-      atomic write) and loads ``base_iterNNNN.npz`` per leaf — durable
-      before the json names it, so the worker can never race into a
-      missing or torn base.  Pass ``family="f1"`` to follow a named
-      member of a multi-base family: the worker resolves that member's
-      root (a full repository layout of its own) and everything else —
-      polling, swap, rollback handling — is identical.
+    The two watch modes (in-process ``repo=`` listener vs cross-process
+    ``root`` polling, with ``family=`` member resolution) live in
+    ``BaseFollower`` — see its docstring for the snapshot-consistency
+    and durability arguments.
 
     ``engine_factory(cfg, params, max_len)`` is pluggable so tests and
     the interleaving property suite can swap in a fake engine; the real
     ``Engine`` is built once (jit caches are keyed by shapes, so serving
     a same-shaped new tree via ``generate(params=...)`` never retraces).
+    The engine is built inside the follower's ``on_resident`` hook —
+    after the residency barrier, before the pointer flip — so no reader
+    can observe a version the engine cannot serve.
+
+    ``worker_id=`` namespaces the state file for pool membership
+    (``serving_state-<id>.json``); the default ``None`` keeps the solo
+    ``serving_state.json``.  ``batch_requests=True`` routes single-row
+    ``generate`` calls through a ``BatchScheduler`` (bounded queue of
+    ``queue_depth``, batches up to ``max_batch`` coalesced within
+    ``batch_wait_s``) — multi-row calls and the unbatched default hit
+    the engine directly.
     """
 
     def __init__(self, cfg, root: Optional[str], *, repo=None,
                  family: Optional[str] = None,
                  max_len: int = 256, name: str = "worker",
-                 engine_factory: Optional[Callable[..., Any]] = None):
-        if root is None and repo is None:
-            raise ValueError("ServingWorker needs a repository root, an "
-                             "attached Repository, or both")
-        if family is not None and repo is not None:
-            raise ValueError(
-                "family= selects a member under a family root in "
-                "cross-process watch mode; when attaching in-process, pass "
-                "that member's Repository directly as repo=")
-        self.family = None if family is None else str(family)
-        if self.family is not None:
-            # a member root is a full repository layout, so the whole
-            # watch/swap path below works against it unchanged
-            root = family_member_root(root, self.family)
+                 engine_factory: Optional[Callable[..., Any]] = None,
+                 worker_id: Optional[str] = None,
+                 batch_requests: bool = False, queue_depth: int = 64,
+                 max_batch: int = 8, batch_wait_s: float = 0.002):
         self.cfg = cfg
-        self.root = root if root is not None else repo.root
         self.max_len = int(max_len)
         self.name = str(name)
+        self.worker_id = None if worker_id is None else str(worker_id)
         self._engine_factory = engine_factory or _default_engine_factory
         self._engine: Optional[Any] = None
-        self._current: Optional[BaseVersion] = None
-        self._announce: Optional[Tuple[int, Any, Any]] = None
-        self._repo = None
-        self._swap_lock = threading.Lock()
         self._stats_lock = threading.Lock()
-        self.swaps_total = 0           # pointer flips, incl. initial adoption
-        self.live_swaps = 0            # flips while already serving a base
         self.requests_total = 0
         self.requests_pinned_across_swaps = 0
-        self.versions_served: Set[int] = set()
-        self.last_swap_latency_s: Optional[float] = None
-        self.last_swap: Optional[Dict[str, Any]] = None
-        self._swap_log: List[int] = []  # flip order, for the property suite
-        self._thread: Optional[threading.Thread] = None
-        self._stop_evt = threading.Event()
-        self.watch_error: Optional[str] = None
-        if repo is not None:
-            self.attach(repo)
+        self.requests_batched = 0      # served as part of a coalesced batch
+        self._inflight = 0             # the router's load signal
+        self._follower = BaseFollower(
+            root, repo=repo, family=family, name=self.name,
+            on_swap_begin=self._on_swap_begin,
+            on_resident=self._on_resident,
+            on_swap=self._on_swap)
+        self.root = self._follower.root
+        self.family = self._follower.family
+        self._scheduler = None
+        if batch_requests:
+            from repro.serve.scheduler import BatchScheduler
+            self._scheduler = BatchScheduler(
+                self._execute_batch, queue_depth=queue_depth,
+                max_batch=max_batch, max_wait_s=batch_wait_s,
+                name=self.name)
+            self._scheduler.start()
+        self._last_persist = 0.0
+        # merged into serve_state() last: a host process (e.g. the pool
+        # child) advertises transport details — port, endpoint id — to
+        # state-file readers like the router's health checks
+        self.extra_state: Dict[str, Any] = {}
 
-    # -- watch sources --------------------------------------------------
-    def attach(self, repo) -> None:
-        """Subscribe to an in-process Repository's publishes (and take an
-        initial snapshot of whatever it currently serves)."""
-        self._repo = repo
-        repo.add_publish_listener(self._on_publish)
-        self._announce = (repo.iteration, repo._base, repo._base_flat)
-
-    def _on_publish(self, iteration: int, base, flat) -> None:
-        # publisher's thread: store-only (one tuple assignment is atomic
-        # under the GIL); the worker thread does the transfer + flip
-        self._announce = (iteration, base, flat)
-
-    def _target(self) -> Optional[Tuple[int, Any]]:
-        """The published version to swap to, or None when current."""
-        cur = self._current
-        if self._repo is not None:
-            ann = self._announce
-            if ann is None:
-                return None
-            it, base, _flat = ann
-            if cur is not None and cur.iteration == int(it):
-                return None
-            return int(it), base
-        try:
-            meta = ckpt.load_json(os.path.join(self.root, "repository.json"))
-        except FileNotFoundError:
-            return None
-        it = int(meta["iteration"])
-        if cur is not None and cur.iteration == it:
-            return None
-        return it, None
-
-    # -- the swap -------------------------------------------------------
-    def poll_once(self) -> bool:
-        """Check for a newer (or rolled-back: *different*) published base
-        and hot-swap onto it.  Returns True when a swap happened."""
-        with self._swap_lock:
-            target = self._target()
-            if target is None:
-                return False
-            self._swap_to(*target)
-            return True
-
-    def _swap_to(self, iteration: int, base) -> None:
-        t0 = time.perf_counter()
-        faults.crash_point("worker.pre_transfer")
-        if base is None:
-            path = os.path.join(self.root, f"base_iter{iteration:04d}.npz")
-            base = ckpt.load(path)
-        # residency barrier: the new tree (lazy unflatten views in-process,
-        # fresh transfers cross-process) must be fully materialized on
-        # device BEFORE the flip — in-flight requests keep decoding against
-        # the current version the whole time (double-buffered weights)
-        _block_until_ready(base)
-        if self._engine is None:
-            self._engine = self._engine_factory(self.cfg, base, self.max_len)
-        faults.crash_point("worker.post_transfer_pre_flip")
-        prev = self._current
-        self._current = BaseVersion(iteration, base)   # the atomic flip
-        faults.crash_point("worker.post_flip")
-        dt = time.perf_counter() - t0
-        with self._stats_lock:
-            self.swaps_total += 1
-            if prev is not None:
-                self.live_swaps += 1
-            self.versions_served.add(iteration)
-            self.last_swap_latency_s = dt
-            self.last_swap = {
-                "from_iteration": None if prev is None else prev.iteration,
-                "to_iteration": iteration,
-                "swap_latency_s": dt,
-            }
-            self._swap_log.append(iteration)
+    # -- follower hooks --------------------------------------------------
+    def _on_swap_begin(self, iteration: int) -> None:
+        # entering a live swap: persist the `swapping` flag so a router
+        # polling the state file can drain this worker mid-swap
         self._persist_state()
+
+    def _on_resident(self, version: BaseVersion) -> None:
+        if self._engine is None:
+            self._engine = self._engine_factory(
+                self.cfg, version.params, self.max_len)
+
+    def _on_swap(self, record: Dict[str, Any], version: BaseVersion,
+                 prev: Optional[BaseVersion]) -> None:
+        self._persist_state()
+        with self._stats_lock:
+            requests_total = self.requests_total
+            pinned = self.requests_pinned_across_swaps
+        # plain append — rotation is the daemon's job (single rotator;
+        # concurrent pool workers only ever O_APPEND here)
         ckpt.append_jsonl(os.path.join(self.root, METRICS_FILE), {
             "t": time.time(), "event": "swap", "worker": self.name,
-            **self.last_swap,
-            "versions_served": len(self.versions_served),
-            "requests_total": self.requests_total,
-            "requests_pinned_across_swaps": self.requests_pinned_across_swaps,
+            **record,
+            "versions_served": len(self._follower.versions_served),
+            "requests_total": requests_total,
+            "requests_pinned_across_swaps": pinned,
         })
 
-    # -- serving --------------------------------------------------------
+    # -- follower delegation ---------------------------------------------
+    def attach(self, repo) -> None:
+        self._follower.attach(repo)
+
+    def poll_once(self) -> bool:
+        return self._follower.poll_once()
+
+    def current(self) -> Optional[BaseVersion]:
+        return self._follower.current()
+
     @property
     def current_iteration(self) -> Optional[int]:
-        cur = self._current
-        return None if cur is None else cur.iteration
+        return self._follower.current_iteration
 
-    def generate(self, prompts: np.ndarray, *, max_new_tokens: int = 16
-                 ) -> ServedGeneration:
+    @property
+    def swapping(self) -> bool:
+        return self._follower.swapping
+
+    @property
+    def swaps_total(self) -> int:
+        return self._follower.swaps_total
+
+    @property
+    def live_swaps(self) -> int:
+        return self._follower.live_swaps
+
+    @property
+    def versions_served(self):
+        return self._follower.versions_served
+
+    @property
+    def last_swap(self) -> Optional[Dict[str, Any]]:
+        return self._follower.last_swap
+
+    @property
+    def last_swap_latency_s(self) -> Optional[float]:
+        return self._follower.last_swap_latency_s
+
+    @property
+    def watch_error(self) -> Optional[str]:
+        return self._follower.watch_error
+
+    @property
+    def _swap_log(self) -> List[int]:
+        return self._follower._swap_log
+
+    # -- serving --------------------------------------------------------
+    def _execute_batch(self, prompts: np.ndarray, max_new_tokens: int,
+                       version: BaseVersion):
+        """The scheduler's executor: one batched engine call against the
+        batch's pinned version."""
+        return self._engine.generate(prompts, max_new_tokens=max_new_tokens,
+                                     params=version.params)
+
+    def generate(self, prompts: np.ndarray, *, max_new_tokens: int = 16,
+                 deadline_s: Optional[float] = None) -> ServedGeneration:
         """Version-pinned generation: the base version is captured ONCE
         here, and every decode step runs against it — a swap (forward or
-        rollback) mid-request cannot tear the output across versions."""
-        version = self._current
+        rollback) mid-request cannot tear the output across versions.
+
+        With batching enabled, single-row prompts are handed to the
+        scheduler (which may coalesce them with other requests pinned to
+        the SAME version); the pinned-version contract is identical.
+        ``deadline_s`` (wall seconds from now) only applies on the
+        scheduler path; a request that cannot start executing in time
+        fails with ``RequestRejected("deadline")``."""
+        version = self._follower.current()
         if version is None:
             raise RuntimeError(
                 "ServingWorker has no base resident yet — call poll_once() "
                 "(or start()) after the repository published")
         t0 = time.perf_counter()
-        res = self._engine.generate(prompts, max_new_tokens=max_new_tokens,
-                                    params=version.params)
+        with self._stats_lock:
+            self._inflight += 1
+        try:
+            batched = (self._scheduler is not None
+                       and prompts.ndim == 2 and prompts.shape[0] == 1)
+            if batched:
+                ticket = self._scheduler.submit(
+                    prompts[0], max_new_tokens=max_new_tokens,
+                    version=version, deadline_s=deadline_s)
+                out = ticket.result()
+                tokens = out.tokens[None, :]
+                steps, prompt_len = out.steps, int(prompts.shape[1])
+                batch_size = out.batch_size
+            else:
+                res = self._engine.generate(
+                    prompts, max_new_tokens=max_new_tokens,
+                    params=version.params)
+                tokens, steps = res.tokens, res.steps
+                prompt_len, batch_size = res.prompt_len, 1
+        finally:
+            with self._stats_lock:
+                self._inflight -= 1
         dt = time.perf_counter() - t0
         with self._stats_lock:
             self.requests_total += 1
-            if self._current is not version:
+            if batched and batch_size > 1:
+                self.requests_batched += 1
+            if self._follower.current() is not version:
                 self.requests_pinned_across_swaps += 1
-        return ServedGeneration(tokens=res.tokens, prompt_len=res.prompt_len,
-                                steps=res.steps, iteration=version.iteration,
-                                latency_s=dt)
+        return ServedGeneration(tokens=tokens, prompt_len=prompt_len,
+                                steps=steps, iteration=version.iteration,
+                                latency_s=dt, batch_size=batch_size)
 
     # -- observability --------------------------------------------------
     def serve_state(self) -> Dict[str, Any]:
-        """The ``serving_state.json`` payload (also embedded by the
+        """The serving-state payload (``serving_state.json`` or the
+        pool-namespaced ``serving_state-<id>.json``; aggregated by the
         daemon's status endpoint as the ``"serving"`` block)."""
+        st = self._follower.swap_stats()
         with self._stats_lock:
-            return {
+            st.update({
                 "worker": self.name,
+                "worker_id": self.worker_id,
                 "family": self.family,
-                "iteration": self.current_iteration,
-                "swaps_total": self.swaps_total,
-                "live_swaps": self.live_swaps,
-                "versions_served": sorted(self.versions_served),
-                "last_swap": (None if self.last_swap is None
-                              else dict(self.last_swap)),
-                "last_swap_latency_s": self.last_swap_latency_s,
                 "requests_total": self.requests_total,
                 "requests_pinned_across_swaps":
                     self.requests_pinned_across_swaps,
-                "watch_error": self.watch_error,
+                "requests_batched": self.requests_batched,
+                "inflight": self._inflight,
                 "pid": os.getpid(),
                 "updated_at": time.time(),
-            }
+            })
+        if self._scheduler is not None:
+            st["scheduler"] = self._scheduler.stats()
+        st.update(self.extra_state)
+        return st
+
+    @property
+    def state_path(self) -> str:
+        return os.path.join(self.root,
+                            serving_state_filename(self.worker_id))
 
     def _persist_state(self) -> None:
-        ckpt.save_json_atomic(
-            os.path.join(self.root, SERVING_STATE_FILE), self.serve_state())
+        ckpt.save_json_atomic(self.state_path, self.serve_state())
+        self._last_persist = time.monotonic()
+
+    def _tick(self) -> None:
+        # heartbeat between swaps (throttled): routers health-check the
+        # state file's updated_at to tell a live-but-idle worker from a
+        # dead one
+        if time.monotonic() - self._last_persist >= 0.25:
+            self._persist_state()
 
     # -- watch thread ---------------------------------------------------
     def start(self, *, interval: float = 0.05) -> None:
-        """Run the watch loop on a daemon thread: poll/receive publishes
-        and hot-swap until ``stop``.  Swap errors are recorded (and the
-        current version keeps serving) rather than killing the loop."""
-        if self._thread is not None:
-            raise RuntimeError("worker already started")
-        self._stop_evt.clear()
-
-        def loop():
-            while not self._stop_evt.is_set():
-                try:
-                    self.poll_once()
-                except Exception as err:  # noqa: BLE001 - keep serving
-                    self.watch_error = f"{type(err).__name__}: {err}"
-                self._stop_evt.wait(interval)
-
-        self._thread = threading.Thread(
-            target=loop, name=f"serving-{self.name}", daemon=True)
-        self._thread.start()
+        """Run the follower's watch loop on a daemon thread: poll/receive
+        publishes and hot-swap until ``stop``.  Swap errors are recorded
+        (and the current version keeps serving) rather than killing the
+        loop."""
+        self._follower.start(interval=interval, on_tick=self._tick)
 
     def stop(self) -> Dict[str, Any]:
-        """Stop the watch thread and persist a final serving state."""
-        if self._thread is not None:
-            self._stop_evt.set()
-            self._thread.join(timeout=30.0)
-            self._thread = None
+        """Stop the watch thread (and scheduler) and persist a final
+        serving state."""
+        self._follower.stop()
+        if self._scheduler is not None:
+            self._scheduler.stop()
         self._persist_state()
         return self.serve_state()

@@ -1,0 +1,224 @@
+"""Least-loaded router over a pool of serving workers.
+
+The router is the single entry point in front of N ``ServingWorker``s
+(docs/serving.md).  It speaks to workers through the small
+``WorkerEndpoint`` interface — ``LocalEndpoint`` wraps an in-process
+worker (tests, single-process benches), ``repro.serve.worker_pool``
+provides the cross-process socket endpoint — and applies three policies:
+
+* **least-loaded dispatch** — the router tracks its OWN per-endpoint
+  in-flight count (it is the single dispatcher, so its view is exact and
+  never stale, unlike the state-file heartbeat) and picks the live
+  endpoint with the fewest outstanding requests.
+* **drain on swap** — an endpoint whose health snapshot says
+  ``swapping`` is deprioritized (a large load penalty, not exclusion:
+  if every worker is mid-swap, requests still go somewhere) so new work
+  flows around a worker busy transferring the next base.
+* **exactly-once re-route** — a request that fails in flight because its
+  worker died (kill -9 included: the connection drops or resets) is
+  re-dispatched to a different live endpoint AT MOST once
+  (``max_reroutes``), and the dead endpoint is marked down until its
+  health probe recovers (a restarted worker re-registers by heartbeating
+  its state file).  A second transport failure surfaces to the caller —
+  unbounded retries could duplicate arbitrarily much work.  A
+  ``queue_full`` shed from an overloaded worker fails over under the
+  same single-retry budget; a second shed means the POOL is saturated
+  and the caller must see it.
+
+Version pinning is per worker and unchanged by routing: each response
+carries the iteration its worker pinned at execution start.  The router
+never mixes workers within one request, so the one-base-per-response
+guarantee proven for a single worker holds across the pool.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.serve.scheduler import RequestRejected
+
+__all__ = ["EndpointDied", "LocalEndpoint", "RoutedResult", "Router"]
+
+# a swapping worker counts as this many extra in-flight requests when
+# the router compares loads (drain, don't exclude)
+SWAP_DRAIN_PENALTY = 1_000
+# a health snapshot older than this is stale: the worker is presumed
+# dead until it heartbeats again (the worker heartbeats every ~0.25s)
+HEALTH_STALE_S = 5.0
+
+
+class EndpointDied(RuntimeError):
+    """Transport-level failure: the worker behind the endpoint is gone
+    (connection refused/reset mid-request).  Distinct from an explicit
+    ``RequestRejected``, which is the worker *alive and shedding*."""
+
+
+class RoutedResult:
+    """One routed generation: the worker's response plus routing info."""
+
+    __slots__ = ("tokens", "iteration", "steps", "batch_size", "latency_s",
+                 "worker_id", "rerouted")
+
+    def __init__(self, *, tokens: np.ndarray, iteration: int, steps: int,
+                 batch_size: int, latency_s: float, worker_id: str,
+                 rerouted: bool):
+        self.tokens = tokens
+        self.iteration = int(iteration)
+        self.steps = int(steps)
+        self.batch_size = int(batch_size)
+        self.latency_s = float(latency_s)
+        self.worker_id = str(worker_id)
+        self.rerouted = bool(rerouted)
+
+
+class LocalEndpoint:
+    """An in-process ``ServingWorker`` as a routable endpoint (tests and
+    single-process benches; the socket endpoint lives in worker_pool)."""
+
+    def __init__(self, worker, endpoint_id: Optional[str] = None):
+        self.worker = worker
+        self.id = str(endpoint_id or worker.worker_id or worker.name)
+
+    def health(self) -> Optional[Dict[str, Any]]:
+        return self.worker.serve_state()
+
+    def generate(self, prompt: np.ndarray, *, max_new_tokens: int,
+                 deadline_s: Optional[float] = None) -> Dict[str, Any]:
+        res = self.worker.generate(np.asarray(prompt)[None, :],
+                                   max_new_tokens=max_new_tokens,
+                                   deadline_s=deadline_s)
+        return {"tokens": np.asarray(res.tokens)[0],
+                "iteration": res.iteration, "steps": res.steps,
+                "batch_size": res.batch_size, "latency_s": res.latency_s}
+
+
+class Router:
+    """Dispatch requests across endpoints; survive worker death.
+
+    ``route`` is thread-safe (N client threads share one router).  An
+    endpoint marked dead is probed again lazily: every ``route`` call
+    re-admits endpoints whose health snapshot became fresh again.
+    """
+
+    def __init__(self, endpoints: List[Any], *, max_reroutes: int = 1):
+        if not endpoints:
+            raise ValueError("router needs at least one endpoint")
+        self.endpoints = list(endpoints)
+        self.max_reroutes = int(max_reroutes)
+        self._lock = threading.Lock()
+        self._rr = 0   # rotating tie-break so equal loads round-robin
+        self._inflight: Dict[str, int] = {e.id: 0 for e in self.endpoints}
+        self._dead: Dict[str, bool] = {e.id: False for e in self.endpoints}
+        self.routed_total = 0
+        self.reroutes_total = 0
+        self.failed_total = 0
+        self.shed_total = 0            # queue_full surfaced to the caller
+        self.per_worker: Dict[str, int] = {e.id: 0 for e in self.endpoints}
+
+    # -- health / selection ---------------------------------------------
+    def _probe(self, ep) -> Optional[Dict[str, Any]]:
+        try:
+            h = ep.health()
+        except Exception:  # noqa: BLE001 - unreadable health = dead
+            return None
+        if h is None:
+            return None
+        updated = h.get("updated_at")
+        if updated is not None and time.time() - float(updated) > HEALTH_STALE_S:
+            return None
+        return h
+
+    def _pick(self, exclude: set) -> Optional[Any]:
+        """The least-loaded live endpoint (drain penalty for swapping
+        workers), or None when every candidate is dead/excluded."""
+        best, best_load = None, None
+        with self._lock:
+            inflight = dict(self._inflight)
+            dead = dict(self._dead)
+            self._rr += 1
+            offset = self._rr
+        n = len(self.endpoints)
+        for ep in (self.endpoints[(offset + i) % n] for i in range(n)):
+            if ep.id in exclude:
+                continue
+            h = self._probe(ep)
+            if h is None:
+                with self._lock:
+                    self._dead[ep.id] = True
+                continue
+            if dead.get(ep.id):
+                # fresh health from a previously-dead endpoint: a
+                # restarted worker re-admits itself via its heartbeat
+                with self._lock:
+                    self._dead[ep.id] = False
+            load = inflight.get(ep.id, 0)
+            if h.get("swapping"):
+                load += SWAP_DRAIN_PENALTY
+            if best_load is None or load < best_load:
+                best, best_load = ep, load
+        return best
+
+    # -- dispatch --------------------------------------------------------
+    def route(self, prompt: np.ndarray, *, max_new_tokens: int = 16,
+              deadline_s: Optional[float] = None) -> RoutedResult:
+        """Dispatch one single-row request; re-route at most
+        ``max_reroutes`` times on worker death or shed."""
+        prompt = np.asarray(prompt)
+        tried: set = set()
+        attempts = 0
+        last_err: Optional[BaseException] = None
+        while attempts <= self.max_reroutes:
+            ep = self._pick(tried)
+            if ep is None:
+                break
+            tried.add(ep.id)
+            with self._lock:
+                self._inflight[ep.id] = self._inflight.get(ep.id, 0) + 1
+            try:
+                out = ep.generate(prompt, max_new_tokens=max_new_tokens,
+                                  deadline_s=deadline_s)
+            except (EndpointDied, RequestRejected) as err:
+                last_err = err
+                if isinstance(err, EndpointDied):
+                    with self._lock:
+                        self._dead[ep.id] = True
+                attempts += 1
+                continue
+            finally:
+                with self._lock:
+                    self._inflight[ep.id] -= 1
+            with self._lock:
+                self.routed_total += 1
+                self.per_worker[ep.id] = self.per_worker.get(ep.id, 0) + 1
+                if attempts > 0:
+                    self.reroutes_total += 1
+            return RoutedResult(
+                tokens=np.asarray(out["tokens"]),
+                iteration=out["iteration"], steps=out["steps"],
+                batch_size=out.get("batch_size", 1),
+                latency_s=out.get("latency_s", 0.0),
+                worker_id=ep.id, rerouted=attempts > 0)
+        with self._lock:
+            self.failed_total += 1
+            if isinstance(last_err, RequestRejected):
+                self.shed_total += 1
+        if last_err is not None:
+            raise last_err
+        raise EndpointDied("no live endpoint to route to")
+
+    # -- observability ---------------------------------------------------
+    def stats(self) -> Dict[str, Any]:
+        with self._lock:
+            return {
+                "endpoints": [e.id for e in self.endpoints],
+                "dead": sorted(k for k, v in self._dead.items() if v),
+                "inflight": dict(self._inflight),
+                "routed_total": self.routed_total,
+                "reroutes_total": self.reroutes_total,
+                "failed_total": self.failed_total,
+                "shed_total": self.shed_total,
+                "per_worker": dict(self.per_worker),
+            }

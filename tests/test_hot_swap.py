@@ -18,7 +18,7 @@ from _faults import SWAP_SEAMS, run_child, wait_until
 from _hypothesis_compat import given, settings, st
 from repro.checkpoint import io as ckpt
 from repro.core.repository import Repository
-from repro.serve import hot_swap
+from repro.serve import base_follower
 from repro.serve.cold_service import (METRICS_FILE, SERVING_STATE_FILE,
                                       AdmissionPolicy, ColdService)
 from repro.serve.hot_swap import ServingWorker
@@ -87,9 +87,9 @@ def test_pointer_flips_only_after_residency(tmp_path, monkeypatch):
     w = ServingWorker(None, str(tmp_path), repo=repo, engine_factory=_fake)
     assert w.poll_once() and w.current_iteration == 0
     at_barrier = []
-    real = hot_swap._block_until_ready
+    real = base_follower._block_until_ready
     monkeypatch.setattr(
-        hot_swap, "_block_until_ready",
+        base_follower, "_block_until_ready",
         lambda tree: (at_barrier.append(w.current_iteration), real(tree))[1])
     _publish(repo, 7.0)
     assert w.poll_once()

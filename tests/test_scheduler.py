@@ -1,0 +1,205 @@
+"""BatchScheduler units (repro/serve/scheduler.py, docs/serving.md):
+coalescing with bucket padding, same-pinned-version-only batches,
+bounded-queue shedding, deadlines, FIFO-head fairness under mixed
+request shapes, executor-error isolation, and drain-on-stop."""
+import threading
+import time
+import types
+
+import numpy as np
+import pytest
+
+from repro.serve.scheduler import (BatchScheduler, RequestRejected,
+                                   batch_bucket)
+
+V = object()   # a pinned BaseVersion stand-in (identity is what matters)
+
+
+class _Exec:
+    """Records every executed batch; output rows echo the prompt's first
+    token so a row-slicing bug hands one request another's tokens.  An
+    optional gate blocks mid-call to model an in-flight batch."""
+
+    def __init__(self):
+        self.calls = []
+        self.gate = None
+
+    def __call__(self, prompts, max_new_tokens, version):
+        if self.gate is not None:
+            self.gate["started"].set()
+            assert self.gate["release"].wait(10.0), "gate never released"
+        self.calls.append((np.array(prompts), max_new_tokens, version))
+        toks = np.concatenate(
+            [prompts, np.repeat(prompts[:, :1], max_new_tokens, axis=1)],
+            axis=1)
+        return types.SimpleNamespace(tokens=toks, steps=max_new_tokens)
+
+
+def _sched(ex, **kw):
+    kw.setdefault("max_wait_s", 0.05)
+    return BatchScheduler(ex, **kw)
+
+
+def _row(val, t=4):
+    return np.full((t,), val, np.int32)
+
+
+def test_batch_bucket_quantization():
+    assert [batch_bucket(n) for n in (1, 2, 3, 4, 5, 8)] == [1, 2, 4, 4,
+                                                            8, 8]
+    # beyond the largest bucket: the exact size (cold jit beats refusal)
+    assert batch_bucket(9) == 9
+    assert batch_bucket(3, (2, 16)) == 16
+
+
+def test_coalesces_compatible_requests_with_bucket_padding():
+    ex = _Exec()
+    s = _sched(ex)
+    # enqueue before the loop starts: deterministic one-batch formation
+    tickets = [s.submit(_row(i), max_new_tokens=3, version=V)
+               for i in range(3)]
+    s.start()
+    results = [t.result(timeout=10.0) for t in tickets]
+    s.stop()
+    assert len(ex.calls) == 1, "compatible requests did not share a call"
+    prompts, _, version = ex.calls[0]
+    assert prompts.shape == (4, 4) and version is V   # 3 -> bucket 4
+    # B is padded by repeating the last row; outputs slice back per request
+    assert np.array_equal(prompts[3], prompts[2])
+    for i, r in enumerate(results):
+        assert int(r.tokens[-1]) == i, "request got a neighbor's row"
+        assert r.batch_size == 4 and r.coalesced == 3 and r.steps == 3
+        assert r.queued_s >= 0.0
+    st = s.stats()
+    assert st["batches"] == 1 and st["completed"] == 3
+    assert st["coalesced_requests"] == 3
+
+
+def test_never_coalesces_across_pinned_versions():
+    """Same [T] and max_new_tokens but a different pinned version object
+    (e.g. a swap landed between submits) must split the batch — one base
+    per engine call is the pinning contract."""
+    ex = _Exec()
+    s = _sched(ex)
+    v1, v2 = object(), object()
+    t1 = s.submit(_row(1), max_new_tokens=2, version=v1)
+    t2 = s.submit(_row(2), max_new_tokens=2, version=v2)
+    s.start()
+    r1, r2 = t1.result(10.0), t2.result(10.0)
+    s.stop()
+    assert len(ex.calls) == 2
+    assert r1.coalesced == 1 and r2.coalesced == 1
+    assert ex.calls[0][2] is v1 and ex.calls[1][2] is v2
+
+
+def test_fifo_head_fairness_mixed_shapes():
+    """Every batch is built around the OLDEST waiting request: an
+    odd-shaped head executes FIRST even with a popular-shaped stream
+    queued behind it — no shape can starve another."""
+    ex = _Exec()
+    s = _sched(ex)
+    odd = s.submit(_row(9, t=7), max_new_tokens=2, version=V)
+    pop = [s.submit(_row(i), max_new_tokens=2, version=V)
+           for i in range(3)]
+    s.start()
+    odd.result(10.0)
+    for t in pop:
+        t.result(10.0)
+    s.stop()
+    # head first and alone (nothing shares its shape), then the rest
+    assert [c[0].shape for c in ex.calls] == [(1, 7), (4, 4)]
+
+
+def test_mismatched_max_new_tokens_never_coalesce():
+    ex = _Exec()
+    s = _sched(ex)
+    t1 = s.submit(_row(1), max_new_tokens=2, version=V)
+    t2 = s.submit(_row(2), max_new_tokens=5, version=V)
+    s.start()
+    assert t1.result(10.0).steps == 2
+    assert t2.result(10.0).steps == 5
+    s.stop()
+    assert len(ex.calls) == 2
+
+
+def test_bounded_queue_sheds_explicitly():
+    ex = _Exec()
+    s = _sched(ex, queue_depth=2)
+    t1 = s.submit(_row(0), max_new_tokens=1, version=V)
+    t2 = s.submit(_row(1), max_new_tokens=1, version=V)
+    with pytest.raises(RequestRejected, match="queue_full") as ei:
+        s.submit(_row(2), max_new_tokens=1, version=V)
+    assert ei.value.reason == "queue_full"
+    assert s.stats()["rejected_queue_full"] == 1
+    s.start()
+    s.stop()   # drain: the two admitted requests still execute
+    assert t1.result(1.0) and t2.result(1.0)
+    assert s.stats()["completed"] == 2
+
+
+def test_deadline_expires_before_execution():
+    ex = _Exec()
+    s = _sched(ex)
+    t = s.submit(_row(0), max_new_tokens=1, version=V, deadline_s=0.01)
+    time.sleep(0.05)
+    s.start()
+    with pytest.raises(RequestRejected, match="deadline") as ei:
+        t.result(10.0)
+    assert ei.value.reason == "deadline"
+    s.stop()
+    assert s.stats()["rejected_deadline"] == 1
+    assert not ex.calls, "an expired request anchored a batch"
+
+
+def test_executor_error_fails_batch_not_loop():
+    calls = []
+
+    def ex(prompts, max_new_tokens, version):
+        calls.append(prompts.shape)
+        if len(calls) == 1:
+            raise RuntimeError("boom")
+        toks = np.concatenate([prompts, prompts[:, :1]], axis=1)
+        return types.SimpleNamespace(tokens=toks, steps=1)
+
+    s = BatchScheduler(ex, max_wait_s=0.01)
+    s.start()
+    t1 = s.submit(_row(0), max_new_tokens=1, version=V)
+    with pytest.raises(RuntimeError, match="boom"):
+        t1.result(10.0)
+    # the loop survived: the next request executes normally
+    t2 = s.submit(_row(1), max_new_tokens=1, version=V)
+    assert t2.result(10.0).steps == 1
+    s.stop()
+
+
+def test_stop_drains_queue_then_sheds_new_submits():
+    ex = _Exec()
+    s = _sched(ex)
+    tickets = [s.submit(_row(i), max_new_tokens=1, version=V)
+               for i in range(5)]
+    s.start()
+    s.stop()
+    for i, t in enumerate(tickets):
+        assert int(t.result(1.0).tokens[-1]) == i
+    with pytest.raises(RequestRejected, match="stopped"):
+        s.submit(_row(0), max_new_tokens=1, version=V)
+    assert s.stats()["completed"] == 5
+
+
+def test_coalesces_late_arrivals_under_concurrent_load():
+    """Requests submitted while an earlier batch is in flight coalesce
+    into the NEXT batch (the live-load path, not the pre-start queue)."""
+    ex = _Exec()
+    ex.gate = {"started": threading.Event(), "release": threading.Event()}
+    s = _sched(ex, max_wait_s=0.02)
+    first = s.submit(_row(0), max_new_tokens=1, version=V)
+    s.start()
+    assert ex.gate["started"].wait(10.0)   # batch 1 is executing
+    late = [s.submit(_row(i), max_new_tokens=1, version=V) for i in (1, 2)]
+    ex.gate["release"].set()
+    assert int(first.result(10.0).tokens[-1]) == 0
+    results = [t.result(10.0) for t in late]
+    s.stop()
+    assert ex.calls[1][0].shape == (2, 4)
+    assert all(r.coalesced == 2 for r in results)
+    assert [int(r.tokens[-1]) for r in results] == [1, 2]
